@@ -1,0 +1,27 @@
+"""Shared benchmark utilities: timing + the `name,us_per_call,derived`
+CSV contract."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+ROWS: List[Tuple[str, float, str]] = []
+
+
+def record(name: str, us_per_call: float, derived: str) -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def timed(name: str):
+    """Decorator: runs the benchmark, records wall time + derived str."""
+    def deco(fn: Callable[[], str]):
+        def run():
+            t0 = time.perf_counter()
+            derived = fn()
+            us = (time.perf_counter() - t0) * 1e6
+            record(name, us, derived)
+            return derived
+        run.__name__ = name
+        return run
+    return deco

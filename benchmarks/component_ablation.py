@@ -1,0 +1,46 @@
+"""Beyond-paper ablation: which CoLLM component buys what?
+
+Four system variants on the same trace:
+  full        states + launcher/FL + coordinator + subflow dispatcher
+  no-ft       subflow dispatcher only (enable_finetuning=False) — isolates
+              the serving-side contribution (pacing + SLO-aware batching)
+  rr          round-robin baseline (no CoLLM component at all)
+  no-ft vs full quality delta isolates the model-sharing contribution.
+
+Run separately from benchmarks.run when BENCH_ABLATION=1 (it adds ~4
+simulator runs); included in run.py by default since it is quick at the
+reduced horizon.
+"""
+import numpy as np
+
+from benchmarks.common import record
+from repro.runtime.experiment import ExperimentConfig, run_experiment
+
+
+def run() -> str:
+    import time
+    t0 = time.perf_counter()
+    outs = {}
+    for name, policy, ft in [("full", "collm", True),
+                             ("no-ft", "collm", False),
+                             ("rr", "rr", False)]:
+        out = run_experiment(ExperimentConfig(
+            policy=policy, n_replicas=8, duration=900.0, scale=2.0,
+            seed=11, enable_finetuning=ft))
+        outs[name] = out
+    full, noft, rr = outs["full"], outs["no-ft"], outs["rr"]
+    derived = (
+        f"serving-side (no-ft vs rr): goodput "
+        f"{noft['goodput_tok_s'] / max(rr['goodput_tok_s'], 1):.2f}x "
+        f"slo {noft['slo_rate']:.2f} vs {rr['slo_rate']:.2f} | "
+        f"model-sharing (full vs no-ft): quality "
+        f"{full['mean_quality'] / max(noft['mean_quality'], 1e-9):.2f}x "
+        f"qgoodput {full['q_goodput'] / max(noft['q_goodput'], 1):.2f}x | "
+        f"util full={full['mean_util']:.2f} no-ft={noft['mean_util']:.2f}")
+    record("ablation_components", (time.perf_counter() - t0) * 1e6,
+           derived)
+    return derived
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,46 @@
+"""Fig. 10 — goodput + Q-goodput vs baselines at 1-4x workload scales
+on the merged Azure-like trace (16 replicas in the paper; configurable
+for bench-runtime reasons)."""
+import os
+
+from benchmarks.common import record, timed
+from repro.runtime.experiment import ExperimentConfig, run_experiment
+
+QUICK = os.environ.get("BENCH_QUICK", "0") == "1"
+SCALES = (1.0, 3.0) if QUICK else (1.0, 2.0, 3.0, 4.0)
+POLICIES = ("collm", "dlora", "shepherd", "peft")
+DURATION = 900.0 if QUICK else 1800.0
+N_REPLICAS = 8
+
+
+def run() -> str:
+    import time
+    results = {}
+    for policy in POLICIES:
+        for scale in SCALES:
+            t0 = time.perf_counter()
+            out = run_experiment(ExperimentConfig(
+                policy=policy, n_replicas=N_REPLICAS, duration=DURATION,
+                scale=scale, seed=0))
+            us = (time.perf_counter() - t0) * 1e6
+            results[(policy, scale)] = out
+            record(f"fig10_{policy}_x{scale:g}", us,
+                   f"goodput={out['goodput_tok_s']:.0f}tok/s "
+                   f"qgoodput={out['q_goodput']:.0f} "
+                   f"slo={out['slo_rate']:.3f} util={out['mean_util']:.3f}")
+    # headline ratios at the largest scale
+    top = max(SCALES)
+    c = results[("collm", top)]
+    lines = []
+    for p in POLICIES[1:]:
+        b = results[(p, top)]
+        lines.append(f"vs {p}@x{top:g}: goodput "
+                     f"{c['goodput_tok_s'] / max(b['goodput_tok_s'], 1):.2f}x"
+                     f" qgoodput {c['q_goodput'] / max(b['q_goodput'], 1):.2f}x")
+    derived = " | ".join(lines)
+    record("fig10_headline", 0.0, derived)
+    return derived
+
+
+if __name__ == "__main__":
+    run()

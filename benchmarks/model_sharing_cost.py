@@ -1,0 +1,42 @@
+"""Fig. 2 — separate-loading vs model-sharing cost, analytically from
+the configs: replica load time (HBM fill over PCIe/DCN) and run-time
+memory for concurrent fine-tuning + inference.
+
+Separate loading deploys a second full model instance for training;
+CoLLM's sharing loads the base once and adds only LoRA params, grads,
+and optimizer state (plus shared activations).
+"""
+from benchmarks.common import timed
+from repro.configs.registry import get_config
+
+PCIE_BW = 16e9   # bytes/s host->device staging
+
+
+def _bytes(cfg, dtype_bytes=2):
+    base = cfg.param_count() * dtype_bytes
+    lora = cfg.lora_param_count() * 4          # f32 adapters
+    opt = cfg.lora_param_count() * 8           # adam m+v in f32
+    return base, lora, opt
+
+
+@timed("fig2_model_sharing_cost")
+def run() -> str:
+    parts = []
+    for arch in ["qwen1.5-0.5b", "llama3-8b", "qwen3-14b"]:
+        cfg = get_config(arch)
+        base, lora, opt = _bytes(cfg)
+        sep_mem = 2 * base + lora + opt        # two full instances
+        shared_mem = base + lora + opt         # one shared instance
+        sep_load = 2 * base / PCIE_BW
+        shared_load = (base + lora) / PCIE_BW
+        extra_lat = (sep_load - shared_load) / shared_load * 100
+        extra_mem = (sep_mem - shared_mem) / shared_mem * 100
+        parts.append(
+            f"{arch}: separate +{sep_load - shared_load:.1f}s load "
+            f"(+{extra_lat:.0f}%) +{(sep_mem - shared_mem) / 2**30:.1f}GiB "
+            f"(+{extra_mem:.0f}%)")
+    return " | ".join(parts)
+
+
+if __name__ == "__main__":
+    run()

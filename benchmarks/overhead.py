@@ -1,0 +1,37 @@
+"""Fig. 14 — CoLLM control-plane overhead + compute-time breakdown
+(inference / fine-tuning / overhead) across workload scales.  Paper:
+overhead <2% average, never >5%; fine-tuning share shrinks as load
+rises (~30% at 1x, ~0 under saturation)."""
+import os
+
+from benchmarks.common import record
+from repro.runtime.experiment import ExperimentConfig, run_experiment
+
+QUICK = os.environ.get("BENCH_QUICK", "0") == "1"
+SCALES = (1.0, 3.0) if QUICK else (1.0, 2.0, 3.0, 4.0)
+
+
+def run() -> str:
+    import time
+    parts = []
+    worst = 0.0
+    for scale in SCALES:
+        t0 = time.perf_counter()
+        out = run_experiment(ExperimentConfig(
+            policy="collm", n_replicas=8,
+            duration=900.0 if QUICK else 1800.0, scale=scale, seed=0))
+        us = (time.perf_counter() - t0) * 1e6
+        worst = max(worst, out["overhead_frac"])
+        record(f"fig14_overhead_x{scale:g}", us,
+               f"overhead={out['overhead_frac'] * 100:.2f}% "
+               f"train_share={out['train_frac'] * 100:.1f}% "
+               f"infer_share={(1 - out['train_frac']) * 100:.1f}%")
+        parts.append(f"x{scale:g}: ov={out['overhead_frac'] * 100:.2f}% "
+                     f"train={out['train_frac'] * 100:.0f}%")
+    derived = " | ".join(parts) + f" | worst_overhead={worst * 100:.2f}%"
+    record("fig14_headline", 0.0, derived)
+    return derived
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,66 @@
+"""Roofline table (deliverable g): reads the dry-run JSON records from
+results/dryrun/ and emits the per-(arch × shape × mesh) three-term
+table — compute / memory / collective seconds, dominant bottleneck,
+MODEL_FLOPS ratio — consumed verbatim by EXPERIMENTS.md §Roofline."""
+import glob
+import json
+import os
+
+from benchmarks.common import record
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "dryrun")
+
+
+def load_records(mesh: str = "16x16", tag: str = ""):
+    out = []
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("mesh") != mesh:
+            continue
+        if (rec.get("tag") or "") != tag:
+            continue
+        out.append(rec)
+    return out
+
+
+def fmt_table(records) -> str:
+    header = (f"{'arch':22s} {'shape':12s} {'comp_ms':>9s} {'mem_ms':>10s} "
+              f"{'coll_ms':>9s} {'bound':>10s} {'GiB/dev':>8s} "
+              f"{'useful':>7s}")
+    lines = [header]
+    for r in sorted(records, key=lambda x: (x["arch"], x["shape"])):
+        rl = r["roofline"]
+        peak = r["memory"]["peak_device_bytes"] / 2 ** 30
+        lines.append(
+            f"{r['arch']:22s} {r['shape']:12s} "
+            f"{rl['compute_s'] * 1e3:9.2f} {rl['memory_s'] * 1e3:10.2f} "
+            f"{rl['collective_s'] * 1e3:9.2f} {rl['dominant']:>10s} "
+            f"{peak:8.2f} {r.get('useful_flops_ratio', 0):7.3f}")
+    return "\n".join(lines)
+
+
+def run() -> str:
+    import time
+    t0 = time.perf_counter()
+    recs = load_records("16x16")
+    if not recs:
+        derived = "no dry-run records yet (run repro.launch.dryrun --all)"
+        record("roofline_table", 0.0, derived)
+        return derived
+    print(fmt_table(recs))
+    bounds = {}
+    for r in recs:
+        bounds[r["roofline"]["dominant"]] = \
+            bounds.get(r["roofline"]["dominant"], 0) + 1
+    mp = load_records("2x16x16")
+    derived = (f"cells={len(recs)} bounds={bounds} "
+               f"multi_pod_cells={len(mp)} "
+               f"max_mem_gib={max(r['memory']['peak_device_bytes'] for r in recs) / 2**30:.1f}")
+    record("roofline_table", (time.perf_counter() - t0) * 1e6, derived)
+    return derived
+
+
+if __name__ == "__main__":
+    run()

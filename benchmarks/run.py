@@ -1,0 +1,35 @@
+"""Benchmark entry point: one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.py).
+
+Set BENCH_QUICK=1 for shortened simulator horizons.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        component_ablation, coordinator_ablation, dispatcher_stability,
+        end_to_end_goodput, latency_model_fit, model_sharing_cost,
+        overhead, quality_sharing, roofline, trace_stats, utilization,
+    )
+    print("name,us_per_call,derived")
+    failures = []
+    for mod in (trace_stats, model_sharing_cost, latency_model_fit,
+                quality_sharing, dispatcher_stability, coordinator_ablation,
+                end_to_end_goodput, utilization, overhead,
+                component_ablation, roofline):
+        try:
+            mod.run()
+        except Exception as e:
+            failures.append((mod.__name__, repr(e)))
+            traceback.print_exc()
+    if failures:
+        print("FAILURES:", failures)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

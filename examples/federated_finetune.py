@@ -1,0 +1,78 @@
+"""Federated LoRA fine-tuning across live replicas with heterogeneous
+data (paper §4.2): FedAvg rounds over adapters, quality scores, early
+stopping — on real JAX models, no simulator.
+
+  PYTHONPATH=src python examples/federated_finetune.py --rounds 6
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.core.engine import make_engine
+from repro.core.federated import FederatedSession, FLRoundResult
+from repro.data.synthetic import SyntheticDataset, DOMAINS
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=6)
+    ap.add_argument("--clients", type=int, default=3)
+    ap.add_argument("--local-steps", type=int, default=15)
+    args = ap.parse_args()
+
+    cfg = get_config("qwen1.5-0.5b").scaled()
+    engine = make_engine(cfg, lr=5e-3)
+    model = engine.model
+    params = model.init(jax.random.key(0))
+    global_adapter = model.init_lora(jax.random.key(1))
+    # no donation: every client starts local training from the SAME
+    # broadcast global adapter (donating would free it after client 0)
+    jit_train = jax.jit(engine.train_step)
+    jit_eval = jax.jit(lambda p, l, b: model.forward_loss(p, l, b)[0])
+
+    clients = {}
+    for i in range(args.clients):
+        domain = DOMAINS[i % len(DOMAINS)]
+        clients[f"r{i}"] = SyntheticDataset(
+            domain, vocab_size=cfg.vocab_size, seq_len=32, seed=i)
+        print(f"r{i}: local data domain = {domain}")
+
+    held = {rid: {k: jnp.asarray(v) for k, v in ds.batch(8).items()}
+            for rid, ds in clients.items()}
+    sess = FederatedSession("qwen", list(clients), server="r0",
+                            global_adapter=global_adapter)
+
+    for rnd in range(args.rounds):
+        results = []
+        for rid, ds in clients.items():
+            if rid not in sess.members:
+                continue
+            lora = sess.global_adapter            # broadcast (Eq. 5 in)
+            opt = engine.optimizer.init(lora)
+            loss = None
+            for _ in range(args.local_steps):     # local training
+                batch = {k: jnp.asarray(v) for k, v in ds.batch(8).items()}
+                lora, opt, m = jit_train(params, lora, opt, batch)
+                loss = float(m["ce_loss"])
+            results.append(FLRoundResult(rid, lora, loss,
+                                         samples=8 * args.local_steps))
+        sess.aggregate(results)                    # FedAvg (Eq. 5)
+        stopped = sess.early_stops(results)
+        # cross-domain generalization of the aggregated adapter
+        cross = np.mean([float(jit_eval(params, sess.global_adapter, b))
+                         for b in held.values()])
+        print(f"round {rnd}: avg_local_loss="
+              f"{np.mean([r.local_loss for r in results]):.4f} "
+              f"cross_domain_ce={cross:.4f} "
+              f"quality={ {k: round(v, 2) for k, v in sess.quality.items()} }"
+              + (f" early-stopped: {stopped}" if stopped else ""))
+        if not sess.alive:
+            print("cohort dissolved (early stopping)")
+            break
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.checkpoint.checkpointer import Checkpointer, config_hash  # noqa: F401

@@ -1,0 +1,4 @@
+from repro.configs.base import (  # noqa: F401
+    ALL_SHAPES, DECODE_32K, Family, LONG_500K, LoRAConfig, ModelConfig,
+    PREFILL_32K, ShapeCell, TRAIN_4K, applicable_shapes,
+)

@@ -1,0 +1,38 @@
+"""Architecture registry: ``--arch <id>`` resolution for every launcher."""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs.base import ModelConfig
+from repro.configs import (
+    mamba2_780m, hubert_xlarge, qwen3_14b, qwen1_5_0_5b, internlm2_1_8b,
+    llama3_8b, hymba_1_5b, moonshot_v1_16b_a3b, grok1_314b,
+    llama3_2_vision_90b,
+)
+
+_REGISTRY: Dict[str, ModelConfig] = {
+    "mamba2-780m": mamba2_780m.CONFIG,
+    "hubert-xlarge": hubert_xlarge.CONFIG,
+    "qwen3-14b": qwen3_14b.CONFIG,
+    "qwen1.5-0.5b": qwen1_5_0_5b.CONFIG,
+    "internlm2-1.8b": internlm2_1_8b.CONFIG,
+    "llama3-8b": llama3_8b.CONFIG,
+    "hymba-1.5b": hymba_1_5b.CONFIG,
+    "moonshot-v1-16b-a3b": moonshot_v1_16b_a3b.CONFIG,
+    "grok-1-314b": grok1_314b.CONFIG,
+    "llama-3.2-vision-90b": llama3_2_vision_90b.CONFIG,
+}
+
+ARCH_IDS = tuple(_REGISTRY)
+
+
+def get_config(arch: str) -> ModelConfig:
+    try:
+        return _REGISTRY[arch]
+    except KeyError:
+        raise KeyError(
+            f"unknown arch {arch!r}; available: {', '.join(ARCH_IDS)}")
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return dict(_REGISTRY)

@@ -1,0 +1,16 @@
+"""CoLLM core: the paper's contribution.
+
+  states        replica state machine (SERVING/IDLE/COMBINED, Eq. 1-4)
+  launcher      Fine-tune Task Launcher + FL PEFT sessions (§4)
+  coordinator   Inference-Training Coordinator (§5, Eq. 7-12)
+  dispatcher    subflow-based request dispatcher (§6, Eq. 14-19)
+  federated     LoRA FedAvg + quality scores + early stopping (§4.2-4.3)
+  latency_model uni/bivariate interference-aware latency models (§2.2)
+  goodput       Pollux-extended training goodput (§5.1)
+  engine        fused combined_step — model sharing as one XLA program
+  cluster       controller wiring everything (Fig. 6)
+"""
+from repro.core.interfaces import (  # noqa: F401
+    BatchResult, ReplicaHandle, Request, TrainRoundStats,
+)
+from repro.core.states import ClusterStateManager, ReplicaState, StatePolicy  # noqa: F401

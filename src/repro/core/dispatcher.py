@@ -1,0 +1,285 @@
+"""Subflow-based Request Dispatcher (paper §6).
+
+Transforms the bursty arrival stream into per-replica *subflows*, each
+pacing batched requests at the replica's Ideal Serving Mode (§2.3:
+t(b*) = τ', b* = λ·τ').  Two-phase control:
+
+  macro-cycle (T_fit):    refit the exclusive latency model T(b)=αb+β
+                          from served batches (Eq. 14), derive the
+                          execution budget τ' = τ − T̄_queue (Eq. 15) and
+                          the batch bound b_max = ⌊(τ'−β)/α⌋ (Eq. 16);
+                          COMBINED replicas take b_max = b* from the
+                          Coordinator and pace with the bivariate model
+                          (Eq. 10).  Overload mitigation: T̄_queue ≥ τ−β
+                          promotes an IDLE replica and resets T̄_queue
+                          to 0.1τ.
+  micro-cycle (T_adjust): per-subflow quality-aware reallocation using
+                          unsaturation u_i (Eq. 17) and priority
+                          Q_i·(1+u_i) (Eq. 18–19), with smoothing
+                          bounds.
+
+Deviation note: the paper's smoothing range [min(0.5b,2), max(1.5b,b_max)]
+has a vacuous upper bound whenever b_max > 1.5b; we use
+[max(1, 0.5·b_prev), min(ceil(1.5·b_prev)+1, b_max)] which enforces the
+stated intent ("prevent abrupt shifts") in both directions.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import math
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.interfaces import BatchResult, ReplicaHandle, Request
+from repro.core.latency_model import BivariateLatencyModel, LinearLatencyModel
+from repro.core.states import ReplicaState
+
+
+@dataclasses.dataclass
+class Subflow:
+    replica_id: str
+    stream_id: str
+    batch_size: int = 4            # b_i
+    interval: float = 0.25         # I_i
+    next_fire: float = 0.0
+    b_max: int = 64
+    history: Deque[Tuple[int, int]] = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=64))  # (target, got)
+
+    def unsaturation(self) -> float:
+        """Eq. 17 — mean underfill fraction over the micro window."""
+        if not self.history:
+            return 0.0
+        vals = [(t - g) / t for t, g in self.history if t > 0]
+        return sum(vals) / max(len(vals), 1)
+
+
+@dataclasses.dataclass
+class DispatcherConfig:
+    slo: float = 0.5               # τ (0.5 s per request, §8.1)
+    t_fit: float = 10.0            # macro-cycle period
+    t_adjust: float = 2.0          # micro-cycle period
+    queue_window: int = 64         # samples for T̄_queue
+    default_interval: float = 0.25
+    min_batch: int = 1
+    max_batch: int = 64
+    bootstrap_b_max: int = 8       # cap until the latency model has fit
+    in_flight_limit: int = 1       # batches outstanding per replica
+    overload_check: float = 1.0    # seconds between backlog checks
+
+
+class SubflowDispatcher:
+    """One dispatcher per request stream (same model + same SLO)."""
+
+    def __init__(self, stream_id: str, cfg: DispatcherConfig,
+                 replicas: Dict[str, ReplicaHandle],
+                 state_of: Callable[[str], ReplicaState],
+                 promote_idle: Callable[[float], Optional[str]],
+                 combined_plan: Callable[
+                     [str], Optional[Tuple[int, BivariateLatencyModel]]]
+                 = lambda rid: None):
+        self.stream_id = stream_id
+        self.cfg = cfg
+        self.replicas = replicas
+        self.state_of = state_of
+        self.promote_idle = promote_idle
+        self.combined_plan = combined_plan
+
+        self.queue: Deque[Request] = collections.deque()
+        self.subflows: Dict[str, Subflow] = {}
+        self.latency_models: Dict[str, LinearLatencyModel] = {}
+        self.queue_lat: Deque[float] = collections.deque(
+            maxlen=cfg.queue_window)
+        self._queue_lat_reset: Optional[float] = None
+        self.next_fit = 0.0
+        self.next_adjust = 0.0
+        self.next_overload_check = 0.0
+        # accounting
+        self.dispatched = 0
+        self.dropped = 0
+        self.overload_promotions = 0
+
+    # ---------------------------------------------------------- ingestion --
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def queue_depth(self) -> int:
+        return len(self.queue)
+
+    # ----------------------------------------------------------- eligibility
+    def _active_replicas(self) -> List[str]:
+        return [rid for rid in self.replicas
+                if self.state_of(rid) in (ReplicaState.SERVING,
+                                          ReplicaState.COMBINED)]
+
+    def _ensure_subflow(self, rid: str, now: float) -> Subflow:
+        sf = self.subflows.get(rid)
+        if sf is None:
+            sf = Subflow(replica_id=rid, stream_id=self.stream_id,
+                         interval=self.cfg.default_interval,
+                         next_fire=now, b_max=self.cfg.bootstrap_b_max)
+            self.subflows[rid] = sf
+            self.latency_models.setdefault(rid, LinearLatencyModel())
+        return sf
+
+    # ------------------------------------------------------------- telemetry
+    def on_batch_result(self, result: BatchResult) -> None:
+        """Completion feedback: feeds Eq. 14 fits and T̄_queue."""
+        m = self.latency_models.setdefault(result.replica_id,
+                                           LinearLatencyModel())
+        if result.train_batch == 0:
+            m.observe(result.batch_size, result.infer_latency)
+        self.queue_lat.append(result.queue_latency)
+
+    def avg_queue_latency(self) -> float:
+        if self._queue_lat_reset is not None:
+            return self._queue_lat_reset
+        if not self.queue_lat:
+            return 0.0
+        return sum(self.queue_lat) / len(self.queue_lat)
+
+    # ------------------------------------------------------------ the loop -
+    def on_tick(self, now: float) -> None:
+        if now >= self.next_fit:
+            self.macro_cycle(now)
+            self.next_fit = now + self.cfg.t_fit
+        if now >= self.next_adjust:
+            self.micro_cycle(now)
+            self.next_adjust = now + self.cfg.t_adjust
+        if now >= self.next_overload_check:
+            self._overload_pressure(now)
+            self.next_overload_check = now + self.cfg.overload_check
+        self._fire_due_subflows(now)
+        self._expire_requests(now)
+
+    def _overload_pressure(self, now: float) -> None:
+        """Fast-path overload mitigation (§6.2): when the stream queue
+        holds more than ~one SLO period of the active capacity, promote
+        an IDLE (or, via the controller fallback, release a COMBINED)
+        replica immediately rather than waiting for the macro cycle."""
+        active = self._active_replicas()
+        capacity = sum(self._ensure_subflow(r, now).b_max for r in active)
+        if len(self.queue) > max(capacity, 1):
+            promoted = self.promote_idle(now)
+            if promoted is not None:
+                self.overload_promotions += 1
+                self._ensure_subflow(promoted, now)
+
+    # -------------------------------------------------------- subflow firing
+    def _fire_due_subflows(self, now: float) -> None:
+        for rid in self._active_replicas():
+            sf = self._ensure_subflow(rid, now)
+            if now < sf.next_fire:
+                continue
+            # Ideal Serving Mode backpressure: at most ``in_flight_limit``
+            # batches outstanding (double buffering) — pacing must match
+            # the processing envelope, never stack backlog (§2.3).
+            handle = self.replicas[rid]
+            outstanding = handle.outstanding_batches(now) \
+                if hasattr(handle, "outstanding_batches") \
+                else handle.queue_length(now)
+            if outstanding > self.cfg.in_flight_limit:
+                sf.next_fire = now + min(sf.interval, 0.05)
+                continue
+            target = max(self.cfg.min_batch,
+                         min(sf.batch_size, sf.b_max))
+            # feasibility shedding (Eq. 13c): a request whose deadline
+            # cannot be met by this batch contributes nothing — drop it
+            # rather than burn capacity serving it late.
+            m = self.latency_models[rid]
+            pred = m.predict(target) if m.fitted else 0.0
+            batch: List[Request] = []
+            while self.queue and len(batch) < target:
+                r = self.queue.popleft()
+                if r.deadline < now + pred:
+                    self.dropped += 1
+                    continue
+                r.dispatched = True
+                r.dispatch_time = now
+                batch.append(r)
+            sf.history.append((target, len(batch)))
+            if batch:
+                self.replicas[rid].submit_batch(batch, now)
+                self.dispatched += len(batch)
+            # pace at the replica's processing envelope: I = α·b_actual+β
+            m = self.latency_models[rid]
+            b_eff = max(len(batch), 1)
+            interval = m.predict(b_eff) if m.fitted \
+                else self.cfg.default_interval
+            sf.interval = max(min(interval, self.cfg.slo), 1e-3)
+            sf.next_fire = now + sf.interval
+
+    def _expire_requests(self, now: float) -> None:
+        """Requests past their deadline cannot contribute (Eq. 13c) —
+        count and drop so they stop occupying capacity."""
+        while self.queue and self.queue[0].deadline < now:
+            self.queue.popleft()
+            self.dropped += 1
+
+    # ------------------------------------------------------------ macro ----
+    def macro_cycle(self, now: float) -> None:
+        self._queue_lat_reset = None
+        tq = self.avg_queue_latency()
+        budget = self.cfg.slo - tq                      # Eq. 15
+        # stream-level overload mitigation (Eq. 15 margin exhausted):
+        # T̄_queue ≥ τ − β ⇒ activate extra capacity, reset T̄_queue := 0.1τ
+        betas = [m.beta for m in self.latency_models.values() if m.fitted]
+        beta_ref = min(betas) if betas else 0.0
+        if tq >= self.cfg.slo - beta_ref and tq > 0:
+            promoted = self.promote_idle(now)
+            if promoted is not None:
+                self.overload_promotions += 1
+                self._ensure_subflow(promoted, now)
+                self._queue_lat_reset = 0.1 * self.cfg.slo
+                budget = self.cfg.slo - self.avg_queue_latency()
+        for rid in self._active_replicas():
+            sf = self._ensure_subflow(rid, now)
+            plan = self.combined_plan(rid) \
+                if self.state_of(rid) is ReplicaState.COMBINED else None
+            if plan is not None:
+                b_star, bivar = plan
+                b_cap = int(b_star)
+                # until the bivariate model has sample support (bootstrap
+                # round), respect the exclusive-model SLO bound so the
+                # conservative-start property of §5.2 actually holds
+                m0 = self.latency_models[rid]
+                if not bivar.fitted and m0.fitted:
+                    b_cap = min(b_cap, m0.max_batch(
+                        max(budget, 0.05) * 0.9, floor=self.cfg.min_batch,
+                        cap=self.cfg.max_batch))
+                sf.b_max = max(self.cfg.min_batch,
+                               min(b_cap, self.cfg.max_batch))
+                # pace with the interference model (Eq. 10)
+                train_b = getattr(self.replicas[rid], "train_batch", 0)
+                sf.interval = max(
+                    min(bivar.predict(sf.batch_size, train_b),
+                        self.cfg.slo), 1e-3) if bivar.fitted \
+                    else sf.interval
+                continue
+            m = self.latency_models[rid]
+            m.fit()
+            if m.fitted:
+                sf.b_max = m.max_batch(max(budget, 0.05),
+                                       floor=self.cfg.min_batch,
+                                       cap=self.cfg.max_batch)
+            else:
+                sf.b_max = self.cfg.bootstrap_b_max
+
+    # ------------------------------------------------------------ micro ----
+    def micro_cycle(self, now: float) -> None:
+        active = self._active_replicas()
+        if not active:
+            return
+        flows = [self._ensure_subflow(rid, now) for rid in active]
+        total_cap = sum(sf.b_max for sf in flows)
+        prios = []
+        for rid, sf in zip(active, flows):
+            q = max(self.replicas[rid].quality_score(now), 1e-6)
+            prios.append(q * (1.0 + sf.unsaturation()))      # Eq. 18
+        psum = sum(prios) or 1.0
+        for sf, p in zip(flows, prios):
+            raw = total_cap * p / psum                       # Eq. 19
+            prev = sf.batch_size
+            lo = max(self.cfg.min_batch, int(0.5 * prev))
+            hi = max(lo, min(int(math.ceil(1.5 * prev)) + 1, sf.b_max))
+            sf.batch_size = int(min(max(raw, lo), hi))

@@ -1,0 +1,126 @@
+"""Compiled step functions — including the paper's core mechanism as a
+single XLA program: ``combined_step`` executes a LoRA training step AND
+an inference batch over ONE shared copy of the base weights (DESIGN.md
+§2: the TPU-native form of CoLLM's model-sharing / spatial multiplexing).
+
+All steps take and return explicit pytrees so they jit/pjit cleanly and
+the dry-run can lower them with ShapeDtypeStructs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import Model, build
+from repro.optim.adamw import AdamW, AdamWState, global_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class Engine:
+    """Step factory for one architecture."""
+    model: Model
+    optimizer: AdamW
+
+    # ----------------------------------------------------------- training --
+    def train_step(self, params, lora, opt_state: AdamWState, batch,
+                   *, skip_masked_blocks: bool = False,
+                   ce_chunk: int = 512, grad_accum: int = 1
+                   ) -> Tuple[Any, AdamWState, Dict[str, jax.Array]]:
+        """LoRA-only gradient step: base weights frozen (PEFT).
+
+        ``grad_accum`` > 1 splits the global batch into microbatches
+        scanned sequentially with f32 gradient accumulation — the
+        standard memory lever for the large train cells (activations
+        live per-microbatch; LoRA grads are tiny so the accumulator is
+        nearly free).  The per-microbatch |g|² is also what the
+        gradient-noise-scale estimator (Eq. 8's p_t) consumes.
+        """
+        def loss_fn(lora_, microbatch):
+            loss, metrics = self.model.forward_loss(
+                params, lora_, microbatch, ce_chunk=ce_chunk,
+                skip_masked_blocks=skip_masked_blocks)
+            return loss, metrics
+
+        if grad_accum <= 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(lora, batch)
+            micro_sqnorm = global_norm(grads) ** 2
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum)
+                                    + x.shape[1:]), batch)
+
+            def body(carry, mb):
+                g_acc, l_acc, sq_acc = carry
+                (loss, _), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(lora, mb)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / grad_accum,
+                    g_acc, grads)
+                sq = global_norm(grads) ** 2
+                return (g_acc, l_acc + loss / grad_accum,
+                        sq_acc + sq / grad_accum), None
+
+            zeros = jax.tree.map(
+                lambda x: jnp.zeros(x.shape, jnp.float32), lora)
+            (grads, loss, micro_sqnorm), _ = jax.lax.scan(
+                body, (zeros, jnp.float32(0.0), jnp.float32(0.0)), micro)
+            metrics = {"ce_loss": loss}
+
+        new_lora, new_opt, opt_metrics = self.optimizer.update(
+            grads, opt_state, lora)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        # per-microbatch grad sqnorm feeds the noise-scale estimator
+        metrics["micro_grad_sqnorm"] = micro_sqnorm
+        metrics["grad_sqnorm"] = jnp.square(metrics["grad_norm"])
+        return new_lora, new_opt, metrics
+
+    # ------------------------------------------------------------ serving --
+    def prefill_step(self, params, lora, batch):
+        return self.model.prefill(params, lora, batch)
+
+    def decode_step(self, params, lora, caches, token, pos):
+        return self.model.decode_step(params, lora, caches, token, pos)
+
+    def encoder_serve_step(self, params, lora, batch):
+        """Encoder-only 'serving': full-sequence frame classification."""
+        hidden, _, _ = self.model.hidden_states(params, lora, batch)
+        return hidden @ params["lm_head"]
+
+    # ------------------------------------------------- the paper's fusion --
+    def combined_step(self, params, lora, opt_state: AdamWState,
+                      train_batch, caches, token, pos
+                      ) -> Tuple[Any, AdamWState, jax.Array, Any,
+                                 Dict[str, jax.Array]]:
+        """One fused program: LoRA train step + decode batch, sharing the
+        HBM-resident base weights.  XLA schedules both DAGs; the returned
+        logits come from the *pre-update* adapter (within-step snapshot
+        isolation — matching the paper's subprocess snapshot semantics).
+        """
+        logits, new_caches = self.model.decode_step(
+            params, lora, caches, token, pos)
+        new_lora, new_opt, metrics = self.train_step(
+            params, lora, opt_state, train_batch)
+        return new_lora, new_opt, logits, new_caches, metrics
+
+    def combined_prefill_step(self, params, lora, opt_state: AdamWState,
+                              train_batch, infer_batch):
+        """Fused train + prefill variant (used when the co-located
+        inference work is prompt processing rather than decode)."""
+        logits, caches = self.model.prefill(params, lora, infer_batch)
+        new_lora, new_opt, metrics = self.train_step(
+            params, lora, opt_state, train_batch)
+        return new_lora, new_opt, logits, caches, metrics
+
+
+def make_engine(cfg: ModelConfig, lr: float = 1e-4,
+                weight_decay: float = 0.0) -> Engine:
+    return Engine(model=build(cfg),
+                  optimizer=AdamW(lr=lr, weight_decay=weight_decay))

@@ -1,0 +1,100 @@
+"""The control-plane ↔ data-plane seam.
+
+CoLLM's components (Launcher / Coordinator / Dispatcher) operate on this
+protocol only; ``runtime.replica`` provides two implementations:
+``SimReplica`` (discrete-event, analytic latency surfaces — the paper's
+testbed proxy) and ``LiveReplica`` (real JAX steps on reduced models).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Protocol, Sequence, runtime_checkable
+
+
+@dataclasses.dataclass
+class Request:
+    """One inference request of a stream (paper §6.1)."""
+    request_id: int
+    stream_id: str              # requests sharing (model, SLO) form a stream
+    arrival: float              # a_r
+    deadline: float             # d_r
+    tokens: int = 128           # output length (token-level goodput §8.1)
+    dispatched: bool = False
+    dispatch_time: Optional[float] = None   # when a subflow picked it up
+    completed_at: Optional[float] = None
+    quality: float = 0.0        # response quality when served (1/CE)
+
+    @property
+    def slo_met(self) -> bool:
+        return self.completed_at is not None \
+            and self.completed_at <= self.deadline
+
+
+@dataclasses.dataclass
+class BatchResult:
+    """Completion record for a dispatched batch."""
+    replica_id: str
+    batch_size: int
+    infer_latency: float        # T_infer (processing only)
+    total_latency: float        # ℓ = T_infer + T_queue
+    queue_latency: float
+    finished_at: float
+    quality: float              # replica model quality at serve time
+    tokens: int
+    train_batch: int = 0        # co-running training batch (0 = none)
+
+
+@dataclasses.dataclass
+class TrainRoundStats:
+    """Telemetry from one local FL training round (Coordinator inputs)."""
+    replica_id: str
+    steps: int
+    train_batch: int
+    infer_batch: int
+    avg_step_time: float        # T_train per iteration
+    loss_before: float
+    loss_after: float
+    noise_scale: float          # p_t
+    samples: int
+
+    @property
+    def loss_reduction(self) -> float:
+        """l_t — average per-iteration loss reduction."""
+        return max(self.loss_before - self.loss_after, 0.0) \
+            / max(self.steps, 1)
+
+
+@runtime_checkable
+class ReplicaHandle(Protocol):
+    """What the CoLLM control plane needs from a replica."""
+    replica_id: str
+    model_id: str
+
+    # ---- serving -----------------------------------------------------------
+    def submit_batch(self, requests: Sequence[Request], now: float) -> None:
+        """Enqueue a batch for execution (completion is reported through
+        the event loop / completion callbacks)."""
+        ...
+
+    def queue_length(self, now: float) -> int: ...
+
+    def utilization(self, now: float) -> float:
+        """Busy fraction over the last monitoring interval (the TPU/JAX
+        stand-in for nvidia-smi SM utilization — DESIGN.md §2)."""
+        ...
+
+    # ---- fine-tuning -------------------------------------------------------
+    def set_adapter(self, adapter: Any, version: int) -> None: ...
+
+    def get_adapter(self) -> Any: ...
+
+    def train_round(self, train_batch: int, infer_batch: int, steps: int,
+                    now: float) -> TrainRoundStats:
+        """Run one local FL round in COMBINED mode (concurrent with
+        serving — the fused combined_step on live replicas)."""
+        ...
+
+    # ---- quality -----------------------------------------------------------
+    def quality_score(self, now: float) -> float:
+        """Served response quality = 1 / CE-loss (paper §8.1)."""
+        ...

@@ -1,0 +1,182 @@
+"""Fine-tune Task Launcher (paper §4).
+
+Watches IDLE replicas; when ≥ ``min_cohort`` IDLE replicas serve the same
+model it opens a FederatedSession (server = highest quality score),
+transitions members to COMBINED and creates an Inference-Training
+Coordinator for the session.  Rounds run asynchronously against the
+cluster clock: member training time is billed by the replica (the
+simulator advances its busy timeline; live replicas actually step), and
+aggregation fires when the slowest member finishes (stragglers are
+early-stopped by §4.3 or shed by the cohort-size check).
+
+Load surges suspend sessions (§8.2: "CoLLM temporarily halts fine-tuning
+to prioritize inference") via ``suspend_for_model``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+from repro.core.coordinator import (
+    CoordinatorConfig, InferenceTrainingCoordinator,
+)
+from repro.core.federated import FederatedSession, FLRoundResult
+from repro.core.interfaces import ReplicaHandle, TrainRoundStats
+from repro.core.states import ClusterStateManager, ReplicaState
+
+
+@dataclasses.dataclass
+class LauncherConfig:
+    min_cohort: int = 3
+    slo: float = 0.5
+    coordinator: CoordinatorConfig = dataclasses.field(
+        default_factory=CoordinatorConfig)
+    max_rounds: int = 1000
+    decision_interval: float = 5.0   # launcher decision cadence (T' counts
+                                     # these decisions, not control ticks)
+
+
+@dataclasses.dataclass
+class ActiveSession:
+    session: FederatedSession
+    coordinator: InferenceTrainingCoordinator
+    round_done_at: float
+    pending: List[FLRoundResult] = dataclasses.field(default_factory=list)
+
+
+class FineTuneTaskLauncher:
+    _ids = itertools.count()
+
+    def __init__(self, cfg: LauncherConfig,
+                 replicas: Dict[str, ReplicaHandle],
+                 states: ClusterStateManager,
+                 global_adapters: Dict[str, Any],
+                 on_adapter_update: Callable[[str, Any, int], None]
+                 = lambda model_id, adapter, version: None):
+        self.cfg = cfg
+        self.replicas = replicas
+        self.states = states
+        self.global_adapters = global_adapters   # model_id -> adapter tree
+        self.on_adapter_update = on_adapter_update
+        # τ' provider for Eq. 12 — wired to dispatcher queue telemetry by
+        # the cluster controller; defaults to the raw SLO.
+        self.budget_fn: Callable[[], float] = lambda: self.cfg.slo
+        self.sessions: Dict[str, ActiveSession] = {}
+        self.adapter_versions: Dict[str, int] = {}
+        self.completed_rounds = 0
+        self._next_decision = 0.0
+
+    # ------------------------------------------------------------ helpers --
+    def _idle_by_model(self) -> Dict[str, List[str]]:
+        out: Dict[str, List[str]] = {}
+        for rid in self.states.replicas_in(ReplicaState.IDLE):
+            model = self.replicas[rid].model_id
+            out.setdefault(model, []).append(rid)
+        return out
+
+    def session_for(self, replica_id: str) -> Optional[ActiveSession]:
+        for a in self.sessions.values():
+            if replica_id in a.session.members:
+                return a
+        return None
+
+    # -------------------------------------------------------------- launch --
+    def maybe_launch(self, now: float) -> List[str]:
+        """§4.2 — open sessions for models with ≥ min_cohort IDLE
+        replicas.  Returns ids of all replicas selected this decision."""
+        selected: List[str] = []
+        in_session = {m for a in self.sessions.values()
+                      for m in a.session.members}
+        for model_id, idle in self._idle_by_model().items():
+            idle = [r for r in idle if r not in in_session]
+            if len(idle) < self.cfg.min_cohort:
+                continue
+            # server = member with the highest quality score
+            server = max(idle,
+                         key=lambda r: self.replicas[r].quality_score(now))
+            adapter = self.global_adapters.get(model_id)
+            if adapter is None:
+                adapter = self.replicas[server].get_adapter()
+                self.global_adapters[model_id] = adapter
+            session = FederatedSession(model_id, idle, server, adapter,
+                                       min_cohort=self.cfg.min_cohort)
+            coord = InferenceTrainingCoordinator(
+                f"fl-{next(self._ids)}", idle, self.cfg.slo,
+                self.cfg.coordinator)
+            active = ActiveSession(session, coord, round_done_at=now)
+            self.sessions[coord.session_id] = active
+            for rid in idle:
+                self.states.transition(rid, ReplicaState.COMBINED, now)
+            self._start_round(active, now)
+            selected.extend(idle)
+        # T' rollback for IDLE replicas that keep being passed over
+        self.states.tick_unselected(selected, now)
+        return selected
+
+    # --------------------------------------------------------------- rounds -
+    def _start_round(self, active: ActiveSession, now: float) -> None:
+        sess, coord = active.session, active.coordinator
+        version = self.adapter_versions.get(sess.model_id, 0)
+        active.pending = []
+        done = now
+        for rid in list(sess.members):
+            handle = self.replicas[rid]
+            handle.set_adapter(sess.global_adapter, version)
+            plan = coord.plan_for(rid)
+            stats = handle.train_round(plan.train_batch, plan.infer_batch,
+                                       coord.steps_per_round, now)
+            coord.observe_train(stats)
+            active.pending.append(FLRoundResult(
+                replica_id=rid, adapter=handle.get_adapter(),
+                local_loss=stats.loss_after, samples=stats.samples,
+                train_time=stats.steps * stats.avg_step_time))
+            done = max(done, now + stats.steps * stats.avg_step_time)
+        active.round_done_at = done
+
+    def _finish_round(self, active: ActiveSession, now: float) -> None:
+        sess, coord = active.session, active.coordinator
+        new_global = sess.aggregate(active.pending)
+        version = self.adapter_versions.get(sess.model_id, 0) + 1
+        self.adapter_versions[sess.model_id] = version
+        self.global_adapters[sess.model_id] = new_global
+        self.on_adapter_update(sess.model_id, new_global, version)
+        # model sharing: COMBINED members serve with the fresh adapter
+        # immediately (the paper's continuous-adaptation mechanism)
+        for rid in list(sess.members):
+            self.replicas[rid].set_adapter(new_global, version)
+        stopped = sess.early_stops(active.pending)
+        for rid in stopped:
+            coord.drop_replica(rid)
+            self.states.transition(rid, ReplicaState.SERVING, now)
+        self.completed_rounds += 1
+        if not sess.alive or sess.round >= self.cfg.max_rounds:
+            self._dissolve(active, now)
+            return
+        coord.replan(self.budget_fn())
+        self._start_round(active, now)
+
+    def _dissolve(self, active: ActiveSession, now: float) -> None:
+        for rid in list(active.session.members):
+            self.states.transition(rid, ReplicaState.SERVING, now)
+        self.sessions.pop(active.coordinator.session_id, None)
+
+    def suspend_for_model(self, model_id: str, now: float) -> int:
+        """Load surge: halt fine-tuning for a model, release replicas."""
+        n = 0
+        for sid in list(self.sessions):
+            a = self.sessions[sid]
+            if a.session.model_id == model_id:
+                self._dissolve(a, now)
+                n += 1
+        return n
+
+    # ------------------------------------------------------------ the loop -
+    def on_tick(self, now: float) -> None:
+        for sid in list(self.sessions):
+            active = self.sessions.get(sid)
+            if active and now >= active.round_done_at and active.pending:
+                self._finish_round(active, now)
+        if now >= self._next_decision:
+            self.maybe_launch(now)
+            self._next_decision = now + self.cfg.decision_interval

@@ -1,0 +1,2 @@
+from repro.data.synthetic import SyntheticDataset, replica_datasets  # noqa: F401
+from repro.data.traces import TraceConfig, conv_trace, code_trace, merged_trace  # noqa: F401

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for CoLLM's compute hot spots:
+
+  lora_matmul       — fused base + low-rank adapter contraction (the
+                      unified PEFT interface both tasks share)
+  flash_attention   — prefill attention (GQA, causal, sliding window)
+  decode_attention  — batched single-token attention over KV caches
+  ssd_scan          — Mamba2 SSD chunked scan (long_500k cells)
+
+Each has a pure-jnp oracle in ``ref.py``; ``ops.py`` is the dispatching
+public surface (TPU -> compiled kernel, CPU -> oracle / interpret mode).
+"""
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,105 @@
+"""Batched decode attention Pallas kernel: one query token per sequence
+against a (possibly partially-filled) KV cache.
+
+Decode attention is memory-bound (the whole KV cache streams HBM->VMEM
+once per step, arithmetic intensity ~1 FLOP/byte), so the kernel's job is
+to keep the streaming dense: KV blocks are walked with the online-softmax
+accumulator in VMEM, and blocks entirely beyond ``kv_len`` are skipped
+via ``pl.when`` so a short cache in a long buffer doesn't pay for the
+empty tail.
+
+Layout: q [B, H, D]; caches [B, Hkv, S, D]; kv_len [B] int32 (per-batch
+valid length — ragged batches from the CoLLM dispatcher's subflows).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, bk: int, kv_steps: int, g: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kv_len = len_ref[0]
+    k_lo = j * bk
+
+    @pl.when(k_lo < kv_len)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)           # [G, D]
+        k = k_ref[0, 0].astype(jnp.float32)           # [bk, D]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (g, bk), 1)
+        mask = kpos < kv_len
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jnp.dot(
+            p.astype(v_ref.dtype), v_ref[0, 0],
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == kv_steps - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "bk", "interpret"))
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     kv_len: jax.Array, *, scale: Optional[float] = None,
+                     bk: int = 512, interpret: bool = False) -> jax.Array:
+    """q: [B,H,D]; caches: [B,Hkv,S,D]; kv_len: [B] -> [B,H,D].
+
+    Grid (B, Hkv, S/bk); the G=H/Hkv query heads sharing a KV head ride
+    in the same block so the cache is streamed once per KV head.
+    """
+    bsz, h, d = q.shape
+    hkv, s = k_cache.shape[1], k_cache.shape[2]
+    g = h // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    bk = min(bk, s)
+    nk = -(-s // bk)
+    kp = nk * bk - s
+    if kp:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, 0), (0, kp), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, 0), (0, kp), (0, 0)))
+    qg = q.reshape(bsz, hkv, g, d)
+
+    kernel = functools.partial(_kernel, scale=scale, bk=bk, kv_steps=nk, g=g)
+    out = pl.pallas_call(
+        kernel,
+        grid=(bsz, hkv, nk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, hh, j: (b,)),
+            pl.BlockSpec((1, 1, g, d), lambda b, hh, j: (b, hh, 0, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b, hh, j: (b, hh, j, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b, hh, j: (b, hh, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda b, hh, j: (b, hh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, hkv, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(kv_len.astype(jnp.int32), qg, k_cache, v_cache)
+    return out.reshape(bsz, h, d)

@@ -1,0 +1,88 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Dispatch policy:
+  * on TPU backends the compiled Pallas kernel runs natively;
+  * on CPU (this container, and any smoke test) the kernel body runs in
+    ``interpret=True`` mode when ``force_kernel`` is set, otherwise the
+    pure-jnp oracle from ``ref.py`` executes — interpret mode is
+    correctness-equivalent but orders of magnitude slower, so tests opt
+    in explicitly and production code paths stay fast.
+
+The wrappers also handle padding to MXU-aligned block multiples so
+callers never need to care about divisibility.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention as _decode_kernel
+from repro.kernels.flash_attention import flash_attention as _flash_kernel
+from repro.kernels.lora_matmul import lora_matmul as _lora_kernel
+from repro.kernels.ssd_scan import ssd_scan as _ssd_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def lora_matmul(x, w, a, b, scaling: float, *,
+                force_kernel: bool = False, block: int = 128):
+    """y = x @ W + scaling (x@A)@B with leading batch dims on x."""
+    if not (_on_tpu() or force_kernel):
+        return ref.lora_matmul(x, w, a, b, scaling)
+    lead = x.shape[:-1]
+    m = 1
+    for dim in lead:
+        m *= dim
+    k, n = w.shape
+    x2 = x.reshape(m, k)
+    mp, kp, np_ = _round_up(m, block), _round_up(k, block), _round_up(n, block)
+    x2 = jnp.pad(x2, ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+    ap = jnp.pad(a, ((0, kp - k), (0, 0)))
+    bp = jnp.pad(b, ((0, 0), (0, np_ - n)))
+    y = _lora_kernel(x2, wp, ap, bp, scaling, bm=block, bn=block,
+                     bk=max(block, 512 if kp % 512 == 0 else block),
+                     interpret=not _on_tpu())
+    return y[:m, :n].reshape(lead + (n,))
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    scale: Optional[float] = None,
+                    force_kernel: bool = False):
+    """q: [B,H,Sq,D]; k,v: [B,Hkv,Skv,D]."""
+    if not (_on_tpu() or force_kernel):
+        return ref.flash_attention(q, k, v, causal=causal, window=window,
+                                   scale=scale)
+    return _flash_kernel(q, k, v, causal=causal, window=window, scale=scale,
+                         interpret=not _on_tpu())
+
+
+def decode_attention(q, k_cache, v_cache, kv_len, *,
+                     scale: Optional[float] = None,
+                     force_kernel: bool = False):
+    """q: [B,H,D]; caches: [B,Hkv,S,D]; kv_len: [B]."""
+    if not (_on_tpu() or force_kernel):
+        return ref.decode_attention(q, k_cache, v_cache, kv_len, scale=scale)
+    return _decode_kernel(q, k_cache, v_cache, kv_len, scale=scale,
+                          interpret=not _on_tpu())
+
+
+def ssd_scan(x, dt, a, bmat, cmat, *, chunk: int = 256,
+             force_kernel: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """x: [B,H,S,P]; dt: [B,H,S]; a: [H]; bmat/cmat: [B,S,N]."""
+    if not (_on_tpu() or force_kernel):
+        y, fin = ref.ssd_scan(x.transpose(0, 2, 1, 3), dt.transpose(0, 2, 1),
+                              a, bmat, cmat)
+        return y.transpose(0, 2, 1, 3), fin
+    return _ssd_kernel(x, dt, a, bmat, cmat, chunk=chunk,
+                       interpret=not _on_tpu())

@@ -1,0 +1,92 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth the kernels are validated
+against (tests sweep shapes/dtypes and assert_allclose kernel-vs-ref).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def lora_matmul(x: jax.Array, w: jax.Array, a: jax.Array, b: jax.Array,
+                scaling: float) -> jax.Array:
+    """y = x @ W + scaling * (x @ A) @ B, accumulated in f32."""
+    xf = x.astype(jnp.float32)
+    base = xf @ w.astype(jnp.float32)
+    low = (xf @ a.astype(jnp.float32)) @ b.astype(jnp.float32)
+    return (base + scaling * low).astype(x.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    scale: Optional[float] = None) -> jax.Array:
+    """Dense softmax attention.  q: [B,H,Sq,D]; k,v: [B,Hkv,Skv,D] (GQA)."""
+    bsz, h, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    g = h // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    qg = q.reshape(bsz, hkv, g, sq, d).astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(sq)
+    kpos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        mask &= (qpos[:, None] - kpos[None, :]) < window
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return o.reshape(bsz, h, sq, d).astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     kv_len: jax.Array, *, scale: Optional[float] = None
+                     ) -> jax.Array:
+    """Single-token attention.  q: [B,H,D]; caches: [B,Hkv,S,D];
+    kv_len: [B] int32."""
+    bsz, h, d = q.shape
+    hkv, s = k_cache.shape[1], k_cache.shape[2]
+    g = h // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    qg = q.reshape(bsz, hkv, g, d).astype(jnp.float32)
+    sc = jnp.einsum("bhgd,bhkd->bhgk", qg,
+                    k_cache.astype(jnp.float32)) * scale
+    mask = jnp.arange(s)[None, :] < kv_len[:, None]          # [B,S]
+    sc = jnp.where(mask[:, None, None], sc, -jnp.inf)
+    p = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bhgk,bhkd->bhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(bsz, h, d).astype(q.dtype)
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, a: jax.Array, bmat: jax.Array,
+             cmat: jax.Array, init_state: Optional[jax.Array] = None
+             ) -> Tuple[jax.Array, jax.Array]:
+    """Sequential (non-chunked) SSD recurrence — the slow exact oracle.
+
+    x: [B,S,H,P]; dt: [B,S,H]; a: [H] (negative); bmat/cmat: [B,S,N].
+    Returns (y [B,S,H,P], final_state [B,H,P,N])."""
+    bsz, s, h, p = x.shape
+    n = bmat.shape[-1]
+    if init_state is None:
+        init_state = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    def step(state, inputs):
+        xt, dtt, bt, ct = inputs
+        decay = jnp.exp(dtt * a[None, :])[:, :, None, None]
+        inject = jnp.einsum("bh,bn,bhp->bhpn", dtt, bt, xt)
+        state = state * decay + inject
+        y = jnp.einsum("bhpn,bn->bhp", state, ct)
+        return state, y
+
+    xs = (x.swapaxes(0, 1).astype(jnp.float32),
+          dt.swapaxes(0, 1).astype(jnp.float32),
+          bmat.swapaxes(0, 1).astype(jnp.float32),
+          cmat.swapaxes(0, 1).astype(jnp.float32))
+    final, ys = jax.lax.scan(step, init_state, xs)
+    return ys.swapaxes(0, 1).astype(x.dtype), final

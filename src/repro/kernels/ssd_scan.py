@@ -1,0 +1,115 @@
+"""Mamba2 SSD chunked-scan Pallas kernel.
+
+TPU adaptation of the SSD (state-space duality) algorithm: per (batch,
+head) the sequence is processed in chunks; the intra-chunk term is a
+decay-masked [Q,Q] quadratic form (MXU-friendly — Q is a multiple of
+128), and the running state [P,N] lives in VMEM scratch across the
+chunk loop (innermost grid axis), so state passing never round-trips
+HBM.  This replaces the GPU version's warp-parallel chunk scan with a
+sequential-grid + VMEM-resident-state formulation.
+
+Layouts (pre-transposed by ops.py):
+  x   [B, H, S, P]   dt [B, H, S]   a [H]
+  bmat/cmat [B, S, N]  (single B/C group, shared across heads)
+Returns y [B, H, S, P] and the final state [B, H, P, N].
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, fin_ref, state_ref, *,
+            q: int, chunks: int, s_valid: int):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, 0].astype(jnp.float32)          # [Q, P]
+    dt = dt_ref[0, 0].astype(jnp.float32)        # [Q]
+    a = a_ref[0]                                 # scalar decay (negative)
+    bm = b_ref[0].astype(jnp.float32)            # [Q, N]
+    cm = c_ref[0].astype(jnp.float32)            # [Q, N]
+
+    # zero padded tail (keeps state exact when S % Q != 0)
+    pos = c * q + jax.lax.iota(jnp.int32, q)
+    valid = (pos < s_valid).astype(jnp.float32)
+    dt = dt * valid
+
+    da = dt * a                                  # [Q]  (<= 0)
+    cum = jnp.cumsum(da)                         # inclusive
+    seg = cum[q - 1]
+
+    # intra-chunk quadratic term
+    diff = cum[:, None] - cum[None, :]           # [Q, Q]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    lmat = jnp.where(ii >= jj, jnp.exp(diff), 0.0)
+    cb = jnp.dot(cm, bm.T, preferred_element_type=jnp.float32)  # [Q,Q]
+    scores = cb * lmat * dt[None, :]
+    y = jnp.dot(scores, x, preferred_element_type=jnp.float32)  # [Q, P]
+
+    # inter-chunk contribution from carried state
+    state = state_ref[...]                       # [P, N]
+    y += jnp.exp(cum)[:, None] * jnp.dot(
+        cm, state.T, preferred_element_type=jnp.float32)
+
+    # state update: state' = exp(seg)*state + sum_j exp(seg-cum_j)*dt_j*x_j B_j^T
+    w = jnp.exp(seg - cum) * dt                  # [Q]
+    inject = jnp.dot((x * w[:, None]).T, bm,
+                     preferred_element_type=jnp.float32)        # [P, N]
+    state_ref[...] = jnp.exp(seg) * state + inject
+
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    @pl.when(c == chunks - 1)
+    def _finish():
+        fin_ref[0, 0] = state_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x: jax.Array, dt: jax.Array, a: jax.Array, bmat: jax.Array,
+             cmat: jax.Array, *, chunk: int = 256,
+             interpret: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """x: [B,H,S,P]; dt: [B,H,S]; a: [H]; bmat/cmat: [B,S,N]."""
+    bsz, h, s, p = x.shape
+    n = bmat.shape[-1]
+    q = min(chunk, s)
+    nc = -(-s // q)
+    pad = nc * q - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, 0), (0, pad)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+
+    kernel = functools.partial(_kernel, q=q, chunks=nc, s_valid=s)
+    y, fin = pl.pallas_call(
+        kernel,
+        grid=(bsz, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, q, p), lambda b, hh, c: (b, hh, c, 0)),
+            pl.BlockSpec((1, 1, q), lambda b, hh, c: (b, hh, c)),
+            pl.BlockSpec((1,), lambda b, hh, c: (hh,)),
+            pl.BlockSpec((1, q, n), lambda b, hh, c: (b, c, 0)),
+            pl.BlockSpec((1, q, n), lambda b, hh, c: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, q, p), lambda b, hh, c: (b, hh, c, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda b, hh, c: (b, hh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, h, nc * q, p), x.dtype),
+            jax.ShapeDtypeStruct((bsz, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a.astype(jnp.float32), bmat, cmat)
+    return y[:, :, :s], fin

@@ -1,0 +1,5 @@
+"""Launchers: mesh construction, multi-pod dry-run, train/serve drivers,
+perf-iteration harness.  NOTE: ``dryrun``/``perf`` set XLA_FLAGS for 512
+host devices at import — import them only in dedicated processes.
+"""
+from repro.launch.mesh import make_production_mesh, rules_for  # noqa: F401

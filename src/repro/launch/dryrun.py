@@ -1,0 +1,568 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+__doc__ = """Multi-pod dry-run (deliverable e).
+
+Lowers + compiles every (architecture × input shape) cell on the
+single-pod 16×16 and multi-pod 2×16×16 production meshes, prints
+``compiled.memory_analysis()`` (proves it fits) and
+``compiled.cost_analysis()`` (FLOPs/bytes for §Roofline), extracts the
+collective schedule from the optimized HLO, and writes one JSON record
+per cell under results/dryrun/.
+
+The two os.environ lines above MUST run before any other import — jax
+locks the device count at first init.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  python -m repro.launch.dryrun --arch llama3-8b --all-shapes --multi-pod
+  python -m repro.launch.dryrun --all            # every runnable cell
+  python -m repro.launch.dryrun --list           # cells + skip reasons
+  python -m repro.launch.dryrun --arch llama3-8b --combined
+                                                 # the paper's fused step
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (
+    ALL_SHAPES, Family, ModelConfig, ShapeCell, applicable_shapes,
+)
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.core.engine import make_engine
+from repro.launch import hlo_analysis
+from repro.launch.mesh import (
+    batch_shardings, make_production_mesh, param_shardings, rules_for,
+)
+from repro.models.sharding import ShardingRules, sharding_context
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__),
+                           "..", "..", "..", "results", "dryrun")
+
+
+def _cell_cfg(cfg: ModelConfig, kind: str, remat: str = "full"
+              ) -> ModelConfig:
+    if kind == "train":
+        return dataclasses.replace(cfg, remat=remat)
+    return dataclasses.replace(cfg, remat="none")
+
+
+def default_grad_accum(cfg: ModelConfig, cell: ShapeCell) -> int:
+    """Microbatch count for train cells: keep per-microbatch activations
+    bounded so the big MoE/VLM archs fit 16 GB HBM (tuned empirically in
+    EXPERIMENTS.md §Dry-run)."""
+    if cell.kind != "train":
+        return 1
+    if cfg.d_model >= 8192:
+        return 16   # vision-90b class: fits 13.0 GiB (§Perf appendix)
+    if cfg.family is Family.MOE or cfg.d_model >= 6144:
+        return 8
+    if cfg.d_model >= 4096:
+        return 4
+    return 2
+
+
+def _compile_cell(cfg: ModelConfig, cell: ShapeCell, mesh, rules, *,
+                  block_kv: int, skip_masked_blocks: bool,
+                  ce_chunk: int = 512, grad_accum: int = 1,
+                  prefill_chunks: int = 1):
+    """Lower + compile one step program; returns the compiled object."""
+    engine = make_engine(cfg)
+    model = engine.model
+    with sharding_context(mesh, rules):
+        param_specs = model.param_specs()
+        lora_specs = model.lora_specs()
+        inputs = model.input_specs(cell)
+        p_sh = param_shardings(param_specs, cfg, mesh, rules)
+        l_sh = param_shardings(lora_specs, cfg, mesh, rules)
+
+        out_sh = None
+        if cell.kind == "train":
+            def fn(params, lora, opt_state, batch):
+                return engine.train_step(
+                    params, lora, opt_state, batch,
+                    skip_masked_blocks=skip_masked_blocks,
+                    ce_chunk=ce_chunk, grad_accum=grad_accum)
+            donate = (1, 2)
+            opt_specs = jax.eval_shape(engine.optimizer.init, lora_specs)
+            o_sh = param_shardings(opt_specs, cfg, mesh, rules)
+            b_sh = batch_shardings(inputs["batch"], cfg, mesh, rules)
+            args = (param_specs, lora_specs, opt_specs, inputs["batch"])
+            in_sh = (p_sh, l_sh, o_sh, b_sh)
+            # donated outputs must keep the donors' shardings
+            # (shardings accept pytree prefixes: None = XLA's choice)
+            out_sh = (l_sh, o_sh, None)
+        elif cell.kind == "prefill":
+            if cfg.encoder_only:
+                def fn(params, lora, batch):
+                    return engine.encoder_serve_step(params, lora, batch)
+            elif prefill_chunks <= 1:
+                def fn(params, lora, batch):
+                    return model.prefill(
+                        params, lora, batch, block_kv=block_kv,
+                        skip_masked_blocks=skip_masked_blocks)
+            else:
+                # batch-microchunked prefill: only one chunk's
+                # activations are live at a time (same lever as
+                # grad_accum for train cells); caches/logits re-merge
+                # on the batch axis afterwards.  Non-VLM caches carry
+                # batch right after the stacked-layer dim (axis 1).
+                assert cfg.family is not Family.VLM, \
+                    "prefill_chunks not wired for VLM cache layout"
+
+                def fn(params, lora, batch):
+                    nb = prefill_chunks
+
+                    def split(x):
+                        return x.reshape((nb, x.shape[0] // nb)
+                                         + x.shape[1:])
+
+                    sub = jax.tree.map(split, batch)
+
+                    def body(_, b):
+                        lg, caches = model.prefill(
+                            params, lora, b, block_kv=block_kv,
+                            skip_masked_blocks=skip_masked_blocks)
+                        return None, (lg, caches)
+
+                    _, (lgs, caches) = jax.lax.scan(body, None, sub)
+
+                    def merge(x):
+                        # [nb, L, B/nb, ...] -> [L, B, ...] chunk-major
+                        moved = jnp.moveaxis(x, 0, 1)
+                        return moved.reshape(
+                            (moved.shape[0],
+                             moved.shape[1] * moved.shape[2])
+                            + moved.shape[3:])
+
+                    logits = lgs.reshape((-1,) + lgs.shape[2:])
+                    caches = jax.tree.map(merge, caches)
+                    return logits, caches
+            donate = ()
+            b_sh = batch_shardings(inputs["batch"], cfg, mesh, rules)
+            args = (param_specs, lora_specs, inputs["batch"])
+            in_sh = (p_sh, l_sh, b_sh)
+            if not cfg.encoder_only:
+                # the returned KV/SSM caches MUST be sharded like the
+                # decode step consumes them — without this, XLA picks a
+                # replicated layout (grok: 17 GiB/dev of output)
+                out_struct = jax.eval_shape(fn, *args)
+                cache_sh = batch_shardings(out_struct[1], cfg, mesh,
+                                           rules)
+                out_sh = (None, cache_sh)
+        else:
+            def fn(params, lora, caches, token, pos):
+                return model.decode_step(params, lora, caches, token, pos)
+            donate = (2,)
+            c_sh = batch_shardings(inputs["caches"], cfg, mesh, rules)
+            t_sh = batch_shardings(
+                {"token": inputs["token"], "pos": inputs["pos"]},
+                cfg, mesh, rules)
+            args = (param_specs, lora_specs, inputs["caches"],
+                    inputs["token"], inputs["pos"])
+            in_sh = (p_sh, l_sh, c_sh, t_sh["token"], t_sh["pos"])
+            out_sh = (None, c_sh)   # donation-aligned cache layout
+
+        if out_sh is not None:
+            jfn = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                          donate_argnums=donate)
+        else:
+            jfn = jax.jit(fn, in_shardings=in_sh, donate_argnums=donate)
+        lowered = jfn.lower(*args)
+        compiled = lowered.compile()
+    return compiled
+
+
+def _cost_of(compiled) -> Dict[str, float]:
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll = hlo_analysis.collective_bytes(hlo)
+    raw_bytes = float(cost.get("bytes accessed", 0.0))
+    over = float(hlo_analysis.slice_overcount(hlo))
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": raw_bytes,
+            "bytes_corrected": max(raw_bytes - over, 0.0),
+            "slice_overcount": over,
+            "coll": float(coll["total"]),
+            "coll_detail": coll}
+
+
+def calibrate_cost(base_cfg: ModelConfig, cell: ShapeCell, mesh, rules, *,
+                   block_kv: int, skip_masked_blocks: bool,
+                   remat: str) -> Dict[str, Any]:
+    """XLA's HLOCostAnalysis counts a while-loop body ONCE regardless of
+    trip count, so scanned programs under-report FLOPs/bytes by ~trip×.
+    Calibration: compile two reduced-depth variants of the same cell
+    (identical widths/shapes/mesh) with EVERY loop unrolled — layer
+    loop, attention KV-block loop (flash-style online-softmax traffic,
+    matching the Pallas kernel's HBM behavior), unchunked CE — fit
+    cost(L) = fixed + L·per_layer, extrapolate to the real depth.
+    Documented in EXPERIMENTS.md §Roofline."""
+    if base_cfg.family is Family.VLM:
+        step = base_cfg.cross_attn_every          # extrapolate in units
+        depths = (step, 2 * step)
+    else:
+        depths = (2, 4)
+    # keep the unrolled KV loop bounded: ≥8 blocks, ≤16 blocks
+    cal_block_kv = max(block_kv, cell.seq_len // 16) \
+        if cell.kind in ("train", "prefill") else block_kv
+    costs = []
+    for L in depths:
+        cfg_s = dataclasses.replace(
+            base_cfg, n_layers=L, scan_layers=False,
+            attn_impl="blockwise" if base_cfg.has_attention else "auto",
+            unroll_attn_blocks=True,
+            remat=remat if cell.kind == "train" else "none")
+        ce_chunk = cell.seq_len if cell.kind == "train" else 512
+        comp = _compile_cell(cfg_s, cell, mesh, rules,
+                             block_kv=cal_block_kv,
+                             skip_masked_blocks=skip_masked_blocks,
+                             ce_chunk=ce_chunk)
+        costs.append(_cost_of(comp))
+    l1, l2 = depths
+    full = base_cfg.n_layers
+    out = {}
+    for key in ("flops", "bytes", "bytes_corrected", "coll"):
+        per_layer = (costs[1][key] - costs[0][key]) / (l2 - l1)
+        fixed = costs[0][key] - l1 * per_layer
+        out[key] = max(fixed + full * per_layer, 0.0)
+        out[f"{key}_per_layer"] = per_layer
+        out[f"{key}_fixed"] = fixed
+    out["depths"] = depths
+    return out
+
+
+def lower_cell(arch: str, cell: ShapeCell, *, multi_pod: bool = False,
+               rules_override: Optional[ShardingRules] = None,
+               remat: str = "full", block_kv: int = 512,
+               skip_masked_blocks: bool = False,
+               verbose: bool = True, save: bool = True,
+               calibrate: bool = True, grad_accum: int = 0,
+               unroll_layers: bool = False, attn_f32: bool = True,
+               kv_cache_dtype: str = "", prefill_chunks: int = 1,
+               tag: str = "") -> Dict[str, Any]:
+    """Lower + compile one cell; returns the analysis record."""
+    t0 = time.time()
+    base_cfg = get_config(arch)
+    cfg = _cell_cfg(base_cfg, cell.kind, remat)
+    if unroll_layers:
+        cfg = dataclasses.replace(cfg, scan_layers=False)
+    if kv_cache_dtype:
+        cfg = dataclasses.replace(cfg, kv_cache_dtype=kv_cache_dtype)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = rules_for(cfg, mesh, cell.kind, base=rules_override)
+    if grad_accum <= 0:
+        grad_accum = default_grad_accum(cfg, cell)
+
+    compiled = _compile_cell(cfg, cell, mesh, rules, block_kv=block_kv,
+                             skip_masked_blocks=skip_masked_blocks,
+                             grad_accum=grad_accum,
+                             prefill_chunks=prefill_chunks)
+    t_compile = time.time() - t0
+    t_lower = 0.0
+
+    mem = compiled.memory_analysis()
+    raw = _cost_of(compiled)
+    coll = raw["coll_detail"]
+    n_dev = mesh.size
+
+    if calibrate and not multi_pod:
+        cal = calibrate_cost(cfg, cell, mesh, rules, block_kv=block_kv,
+                             skip_masked_blocks=skip_masked_blocks,
+                             remat=remat)
+        flops_dev, bytes_dev, coll_dev = cal["flops"], cal["bytes"], \
+            cal["coll"]
+        bytes_corr = cal["bytes_corrected"]
+    else:
+        cal = None
+        flops_dev, bytes_dev, coll_dev = raw["flops"], raw["bytes"], \
+            raw["coll"]
+        bytes_corr = raw["bytes_corrected"]
+
+    terms = hlo_analysis.roofline(flops_dev, bytes_dev, coll_dev, n_dev)
+    terms_corr = hlo_analysis.roofline(flops_dev, bytes_corr, coll_dev,
+                                       n_dev)
+    mf = hlo_analysis.model_flops(base_cfg, cell)
+
+    record = {
+        "arch": arch, "shape": cell.name, "kind": cell.kind,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": n_dev,
+        "tag": tag,
+        "seq_len": cell.seq_len, "global_batch": cell.global_batch,
+        "grad_accum": grad_accum,
+        "remat": cfg.remat if cell.kind == "train" else "none",
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_device_bytes": mem.argument_size_in_bytes
+            + mem.output_size_in_bytes + mem.temp_size_in_bytes
+            - mem.alias_size_in_bytes,
+        },
+        "cost": {"flops_per_device": flops_dev,
+                 "bytes_per_device": bytes_dev,
+                 "raw_flops_scan_module": raw["flops"],
+                 "raw_bytes_scan_module": raw["bytes"],
+                 "calibration": dict(cal) if cal else None},
+        "collectives": dict(coll, calibrated_total=coll_dev),
+        "roofline": terms.as_dict(),
+        # memory term with slice/DUS operand-overcount removed (the
+        # physical-traffic view; see hlo_analysis.slice_overcount)
+        "roofline_corrected": terms_corr.as_dict(),
+        "model_flops_total": mf,
+        "model_flops_per_device": mf / n_dev,
+        "useful_flops_ratio": (mf / n_dev) / max(flops_dev, 1.0),
+        "params_total": base_cfg.param_count(),
+        "params_active": base_cfg.active_param_count(),
+        "lora_params": base_cfg.lora_param_count(),
+    }
+
+    if verbose:
+        gb = 1024 ** 3
+        print(f"[{arch} × {cell.name} × {record['mesh']}]"
+              f"{' ' + tag if tag else ''}")
+        print(f"  lower {t_lower:.1f}s  compile {t_compile:.1f}s")
+        print(f"  memory_analysis: args "
+              f"{mem.argument_size_in_bytes / gb:.2f} GiB + temp "
+              f"{mem.temp_size_in_bytes / gb:.2f} GiB + out "
+              f"{mem.output_size_in_bytes / gb:.2f} GiB - alias "
+              f"{mem.alias_size_in_bytes / gb:.2f} GiB = peak "
+              f"{record['memory']['peak_device_bytes'] / gb:.2f} GiB/dev")
+        print(f"  cost_analysis: {flops_dev:.3e} FLOP/dev, "
+              f"{bytes_dev:.3e} B/dev")
+        print(f"  collectives: {coll['count']} ops, "
+              f"{coll['total'] / gb:.3f} GiB/dev "
+              f"(AR {coll['all-reduce'] / gb:.3f} AG "
+              f"{coll['all-gather'] / gb:.3f} RS "
+              f"{coll['reduce-scatter'] / gb:.3f} A2A "
+              f"{coll['all-to-all'] / gb:.3f} CP "
+              f"{coll['collective-permute'] / gb:.3f})")
+        r = record["roofline"]
+        print(f"  roofline: compute {r['compute_s'] * 1e3:.2f} ms | "
+              f"memory {r['memory_s'] * 1e3:.2f} ms | collective "
+              f"{r['collective_s'] * 1e3:.2f} ms -> {r['dominant']}-bound")
+        rc = record["roofline_corrected"]
+        print(f"  corrected (slice-overcount removed): memory "
+              f"{rc['memory_s'] * 1e3:.2f} ms -> {rc['dominant']}-bound")
+        print(f"  useful-FLOPs ratio {record['useful_flops_ratio']:.3f}")
+
+    if save:
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        suffix = f"_{tag}" if tag else ""
+        fn_out = os.path.join(
+            RESULTS_DIR,
+            f"{arch.replace('.', '_')}_{cell.name}_"
+            f"{record['mesh'].replace('x', '-')}{suffix}.json")
+        with open(fn_out, "w") as f:
+            json.dump(record, f, indent=1)
+    return record
+
+
+# --------------------------------------------------------------------------
+COMBINED_CELL = ShapeCell("combined_4k_32k", 4096, 64, "combined")
+
+
+def _compile_combined(cfg: ModelConfig, mesh, rules, *,
+                      grad_accum: int = 1, ce_chunk: int = 512):
+    engine = make_engine(cfg)
+    model = engine.model
+    train_cell = ShapeCell("combined_train", 4096, 64, "train")
+    decode_cell = ShapeCell("combined_decode", 32768, 128, "decode")
+
+    def fn(params, lora, opt_state, tb, caches, token, pos):
+        return engine.combined_step(params, lora, opt_state, tb, caches,
+                                    token, pos)
+
+    with sharding_context(mesh, rules):
+        param_specs = model.param_specs()
+        lora_specs = model.lora_specs()
+        opt_specs = jax.eval_shape(engine.optimizer.init, lora_specs)
+        tb = model.input_specs(train_cell)["batch"]
+        dc = model.input_specs(decode_cell)
+        p_sh = param_shardings(param_specs, cfg, mesh, rules)
+        l_sh = param_shardings(lora_specs, cfg, mesh, rules)
+        o_sh = param_shardings(opt_specs, cfg, mesh, rules)
+        tb_sh = batch_shardings(tb, cfg, mesh, rules)
+        c_sh = batch_shardings(dc["caches"], cfg, mesh, rules)
+        tk_sh = batch_shardings({"token": dc["token"], "pos": dc["pos"]},
+                                cfg, mesh, rules)
+        jfn = jax.jit(fn,
+                      in_shardings=(p_sh, l_sh, o_sh, tb_sh, c_sh,
+                                    tk_sh["token"], tk_sh["pos"]),
+                      out_shardings=(l_sh, o_sh, None, c_sh, None),
+                      donate_argnums=(1, 2, 4))
+        lowered = jfn.lower(param_specs, lora_specs, opt_specs, tb,
+                            dc["caches"], dc["token"], dc["pos"])
+        compiled = lowered.compile()
+    return compiled
+
+
+def lower_combined(arch: str, *, multi_pod: bool = False,
+                   verbose: bool = True, save: bool = True,
+                   calibrate: bool = True) -> Dict[str, Any]:
+    """Lower the paper's fused combined_step: a LoRA train microbatch
+    plus a decode batch over shared base weights in ONE XLA program."""
+    t0 = time.time()
+    base_cfg = get_config(arch)
+    cfg = dataclasses.replace(base_cfg, remat="full")
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = rules_for(cfg, mesh, "train")
+    compiled = _compile_combined(cfg, mesh, rules)
+
+    mem = compiled.memory_analysis()
+    raw = _cost_of(compiled)
+    coll = raw["coll_detail"]
+    if calibrate and not multi_pod:
+        depths = (2, 4)
+        costs = []
+        for L in depths:
+            cfg_s = dataclasses.replace(
+                cfg, n_layers=L, scan_layers=False,
+                attn_impl="blockwise", unroll_attn_blocks=True)
+            costs.append(_cost_of(_compile_combined(
+                cfg_s, mesh, rules, ce_chunk=4096)))
+        flops_dev, bytes_dev, coll_dev = (
+            max(costs[0][k] + (costs[1][k] - costs[0][k]) / 2
+                * (cfg.n_layers - 2), 0.0)
+            for k in ("flops", "bytes", "coll"))
+    else:
+        flops_dev, bytes_dev, coll_dev = raw["flops"], raw["bytes"], \
+            raw["coll"]
+    terms = hlo_analysis.roofline(flops_dev, bytes_dev, coll_dev,
+                                  mesh.size)
+    record = {
+        "arch": arch, "shape": COMBINED_CELL.name, "kind": "combined",
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": mesh.size,
+        "compile_s": round(time.time() - t0, 2),
+        "memory": {"argument_bytes": mem.argument_size_in_bytes,
+                   "temp_bytes": mem.temp_size_in_bytes,
+                   "output_bytes": mem.output_size_in_bytes,
+                   "alias_bytes": mem.alias_size_in_bytes,
+                   "peak_device_bytes": mem.argument_size_in_bytes
+                   + mem.output_size_in_bytes + mem.temp_size_in_bytes
+                   - mem.alias_size_in_bytes},
+        "cost": {"flops_per_device": flops_dev,
+                 "bytes_per_device": bytes_dev},
+        "collectives": coll,
+        "roofline": terms.as_dict(),
+    }
+    if verbose:
+        gb = 1024 ** 3
+        print(f"[{arch} × combined_step × {record['mesh']}] — the paper's "
+              f"model-sharing fusion")
+        print(f"  compile {record['compile_s']}s; peak "
+              f"{record['memory']['peak_device_bytes'] / gb:.2f} GiB/dev; "
+              f"{flops_dev:.3e} FLOP/dev; collectives "
+              f"{coll['total'] / gb:.3f} GiB/dev")
+        r = record["roofline"]
+        print(f"  roofline: compute {r['compute_s'] * 1e3:.2f} ms | memory "
+              f"{r['memory_s'] * 1e3:.2f} ms | collective "
+              f"{r['collective_s'] * 1e3:.2f} ms -> {r['dominant']}-bound")
+    if save:
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        fn_out = os.path.join(
+            RESULTS_DIR, f"{arch.replace('.', '_')}_combined_"
+            f"{record['mesh'].replace('x', '-')}.json")
+        with open(fn_out, "w") as f:
+            json.dump(record, f, indent=1)
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=[c.name for c in ALL_SHAPES])
+    ap.add_argument("--all-shapes", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="every runnable (arch × shape) cell")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--combined", action="store_true",
+                    help="lower the fused combined_step for --arch")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--remat", default="full",
+                    choices=["none", "full", "dots"])
+    ap.add_argument("--grad-accum", type=int, default=0,
+                    help="microbatches for train cells (0 = heuristic)")
+    ap.add_argument("--block-kv", type=int, default=512)
+    ap.add_argument("--skip-masked-blocks", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--no-save", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true",
+                    help="skip cells whose result JSON already exists")
+    args = ap.parse_args()
+
+    if args.list:
+        for arch in ARCH_IDS:
+            cfg = get_config(arch)
+            for cell, skip in applicable_shapes(cfg):
+                status = skip if skip else "runnable"
+                print(f"{arch:24s} {cell.name:12s} {status}")
+        return
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    def cells_for(arch: str):
+        cfg = get_config(arch)
+        for cell, skip in applicable_shapes(cfg):
+            if args.shape and cell.name != args.shape:
+                continue
+            if not args.shape and not (args.all_shapes or args.all):
+                continue
+            if skip:
+                print(f"[{arch} × {cell.name}] SKIPPED: {skip}")
+                continue
+            yield cell
+
+    archs = ARCH_IDS if args.all else ([args.arch] if args.arch else [])
+    if not archs:
+        ap.error("need --arch, --all, or --list")
+
+    failures = []
+    for arch in archs:
+        if args.combined:
+            for mp in meshes:
+                lower_combined(arch, multi_pod=mp, save=not args.no_save)
+            continue
+        for cell in cells_for(arch):
+            for mp in meshes:
+                if args.skip_existing:
+                    mesh_tag = "2-16-16" if mp else "16-16"
+                    suffix = f"_{args.tag}" if args.tag else ""
+                    path = os.path.join(
+                        RESULTS_DIR, f"{arch.replace('.', '_')}_"
+                        f"{cell.name}_{mesh_tag}{suffix}.json")
+                    if os.path.exists(path):
+                        print(f"[{arch} × {cell.name} × {mesh_tag}] cached")
+                        continue
+                try:
+                    lower_cell(arch, cell, multi_pod=mp, remat=args.remat,
+                               block_kv=args.block_kv,
+                               grad_accum=args.grad_accum,
+                               skip_masked_blocks=args.skip_masked_blocks,
+                               tag=args.tag, save=not args.no_save)
+                except Exception as e:
+                    failures.append((arch, cell.name, mp, repr(e)))
+                    traceback.print_exc()
+    if failures:
+        print("\nFAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

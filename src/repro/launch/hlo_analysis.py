@@ -1,0 +1,185 @@
+"""Compiled-HLO analysis: collective-traffic extraction + roofline terms.
+
+``collective_bytes`` parses the post-SPMD optimized HLO (per-device
+module) and sums the byte sizes of every collective op, bucketed by op
+kind.  ``roofline`` combines them with cost_analysis FLOPs/bytes and the
+TPU v5e hardware constants into the three assignment-mandated terms.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional, Tuple
+
+# TPU v5e per-chip constants (assignment-specified)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link (~3 usable links/chip v5e)
+ICI_LINKS = 3
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        nbytes = _DTYPE_BYTES.get(dtype)
+        if nbytes is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * nbytes
+    return total
+
+
+def slice_overcount(hlo_text: str) -> int:
+    """HLOCostAnalysis books the FULL operand of every (dynamic-)slice
+    and dynamic-update-slice, but the physical traffic is only the
+    slice/slot (in-place DUS, windowed reads).  Returns the per-device
+    byte overcount to subtract:
+
+      slice:  counted operand+output = full+slice; true ≈ 2·slice
+              ⇒ overcount = full − slice
+      DUS:    counted 2·full+update;   true ≈ 2·update
+              ⇒ overcount = 2·(full − update)
+    """
+    over = 0
+    for line in hlo_text.splitlines():
+        if "=" not in line:
+            continue
+        rhs = line.split("=", 1)[1]
+        m = re.search(r"\sdynamic-update-slice\(", rhs)
+        s = re.search(r"\s(dynamic-slice|slice)\(", rhs)
+        if m:
+            out_bytes = _shape_bytes(rhs.split("dynamic-update-slice")[0])
+            # update operand type appears inside the parens (2nd operand)
+            inner = rhs.split("dynamic-update-slice(", 1)[1]
+            shapes = _SHAPE_RE.findall(inner)
+            upd = 0
+            if len(shapes) >= 2:
+                d, dims = shapes[1]
+                nb = _DTYPE_BYTES.get(d, 0)
+                n = 1
+                for x in dims.split(","):
+                    if x:
+                        n *= int(x)
+                upd = n * nb
+            over += max(2 * (out_bytes - upd), 0)
+        elif s:
+            op = s.group(1)
+            out_bytes = _shape_bytes(rhs.split(op + "(")[0])
+            inner = rhs.split(op + "(", 1)[1]
+            shapes = _SHAPE_RE.findall(inner)
+            full = 0
+            if shapes:
+                d, dims = shapes[0]
+                nb = _DTYPE_BYTES.get(d, 0)
+                n = 1
+                for x in dims.split(","):
+                    if x:
+                        n *= int(x)
+                full = n * nb
+            over += max(full - out_bytes, 0)
+    return over
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-device bytes moved by each collective kind (output-type sums;
+    ``-start`` async forms counted once, ``-done`` skipped)."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        if "=" not in line:
+            continue
+        rhs = line.split("=", 1)[1]
+        for kind in _COLLECTIVES:
+            # match the opcode (not fused callees): " all-reduce(" etc.
+            if re.search(rf"\s{kind}(-start)?\(", rhs):
+                # the output type annotation precedes the opcode
+                prefix = rhs.split(f"{kind}", 1)[0]
+                nbytes = _shape_bytes(prefix)
+                out[kind] += nbytes
+                out["count"] += 1
+                break
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    n_devices: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def as_dict(self) -> Dict:
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "coll_bytes_per_device": self.coll_bytes_per_device,
+            "n_devices": self.n_devices,
+        }
+
+
+def roofline(flops_per_device: float, bytes_per_device: float,
+             coll_bytes_per_device: float, n_devices: int) -> RooflineTerms:
+    """The three terms, in seconds, for one step on one device (the SPMD
+    program is identical across devices, so per-device == per-chip)."""
+    return RooflineTerms(
+        compute_s=flops_per_device / PEAK_FLOPS,
+        memory_s=bytes_per_device / HBM_BW,
+        collective_s=coll_bytes_per_device / (ICI_BW * ICI_LINKS),
+        flops_per_device=flops_per_device,
+        bytes_per_device=bytes_per_device,
+        coll_bytes_per_device=coll_bytes_per_device,
+        n_devices=n_devices,
+    )
+
+
+def model_flops(cfg, cell) -> float:
+    """MODEL_FLOPS: 6·N·D for dense training (N = active params,
+    D = tokens); 2·N·D for inference-style forward passes; decode is per
+    generated token over the batch."""
+    n_active = cfg.active_param_count()
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        return 6.0 * n_active * tokens
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence + attention over the KV cache
+    tokens = cell.global_batch
+    attn = 0.0
+    if cfg.has_attention:
+        kv_len = cell.seq_len if cfg.sliding_window == 0 \
+            else min(cell.seq_len, cfg.sliding_window)
+        attn = (4.0 * cfg.n_heads * cfg.head_dim * kv_len) \
+            * cfg.n_layers * cell.global_batch
+    return 2.0 * n_active * tokens + attn

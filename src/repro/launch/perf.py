@@ -1,0 +1,150 @@
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+__doc__ = """Perf-iteration harness (§Perf of EXPERIMENTS.md).
+
+Re-lowers one (arch × shape) cell with a named change applied, prints
+the before/after roofline terms against the saved baseline JSON, and
+appends a structured entry to results/perf_log.jsonl.
+
+  python -m repro.launch.perf --arch llama3-8b --shape decode_32k \
+      --change rules=tp_only --hypothesis "..."
+
+Changes (comma-separate to stack):
+  rules=tp_only|fsdp_heavy      sharding-rule preset swap
+  block_kv=<int>                attention KV block size
+  grad_accum=<int>              train microbatching
+  remat=none|full|dots          activation checkpointing policy
+  skip_masked=1                 causal block skipping (triangular scan)
+  batch_data_only=1             activations batch-shard over data only
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+from typing import Dict
+
+from repro.configs.base import ALL_SHAPES
+from repro.configs.registry import ARCH_IDS
+from repro.launch.dryrun import RESULTS_DIR, lower_cell
+from repro.models.sharding import (
+    RULES_FSDP_HEAVY, RULES_TP_FSDP, RULES_TP_ONLY,
+)
+
+PERF_LOG = os.path.join(os.path.dirname(RESULTS_DIR), "perf_log.jsonl")
+
+PRESETS = {"tp_fsdp": RULES_TP_FSDP, "tp_only": RULES_TP_ONLY,
+           "fsdp_heavy": RULES_FSDP_HEAVY}
+
+
+def parse_changes(spec: str) -> Dict:
+    out: Dict = {}
+    if not spec:
+        return out
+    for part in spec.split(","):
+        k, _, v = part.partition("=")
+        out[k.strip()] = v.strip()
+    return out
+
+
+def apply_changes(changes: Dict) -> Dict:
+    kw: Dict = {}
+    rules = None
+    for k, v in changes.items():
+        if k == "rules":
+            rules = PRESETS[v]
+        elif k == "block_kv":
+            kw["block_kv"] = int(v)
+        elif k == "grad_accum":
+            kw["grad_accum"] = int(v)
+        elif k == "remat":
+            kw["remat"] = v
+        elif k == "skip_masked":
+            kw["skip_masked_blocks"] = bool(int(v))
+        elif k == "unroll_layers":
+            kw["unroll_layers"] = bool(int(v))
+        elif k == "kv8":
+            kw["kv_cache_dtype"] = "float8_e4m3fn"
+        elif k == "prefill_chunks":
+            kw["prefill_chunks"] = int(v)
+        elif k == "batch_data_only":
+            base = rules or RULES_TP_FSDP
+            rules = dataclasses.replace(base, batch="data",
+                                        kv_batch="data")
+        else:
+            raise ValueError(f"unknown change {k!r}")
+    if rules is not None:
+        kw["rules_override"] = rules
+    return kw
+
+
+def baseline_record(arch: str, shape: str, mesh: str = "16-16") -> Dict:
+    path = os.path.join(RESULTS_DIR,
+                        f"{arch.replace('.', '_')}_{shape}_{mesh}.json")
+    with open(path) as f:
+        return json.load(f)
+
+
+def compare(base: Dict, new: Dict) -> Dict:
+    out = {}
+    for term in ("compute_s", "memory_s", "collective_s"):
+        b, n = base["roofline"][term], new["roofline"][term]
+        out[term] = {"before": b, "after": n,
+                     "delta_pct": (n - b) / max(b, 1e-12) * 100}
+    out["bound_before"] = base["roofline"]["dominant"]
+    out["bound_after"] = new["roofline"]["dominant"]
+    out["peak_mem_gib"] = {
+        "before": base["memory"]["peak_device_bytes"] / 2 ** 30,
+        "after": new["memory"]["peak_device_bytes"] / 2 ** 30}
+    b_t = max(base["roofline"][t] for t in
+              ("compute_s", "memory_s", "collective_s"))
+    n_t = max(new["roofline"][t] for t in
+              ("compute_s", "memory_s", "collective_s"))
+    out["bound_time_speedup"] = b_t / max(n_t, 1e-12)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--shape", choices=[c.name for c in ALL_SHAPES],
+                    required=True)
+    ap.add_argument("--change", default="", help="see module docstring")
+    ap.add_argument("--hypothesis", default="")
+    ap.add_argument("--tag", default=None)
+    args = ap.parse_args()
+
+    cell = next(c for c in ALL_SHAPES if c.name == args.shape)
+    changes = parse_changes(args.change)
+    kw = apply_changes(changes)
+    tag = args.tag if args.tag is not None else \
+        args.change.replace("=", "").replace(",", "_") or "rerun"
+
+    base = baseline_record(args.arch, args.shape)
+    new = lower_cell(args.arch, cell, tag=tag, **kw)
+    cmp = compare(base, new)
+
+    print("\n=== perf iteration ===")
+    if args.hypothesis:
+        print(f"hypothesis: {args.hypothesis}")
+    print(f"change: {args.change or '(none)'}")
+    for term in ("compute_s", "memory_s", "collective_s"):
+        c = cmp[term]
+        print(f"  {term:14s} {c['before'] * 1e3:10.2f} -> "
+              f"{c['after'] * 1e3:10.2f} ms  ({c['delta_pct']:+6.1f}%)")
+    print(f"  bound: {cmp['bound_before']} -> {cmp['bound_after']}; "
+          f"bound-time speedup {cmp['bound_time_speedup']:.2f}x; peak mem "
+          f"{cmp['peak_mem_gib']['before']:.1f} -> "
+          f"{cmp['peak_mem_gib']['after']:.1f} GiB")
+
+    entry = {"ts": time.time(), "arch": args.arch, "shape": args.shape,
+             "change": args.change, "hypothesis": args.hypothesis,
+             "comparison": cmp, "tag": tag}
+    with open(PERF_LOG, "a") as f:
+        f.write(json.dumps(entry) + "\n")
+
+
+if __name__ == "__main__":
+    main()

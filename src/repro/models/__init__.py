@@ -1,0 +1,5 @@
+from repro.models.model import Model, build  # noqa: F401
+from repro.models.sharding import (  # noqa: F401
+    RULES_FSDP_HEAVY, RULES_TP_FSDP, RULES_TP_ONLY, ShardingRules,
+    sharding_context, shard,
+)

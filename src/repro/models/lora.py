@@ -1,0 +1,78 @@
+"""LoRA adapter parameter trees — the paper's unified PEFT interface.
+
+The same adapter tree is consumed by the training step (gradients flow
+only into it), the inference step (fused low-rank bypass), and the FL
+aggregation (Eq. 5 FedAvg over the (A, B) matrices).  Base weights are
+frozen and shared — this is CoLLM's model-sharing mechanism made literal.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def target_dims(cfg: ModelConfig) -> Dict[str, Tuple[int, int]]:
+    d, h = cfg.d_model, cfg.head_dim
+    dims = {
+        "q": (d, cfg.n_heads * h),
+        "k": (d, cfg.n_kv_heads * h),
+        "v": (d, cfg.n_kv_heads * h),
+        "o": (cfg.n_heads * h, d),
+    }
+    if cfg.d_ff > 0:
+        dims.update({"gate": (d, cfg.d_ff), "up": (d, cfg.d_ff),
+                     "down": (cfg.d_ff, d)})
+    if cfg.has_ssm:
+        dims.update({
+            "ssm_in": (d, 2 * cfg.ssm_d_inner + 2 * cfg.ssm_state
+                       + cfg.ssm_n_heads),
+            "ssm_out": (cfg.ssm_d_inner, d),
+        })
+    return dims
+
+
+def init_lora(key, cfg: ModelConfig, stacked: int) -> Dict:
+    """One (a, b) pair per target, stacked over ``stacked`` layers.
+    a ~ N(0, 1/din), b = 0 (standard LoRA init -> adapter starts as no-op).
+    """
+    dims = target_dims(cfg)
+    r = cfg.lora.rank
+    dtype = jnp.float32  # adapters train in f32 (tiny)
+    out = {}
+    keys = jax.random.split(key, len(cfg.lora.targets))
+    for tk, t in zip(keys, cfg.lora.targets):
+        if t not in dims:
+            continue
+        din, dout = dims[t]
+        a = (jax.random.normal(tk, (stacked, din, r), jnp.float32)
+             / math.sqrt(din)).astype(dtype)
+        b = jnp.zeros((stacked, r, dout), dtype)
+        out[t] = {"a": a, "b": b}
+    return out
+
+
+def apply(x: jax.Array, base_out: jax.Array, pair: Optional[Dict],
+          scaling: float) -> jax.Array:
+    """base_out + scaling * (x @ A) @ B — the low-rank bypass."""
+    if pair is None:
+        return base_out
+    a = pair["a"].astype(x.dtype)
+    b = pair["b"].astype(x.dtype)
+    return base_out + ((x @ a) @ b) * scaling
+
+
+def merge_into(base_w: jax.Array, pair: Dict, scaling: float) -> jax.Array:
+    """W' = W + scaling * A @ B (offline merge; used by the 'Separate'
+    baseline that redeploys merged weights after training)."""
+    return (base_w.astype(jnp.float32)
+            + scaling * pair["a"].astype(jnp.float32)
+            @ pair["b"].astype(jnp.float32)).astype(base_w.dtype)
+
+
+def num_params(lora_tree: Dict) -> int:
+    return sum(x.size for x in jax.tree.leaves(lora_tree))

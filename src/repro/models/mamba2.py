@@ -1,0 +1,221 @@
+"""Mamba2 SSD (state-space duality) mixer in pure JAX.
+
+Implements the chunked SSD algorithm (Dao & Gu, arXiv:2405.21060): the
+sequence is split into chunks; within a chunk the recurrence is computed as
+a masked (decay-weighted) attention-like quadratic form, and chunk-final
+states are propagated with a ``lax.scan`` — O(S·Q) instead of O(S²).
+
+Shapes follow the minimal SSD formulation with a single B/C group:
+  x:  [Bt, S, H, P]     (P = head dim)
+  dt: [Bt, S, H]        (softplus-ed timestep, >0)
+  A:  [H]               (negative decay rate, from -exp(A_log))
+  B:  [Bt, S, N]        (input  projection of state, N = d_state)
+  C:  [Bt, S, N]        (output projection of state)
+
+Decode maintains state [Bt, H, P, N] with O(1) per-token updates — the
+reason mamba2/hymba run the long_500k cell.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, rms_norm
+from repro.models.sharding import shard
+
+
+class SSMParams(NamedTuple):
+    in_proj: jax.Array    # [D, 2*d_inner + 2*N + H]
+    out_proj: jax.Array   # [d_inner, D]
+    conv_w: jax.Array     # [W, d_inner + 2*N]
+    conv_b: jax.Array     # [d_inner + 2*N]
+    A_log: jax.Array      # [H]
+    D_skip: jax.Array     # [H]
+    dt_bias: jax.Array    # [H]
+    norm: jax.Array       # [d_inner] gated RMSNorm scale
+
+
+def init_ssm(key, cfg: ModelConfig) -> SSMParams:
+    d, di, n, h = cfg.d_model, cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_n_heads
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    return SSMParams(
+        in_proj=dense_init(ks[0], d, 2 * di + 2 * n + h, dtype),
+        out_proj=dense_init(ks[1], di, d, dtype),
+        conv_w=(jax.random.normal(ks[2], (cfg.ssm_conv_width, di + 2 * n),
+                                  jnp.float32) * 0.1).astype(dtype),
+        conv_b=jnp.zeros((di + 2 * n,), dtype),
+        A_log=jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        D_skip=jnp.ones((h,), jnp.float32),
+        dt_bias=jnp.log(jnp.expm1(jnp.full((h,), 0.01))).astype(jnp.float32),
+        norm=jnp.ones((di,), dtype),
+    )
+
+
+def _split_in_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    di, n, h = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_n_heads
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)
+    return z, xbc, dt  # gate [.., di], conv-in [.., di+2N], dt [.., H]
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """Depthwise causal conv1d.  xbc: [Bt,S,C]; w: [W,C].
+
+    Returns (out [Bt,S,C], new_state [Bt,W-1,C]).
+    """
+    width = w.shape[0]
+    if state is None:
+        state = jnp.zeros((xbc.shape[0], width - 1, xbc.shape[-1]), xbc.dtype)
+    xext = jnp.concatenate([state, xbc], axis=1)
+    out = sum(xext[:, i:i + xbc.shape[1]] * w[i] for i in range(width))
+    new_state = xext[:, xext.shape[1] - (width - 1):]
+    return jax.nn.silu(out + b), new_state
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int,
+                init_state: Optional[jax.Array] = None):
+    """Chunked SSD scan.  Returns (y [Bt,S,H,P], final_state [Bt,H,P,N])."""
+    bt, s, h, p = x.shape
+    n = B.shape[-1]
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    q = chunk
+    xc = x.reshape(bt, nc, q, h, p).astype(jnp.float32)
+    dtc = dt.reshape(bt, nc, q, h).astype(jnp.float32)
+    Bc = B.reshape(bt, nc, q, n).astype(jnp.float32)
+    Cc = C.reshape(bt, nc, q, n).astype(jnp.float32)
+
+    da = dtc * A[None, None, None, :]                  # [Bt,nc,q,H] (<0)
+    cum = jnp.cumsum(da, axis=2)                       # within-chunk cumsum
+    seg_total = cum[:, :, -1, :]                       # [Bt,nc,H]
+
+    # ---- intra-chunk (quadratic attention-like) term ----------------------
+    # L[i,j] = exp(cum[i]-cum[j]) for i>=j
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # [Bt,nc,q,q,H]
+    ii = jnp.arange(q)
+    causal = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+    Lmat = jnp.where(causal, jnp.exp(diff), 0.0)
+    cb = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)             # [Bt,nc,q,q]
+    scores = cb[..., None] * Lmat * dtc[:, :, None, :, :]  # [Bt,nc,i,j,H]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores, xc)
+
+    # ---- chunk-final states -------------------------------------------------
+    decay_to_end = jnp.exp(seg_total[:, :, None, :] - cum)  # [Bt,nc,q,H]
+    # state_c = sum_j decay_to_end[j] * dt[j] * B[j] (x) x[j]
+    states = jnp.einsum("bcjh,bcjn,bcjhp->bchpn",
+                        decay_to_end * dtc, Bc, xc)         # [Bt,nc,H,P,N]
+
+    # ---- inter-chunk scan ---------------------------------------------------
+    if init_state is None:
+        init_state = jnp.zeros((bt, h, p, n), jnp.float32)
+
+    def body(prev, xs):
+        st, seg = xs                                       # [Bt,H,P,N],[Bt,H]
+        new = st + prev * jnp.exp(seg)[:, :, None, None]
+        return new, prev                                   # emit state *before* chunk
+
+    final, prev_states = lax.scan(
+        body, init_state.astype(jnp.float32),
+        (states.swapaxes(0, 1), seg_total.swapaxes(0, 1)))
+    prev_states = prev_states.swapaxes(0, 1)               # [Bt,nc,H,P,N]
+
+    # ---- inter-chunk contribution ------------------------------------------
+    y_inter = jnp.einsum("bcin,bchpn->bcihp",
+                         Cc, prev_states) * jnp.exp(cum)[..., None]
+    y = (y_intra + y_inter).reshape(bt, nc * q, h, p)[:, :s]
+    return y.astype(x.dtype), final
+
+
+def ssd_decode_step(state, x_t, dt_t, A, B_t, C_t):
+    """One-token SSD recurrence.  state: [Bt,H,P,N]; x_t: [Bt,H,P];
+    dt_t: [Bt,H]; B_t/C_t: [Bt,N].  Returns (y_t [Bt,H,P], new_state)."""
+    da = dt_t * A[None, :]                                  # [Bt,H]
+    decay = jnp.exp(da)[:, :, None, None]
+    inject = jnp.einsum("bh,bn,bhp->bhpn", dt_t, B_t, x_t)
+    new_state = state * decay + inject
+    y = jnp.einsum("bhpn,bn->bhp", new_state, C_t)
+    return y, new_state
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array   # [Bt, W-1, d_inner+2N]
+    state: jax.Array  # [Bt, H, P, N]
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32,
+                   stacked: int = 0) -> SSMCache:
+    di, n, h, p = (cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_n_heads,
+                   cfg.ssm_head_dim)
+    lead = (stacked,) if stacked else ()
+    return SSMCache(
+        conv=jnp.zeros(lead + (batch, cfg.ssm_conv_width - 1, di + 2 * n),
+                       dtype),
+        state=jnp.zeros(lead + (batch, h, p, n), jnp.float32),
+    )
+
+
+def ssm_mixer(params: SSMParams, x: jax.Array, cfg: ModelConfig,
+              cache: Optional[SSMCache] = None, lora=None
+              ) -> Tuple[jax.Array, Optional[SSMCache]]:
+    """Full Mamba2 mixer: in_proj -> conv -> SSD -> gated norm -> out_proj.
+
+    x: [Bt,S,D].  With ``cache`` and S==1 runs the O(1) decode path.
+    ``lora``: optional dict with "ssm_in"/"ssm_out" LoRA pairs (a, b).
+    """
+    di, n, h = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_n_heads
+    p = cfg.ssm_head_dim
+    A = -jnp.exp(params.A_log.astype(jnp.float32))
+
+    zxbcdt = x @ params.in_proj
+    if lora is not None and "ssm_in" in lora:
+        a = lora["ssm_in"]["a"].astype(x.dtype)
+        b = lora["ssm_in"]["b"].astype(x.dtype)
+        zxbcdt = zxbcdt + ((x @ a) @ b) * cfg.lora.scaling
+    z, xbc, dt_raw = _split_in_proj(cfg, zxbcdt)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params.dt_bias.astype(jnp.float32))
+
+    decode = cache is not None and x.shape[1] == 1
+    xbc_conv, new_conv = _causal_conv(
+        xbc, params.conv_w, params.conv_b,
+        cache.conv if cache is not None else None)
+    xs, B, C = jnp.split(xbc_conv, [di, di + n], axis=-1)
+    xs = shard(xs, "batch", "seq", "ssm_inner")
+    bt, s = xs.shape[0], xs.shape[1]
+    xh = xs.reshape(bt, s, h, p)
+
+    if decode:
+        y, new_state = ssd_decode_step(
+            cache.state, xh[:, 0].astype(jnp.float32), dt[:, 0], A,
+            B[:, 0].astype(jnp.float32), C[:, 0].astype(jnp.float32))
+        y = y[:, None]
+        new_cache = SSMCache(conv=new_conv, state=new_state)
+    else:
+        y, final = ssd_chunked(xh, dt, A, B.astype(jnp.float32),
+                               C.astype(jnp.float32), cfg.ssm_chunk,
+                               init_state=cache.state if cache else None)
+        # always return the cache: prefill needs the final state + conv tail
+        new_cache = SSMCache(conv=new_conv, state=final)
+
+    y = y + xh.astype(jnp.float32) * params.D_skip[None, None, :, None]
+    y = y.reshape(bt, s if not decode else 1, di).astype(x.dtype)
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 params.norm)
+    out = y @ params.out_proj
+    if lora is not None and "ssm_out" in lora:
+        a = lora["ssm_out"]["a"].astype(y.dtype)
+        b = lora["ssm_out"]["b"].astype(y.dtype)
+        out = out + ((y @ a) @ b) * cfg.lora.scaling
+    return out, new_cache

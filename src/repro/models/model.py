@@ -1,0 +1,363 @@
+"""Unified model: one ``Model`` object per ModelConfig, covering all five
+assigned families with the same public surface:
+
+  init(key) -> params                       init_lora(key) -> adapters
+  forward_loss(params, lora, batch)         (training objective)
+  prefill(params, lora, batch)              -> (logits_last, caches)
+  decode_step(params, lora, caches, token, pos) -> (logits, caches)
+  init_caches(batch, seq)                   (KV / SSM / cross-KV caches)
+  input_specs(cell)                         ShapeDtypeStruct stand-ins
+
+Layer stacks run through ``jax.lax.scan`` over stacked params so compile
+time and HLO size are O(1) in depth (grok's 64 layers and the VLM's 100
+layers compile like a 1-layer model).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import Family, ModelConfig, ShapeCell
+from repro.models import lora as lora_lib
+from repro.models import mamba2, transformer as tfm
+from repro.models.layers import dense_init, rms_norm, rope_tables
+from repro.models.sharding import shard
+
+
+# ------------------------------------------------------------------ loss ---
+def chunked_ce_loss(hidden: jax.Array, head: jax.Array, labels: jax.Array,
+                    mask: jax.Array, chunk: int = 512
+                    ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Cross-entropy over a vocab head without materializing [B,S,V] f32:
+    scans seq chunks, rematerializing logits in the backward pass."""
+    b, s, d = hidden.shape
+    chunk = min(chunk, s)
+    nc = s // chunk
+    rem = s - nc * chunk
+
+    def chunk_loss(h, y, m):
+        logits = (h @ head).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
+        return jnp.sum((logz - ll) * m), jnp.sum(m)
+
+    chunk_loss = jax.checkpoint(chunk_loss)
+
+    def body(carry, xs):
+        tot, cnt = carry
+        l, c = chunk_loss(*xs)
+        return (tot + l, cnt + c), None
+
+    hs = hidden[:, :nc * chunk].reshape(b, nc, chunk, d).swapaxes(0, 1)
+    ys = labels[:, :nc * chunk].reshape(b, nc, chunk).swapaxes(0, 1)
+    ms = mask[:, :nc * chunk].reshape(b, nc, chunk).swapaxes(0, 1)
+    (tot, cnt), _ = lax.scan(body, (jnp.zeros((), jnp.float32),
+                                    jnp.zeros((), jnp.float32)), (hs, ys, ms))
+    if rem:
+        l, c = chunk_loss(hidden[:, nc * chunk:], labels[:, nc * chunk:],
+                          mask[:, nc * chunk:])
+        tot, cnt = tot + l, cnt + c
+    loss = tot / jnp.maximum(cnt, 1.0)
+    return loss, {"loss_sum": tot, "token_count": cnt}
+
+
+def _scan_or_loop(body, init, xs):
+    """Unrolled drop-in for lax.scan over stacked-leading-dim xs trees.
+    Used by cost-calibration compiles (scan_layers=False): XLA's
+    HLOCostAnalysis counts a while-loop body once regardless of trip
+    count, so the dry-run measures FLOPs on unrolled small-depth
+    variants and extrapolates (see launch/dryrun.py)."""
+    length = jax.tree.leaves(xs)[0].shape[0]
+    carry = init
+    ys = []
+    for i in range(length):
+        xi = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, xi)
+        ys.append(y)
+    stacked = jax.tree.map(lambda *leaves: jnp.stack(leaves), *ys)
+    return carry, stacked
+
+
+# ----------------------------------------------------------------- model ---
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # --------------------------------------------------------------- init --
+    def init(self, key) -> Dict:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.param_dtype)
+        k_embed, k_blocks, k_cross, k_head = jax.random.split(key, 4)
+        params: Dict[str, Any] = {}
+        params["embed"] = dense_init(k_embed, cfg.vocab_size, cfg.d_model,
+                                     dtype, scale=1.0)
+        if cfg.family is Family.VLM:
+            units, per = self._vlm_shape()
+            bkeys = jax.random.split(k_blocks, units * per).reshape(
+                units, per)
+            params["blocks"] = jax.vmap(jax.vmap(
+                lambda k: tfm.init_block(k, cfg)))(bkeys)
+            ckeys = jax.random.split(k_cross, units)
+            params["cross"] = jax.vmap(
+                lambda k: tfm.init_cross_block(k, cfg))(ckeys)
+        else:
+            bkeys = jax.random.split(k_blocks, cfg.n_layers)
+            params["blocks"] = jax.vmap(
+                lambda k: tfm.init_block(k, cfg))(bkeys)
+        params["final_norm"] = jnp.ones((cfg.d_model,), dtype)
+        params["lm_head"] = dense_init(k_head, cfg.d_model, cfg.vocab_size,
+                                       dtype)
+        return params
+
+    def init_lora(self, key) -> Dict:
+        cfg = self.cfg
+        if cfg.family is Family.VLM:
+            units, per = self._vlm_shape()
+            tree = lora_lib.init_lora(key, cfg, units * per)
+            return jax.tree.map(
+                lambda x: x.reshape((units, per) + x.shape[1:]), tree)
+        return lora_lib.init_lora(key, cfg, cfg.n_layers)
+
+    def _vlm_shape(self) -> Tuple[int, int]:
+        cfg = self.cfg
+        units = cfg.n_layers // cfg.cross_attn_every
+        per = cfg.cross_attn_every - 1
+        return units, per
+
+    # ------------------------------------------------------------ forward --
+    def _embed(self, params, batch) -> jax.Array:
+        cfg = self.cfg
+        if cfg.encoder_only and "embeds" in batch:
+            x = batch["embeds"].astype(jnp.dtype(cfg.dtype))
+        else:
+            x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        return shard(x, "batch", "act_seq", "embed")
+
+    def hidden_states(self, params, lora, batch, *, collect_caches=False,
+                      block_kv: int = 512, skip_masked_blocks: bool = False):
+        """Full-sequence forward.  Returns (hidden, caches|None, aux)."""
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        s = x.shape[1]
+        rope_cs = rope_tables(jnp.arange(s), cfg.head_dim, cfg.rope_theta) \
+            if cfg.has_attention else None
+
+        def body_fn(xc, xs):
+            bp, lslice = xs
+            y, (kv, ssm_final, aux) = tfm.block_full(
+                bp, xc, cfg, rope_cs, lora=lslice, block_kv=block_kv,
+                skip_masked_blocks=skip_masked_blocks)
+            outs = (kv, ssm_final, aux) if collect_caches else (None, None, aux)
+            return y, outs
+
+        body_fn = tfm.remat_wrap(body_fn, cfg)
+        scan = _scan_or_loop if not cfg.scan_layers else lax.scan
+
+        if cfg.family is Family.VLM:
+            vis = batch["vision"].astype(x.dtype)
+            units, per = self._vlm_shape()
+
+            def unit_fn(xc, xs):
+                ublocks, ulora, ucross = xs
+
+                def inner(xc2, xs2):
+                    return body_fn(xc2, xs2)
+
+                xc, outs = scan(inner, xc, (ublocks, ulora))
+                vkv = tfm.vision_kv(ucross["attn"], vis, cfg)
+                xc = tfm.cross_block(ucross, xc, vkv, cfg)
+                couts = (vkv if collect_caches else None)
+                return xc, (outs, couts)
+
+            x, (outs, cross_kv) = scan(
+                unit_fn, x, (params["blocks"], lora, params["cross"]))
+            kvs, ssm_finals, auxs = outs
+            aux = jnp.sum(auxs)
+            caches = None
+            if collect_caches:
+                caches = {"kv": kvs, "cross_kv": cross_kv}
+        else:
+            x, (kvs, ssm_finals, auxs) = scan(
+                body_fn, x, (params["blocks"], lora))
+            aux = jnp.sum(auxs)
+            caches = None
+            if collect_caches:
+                caches = {}
+                if cfg.has_attention:
+                    caches["kv"] = kvs
+                if cfg.has_ssm:
+                    caches["ssm"] = ssm_finals  # stacked {"conv","state"}
+        hidden = rms_norm(x, params["final_norm"])
+        return hidden, caches, aux
+
+    # --------------------------------------------------------------- loss --
+    def forward_loss(self, params, lora, batch, *, ce_chunk: int = 512,
+                     block_kv: int = 512, skip_masked_blocks: bool = False):
+        hidden, _, aux = self.hidden_states(
+            params, lora, batch, block_kv=block_kv,
+            skip_masked_blocks=skip_masked_blocks)
+        loss, metrics = chunked_ce_loss(
+            hidden, params["lm_head"], batch["labels"],
+            batch["mask"].astype(jnp.float32), chunk=ce_chunk)
+        metrics["aux_loss"] = aux
+        total = loss + 0.01 * aux
+        metrics["ce_loss"] = loss
+        return total, metrics
+
+    def logits(self, params, lora, batch):
+        """Full-vocab logits for the whole sequence (smoke-scale only)."""
+        hidden, _, _ = self.hidden_states(params, lora, batch)
+        return hidden @ params["lm_head"]
+
+    # ------------------------------------------------------------- caches --
+    def init_caches(self, batch: int, seq: int, dtype=None) -> Dict:
+        cfg = self.cfg
+        dtype = dtype or jnp.dtype(cfg.kv_cache_dtype or cfg.dtype)
+        hd, hkv = cfg.head_dim, cfg.n_kv_heads
+        caches: Dict[str, Any] = {}
+        if cfg.family is Family.VLM:
+            units, per = self._vlm_shape()
+            caches["kv"] = (
+                jnp.zeros((units, per, batch, seq, hkv, hd), dtype),
+                jnp.zeros((units, per, batch, seq, hkv, hd), dtype))
+            caches["cross_kv"] = (
+                jnp.zeros((units, batch, cfg.vision_tokens, hkv, hd), dtype),
+                jnp.zeros((units, batch, cfg.vision_tokens, hkv, hd), dtype))
+            return caches
+        if cfg.has_attention:
+            # sliding-window archs keep a ring buffer of window size —
+            # this is what makes the long_500k hymba cell fit (21 GB of
+            # flat cache would not).
+            kv_seq = seq if cfg.sliding_window == 0 \
+                else min(seq, cfg.sliding_window)
+            caches["kv"] = (
+                jnp.zeros((cfg.n_layers, batch, kv_seq, hkv, hd), dtype),
+                jnp.zeros((cfg.n_layers, batch, kv_seq, hkv, hd), dtype))
+        if cfg.has_ssm:
+            c = mamba2.init_ssm_cache(cfg, batch, dtype,
+                                      stacked=cfg.n_layers)
+            caches["ssm"] = c._asdict()
+        return caches
+
+    # -------------------------------------------------------------- prefill -
+    def prefill(self, params, lora, batch, *, block_kv: int = 512,
+                skip_masked_blocks: bool = False):
+        """Process the prompt; returns (last-token logits, caches)."""
+        cfg = self.cfg
+        hidden, caches, _ = self.hidden_states(
+            params, lora, batch, collect_caches=True, block_kv=block_kv,
+            skip_masked_blocks=skip_masked_blocks)
+        logits = hidden[:, -1:] @ params["lm_head"]
+        out_caches: Dict[str, Any] = {}
+        if caches and caches.get("kv") is not None:
+            out_caches["kv"] = caches["kv"]
+        if caches and caches.get("cross_kv") is not None:
+            out_caches["cross_kv"] = caches["cross_kv"]
+        if cfg.has_ssm and caches and caches.get("ssm") is not None:
+            out_caches["ssm"] = caches["ssm"]  # conv tail + final SSD state
+        return logits, out_caches
+
+    # --------------------------------------------------------------- decode -
+    def decode_step(self, params, lora, caches, token, pos):
+        """One decode step.  token: [B,1] int32; pos: scalar int32 (next
+        write position).  Returns (logits [B,1,V], updated caches)."""
+        cfg = self.cfg
+        x = jnp.take(params["embed"], token, axis=0)
+        x = shard(x, "batch", None, "embed")
+        rope_cs = None
+        if cfg.has_attention:
+            rope_cs = rope_tables(pos[None] if jnp.ndim(pos) == 0
+                                  else jnp.asarray(pos),
+                                  cfg.head_dim, cfg.rope_theta)
+
+        scan = _scan_or_loop if not cfg.scan_layers else lax.scan
+
+        if cfg.family is Family.VLM:
+            units, per = self._vlm_shape()
+
+            def unit_fn(xc, xs):
+                ublocks, ulora, ucross, ukv, uckv = xs
+
+                def inner(xc2, xs2):
+                    bp, lsl, kvl = xs2
+                    y, nc = tfm.block_decode(bp, xc2, cfg, {"kv": kvl},
+                                             pos, rope_cs, lora=lsl)
+                    return y, nc["kv"]
+
+                xc, new_kv = scan(inner, xc, (ublocks, ulora, ukv))
+                xc = tfm.cross_block(ucross, xc, uckv, cfg)
+                return xc, new_kv
+
+            x, new_kv = scan(
+                unit_fn, x, (params["blocks"], lora, params["cross"],
+                             caches["kv"], caches["cross_kv"]))
+            new_caches = {"kv": new_kv, "cross_kv": caches["cross_kv"]}
+        else:
+            def body(xc, xs):
+                bp, lsl, cache_l = xs
+                y, nc = tfm.block_decode(bp, xc, cfg, cache_l, pos,
+                                         rope_cs, lora=lsl)
+                return y, nc
+
+            cache_tree = {}
+            if cfg.has_attention:
+                cache_tree["kv"] = caches["kv"]
+            if cfg.has_ssm:
+                cache_tree["ssm"] = caches["ssm"]
+            x, new_caches = scan(body, x,
+                                 (params["blocks"], lora, cache_tree))
+        hidden = rms_norm(x, params["final_norm"])
+        logits = hidden @ params["lm_head"]
+        return logits, new_caches
+
+    # ---------------------------------------------------------- input specs -
+    def input_specs(self, cell: ShapeCell) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every model input of a cell —
+        weak-type-correct, shardable, no device allocation."""
+        cfg = self.cfg
+        b, s = cell.global_batch, cell.seq_len
+        i32 = jnp.int32
+        act = jnp.dtype(cfg.dtype)
+        sds = jax.ShapeDtypeStruct
+        if cell.kind == "train":
+            batch = {}
+            if cfg.encoder_only:
+                batch["embeds"] = sds((b, s, cfg.d_model), act)
+            else:
+                batch["tokens"] = sds((b, s), i32)
+            batch["labels"] = sds((b, s), i32)
+            batch["mask"] = sds((b, s), jnp.float32)
+            if cfg.family is Family.VLM:
+                batch["vision"] = sds((b, cfg.vision_tokens, cfg.d_model), act)
+            return {"batch": batch}
+        if cell.kind == "prefill":
+            batch = {}
+            if cfg.encoder_only:
+                batch["embeds"] = sds((b, s, cfg.d_model), act)
+            else:
+                batch["tokens"] = sds((b, s), i32)
+            if cfg.family is Family.VLM:
+                batch["vision"] = sds((b, cfg.vision_tokens, cfg.d_model), act)
+            return {"batch": batch}
+        # decode: one new token against caches of length seq
+        caches = jax.eval_shape(lambda: self.init_caches(b, s))
+        return {
+            "caches": caches,
+            "token": sds((b, 1), i32),
+            "pos": sds((), i32),
+        }
+
+    def param_specs(self) -> Dict:
+        return jax.eval_shape(lambda: self.init(jax.random.key(0)))
+
+    def lora_specs(self) -> Dict:
+        return jax.eval_shape(lambda: self.init_lora(jax.random.key(0)))
+
+
+def build(cfg: ModelConfig) -> Model:
+    return Model(cfg)

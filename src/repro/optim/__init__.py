@@ -1,0 +1,4 @@
+from repro.optim.adamw import AdamW, AdamWState, cosine_schedule, global_norm  # noqa: F401
+from repro.optim.grad_noise import (  # noqa: F401
+    NoiseScaleEMA, noise_scale_from_microbatches,
+)

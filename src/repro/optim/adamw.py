@@ -1,0 +1,87 @@
+"""AdamW in pure JAX (no optax in this container) with the optax-style
+(init, update) interface, plus gradient clipping and schedules.
+
+State is a pytree mirroring the params (m, v in f32) so it shards with
+the same rules as the parameters (FSDP-friendly).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jax.Array], jax.Array] | float = 1e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: float = 1.0
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            m=jax.tree.map(zeros, params),
+            v=jax.tree.map(zeros, params),
+        )
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else jnp.float32(self.lr)
+
+    def update(self, grads, state: AdamWState, params
+               ) -> Tuple[Any, AdamWState, dict]:
+        step = state.step + 1
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-9)) \
+            if self.clip_norm > 0 else jnp.float32(1.0)
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+        m = jax.tree.map(lambda mm, g: self.b1 * mm + (1 - self.b1) * g,
+                         state.m, grads)
+        v = jax.tree.map(lambda vv, g: self.b2 * vv + (1 - self.b2) * g * g,
+                         state.v, grads)
+        bc1 = 1 - self.b1 ** step.astype(jnp.float32)
+        bc2 = 1 - self.b2 ** step.astype(jnp.float32)
+        lr = self._lr(step)
+
+        def upd(p, mm, vv):
+            mhat = mm / bc1
+            vhat = vv / bc2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if self.weight_decay > 0:
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            return (-lr * delta).astype(p.dtype)
+
+        updates = jax.tree.map(upd, params, m, v)
+        new_params = jax.tree.map(lambda p, u: p + u, params, updates)
+        metrics = {"grad_norm": gnorm, "lr": lr}
+        return new_params, AdamWState(step=step, m=m, v=v), metrics
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    if not leaves:
+        return jnp.float32(0.0)
+    return jnp.sqrt(sum(leaves))
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    min_frac: float = 0.1) -> Callable:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, base_lr * cos)
+    return lr

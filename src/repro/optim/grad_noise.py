@@ -1,0 +1,53 @@
+"""Gradient noise scale (McCandlish et al., arXiv:1812.06162).
+
+CoLLM's Coordinator uses the noise scale ``p_t`` inside the EFFICIENCY
+term (Eq. 8) to penalize over-large training batches.  The simple (B_small,
+B_big) estimator: with per-microbatch gradients g_i and their mean g,
+
+  S = (B_big*|g_big|² - B_small*|g_small|²) / (B_big - B_small)   (signal)
+  Σ = (|g_small|² - |g_big|²) / (1/B_small - 1/B_big)             (noise)
+  B_noise = Σ / S
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import global_norm
+
+
+def noise_scale_from_microbatches(micro_grads_sqnorm: jax.Array,
+                                  mean_grad_sqnorm: jax.Array,
+                                  micro_batch: int, n_micro: int
+                                  ) -> jax.Array:
+    """micro_grads_sqnorm: mean over microbatches of |g_i|²;
+    mean_grad_sqnorm: |mean_i g_i|².  Returns estimated noise scale."""
+    b_small = jnp.float32(micro_batch)
+    b_big = jnp.float32(micro_batch * n_micro)
+    g2_small = micro_grads_sqnorm
+    g2_big = mean_grad_sqnorm
+    signal = (b_big * g2_big - b_small * g2_small) / jnp.maximum(
+        b_big - b_small, 1.0)
+    noise = (g2_small - g2_big) / jnp.maximum(
+        1.0 / b_small - 1.0 / b_big, 1e-9)
+    return jnp.maximum(noise, 0.0) / jnp.maximum(signal, 1e-9)
+
+
+class NoiseScaleEMA:
+    """Host-side EMA of the noise-scale estimate (Coordinator telemetry)."""
+
+    def __init__(self, decay: float = 0.9):
+        self.decay = decay
+        self.value: float = 0.0
+        self._initialized = False
+
+    def update(self, estimate: float) -> float:
+        if not self._initialized:
+            self.value = float(estimate)
+            self._initialized = True
+        else:
+            self.value = self.decay * self.value \
+                + (1 - self.decay) * float(estimate)
+        return self.value

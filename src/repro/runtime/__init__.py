@@ -1,0 +1,4 @@
+from repro.runtime.simulator import Simulator  # noqa: F401
+from repro.runtime.replica import (  # noqa: F401
+    InterferenceSurface, LiveReplica, LossCurve, SimReplica,
+)

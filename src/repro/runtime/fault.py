@@ -1,0 +1,94 @@
+"""Fault tolerance: failure injection, detection, and straggler
+mitigation on top of the simulator + control plane.
+
+Design targets (1000+ nodes):
+  * replica crash  -> detected via missed heartbeats; controller removes
+    the replica; its in-dispatcher requests simply flow to surviving
+    subflows (requests already on the dead replica are lost and counted,
+    like a real serving system's connection resets).
+  * replica rejoin -> re-registered; dispatcher grows a fresh subflow;
+    FL sessions pick it up at the next launch decision.
+  * stragglers     -> CoLLM-native mitigation: the dispatcher's per-
+    replica latency models observe the slowdown and shrink b_max
+    (macro-cycle), the priority allocation (Eq. 18-19) shifts batch
+    budget to healthy replicas, and the §4.3 early-stopper sheds slow
+    FL members.  ``StragglerWatch`` additionally flags gross outliers
+    for operator visibility.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.cluster import ClusterController
+
+
+@dataclasses.dataclass
+class Heartbeat:
+    last_seen: float = 0.0
+    misses: int = 0
+
+
+class FailureDetector:
+    """Heartbeat-based crash detection (the controller's view)."""
+
+    def __init__(self, cluster: ClusterController, timeout: float = 3.0,
+                 max_misses: int = 3):
+        self.cluster = cluster
+        self.timeout = timeout
+        self.max_misses = max_misses
+        self.beats: Dict[str, Heartbeat] = {}
+        self.removed: List[str] = []
+
+    def heartbeat(self, replica_id: str, now: float) -> None:
+        hb = self.beats.setdefault(replica_id, Heartbeat())
+        hb.last_seen = now
+        hb.misses = 0
+
+    def poll(self, now: float) -> List[str]:
+        """Returns replicas declared dead this poll (and removes them)."""
+        dead = []
+        for rid in list(self.cluster.replicas):
+            hb = self.beats.setdefault(rid, Heartbeat(last_seen=now))
+            handle = self.cluster.replicas[rid]
+            alive = not getattr(handle, "failed", False)
+            if alive:
+                hb.last_seen = now
+                hb.misses = 0
+                continue
+            if now - hb.last_seen > self.timeout:
+                hb.misses += 1
+            if hb.misses >= self.max_misses:
+                dead.append(rid)
+        for rid in dead:
+            self.cluster.remove_replica(rid, now)
+            self.removed.append(rid)
+        return dead
+
+
+class StragglerWatch:
+    """Flags replicas whose recent batch latencies are gross outliers
+    (median × threshold) — mitigation itself is CoLLM-native (see module
+    docstring); this provides detection + an optional quarantine hook."""
+
+    def __init__(self, threshold: float = 2.5, window: int = 32):
+        self.threshold = threshold
+        self.window = window
+        self.samples: Dict[str, List[float]] = {}
+
+    def observe(self, replica_id: str, normalized_latency: float) -> None:
+        buf = self.samples.setdefault(replica_id, [])
+        buf.append(normalized_latency)
+        if len(buf) > self.window:
+            del buf[0]
+
+    def stragglers(self) -> List[str]:
+        med = {rid: float(np.median(v))
+               for rid, v in self.samples.items() if len(v) >= 8}
+        if len(med) < 3:
+            return []
+        cluster_med = float(np.median(list(med.values())))
+        return [rid for rid, m in med.items()
+                if m > self.threshold * cluster_med]

@@ -1,0 +1,82 @@
+"""Serving metrics (paper §8.1).
+
+goodput   — output tokens/s of responses that met their SLO deadline
+Q-goodput — goodput weighted by response quality (= 1 / CE loss)
+plus utilization timelines and control-plane overhead accounting.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.interfaces import BatchResult, Request
+
+
+@dataclasses.dataclass
+class MetricsCollector:
+    horizon: float
+
+    def __post_init__(self):
+        self.results: List[BatchResult] = []
+        self.util_samples: Dict[str, List[Tuple[float, float]]] = \
+            collections.defaultdict(list)
+        self.overhead_time: float = 0.0
+        self.infer_time: float = 0.0
+        self.train_time: float = 0.0
+
+    # ------------------------------------------------------------- inputs --
+    def on_result(self, result: BatchResult, stream_id: str) -> None:
+        self.results.append(result)
+        self.infer_time += result.infer_latency
+
+    def sample_utilization(self, replica_id: str, now: float,
+                           util: float) -> None:
+        self.util_samples[replica_id].append((now, util))
+
+    # ------------------------------------------------------------ outputs --
+    def goodput(self, requests: Sequence[Request]) -> Dict[str, float]:
+        done = [r for r in requests if r.completed_at is not None]
+        met = [r for r in done if r.slo_met]
+        tokens_met = sum(r.tokens for r in met)
+        q_tokens = sum(r.tokens * r.quality for r in met)
+        dur = max(self.horizon, 1e-9)
+        return {
+            "requests": len(requests),
+            "completed": len(done),
+            "slo_met": len(met),
+            "slo_rate": len(met) / max(len(requests), 1),
+            "goodput_tok_s": tokens_met / dur,
+            "q_goodput": q_tokens / dur,
+            "mean_quality": float(np.mean([r.quality for r in met]))
+            if met else 0.0,
+        }
+
+    def utilization_summary(self) -> Dict[str, float]:
+        vals = [u for s in self.util_samples.values() for _, u in s]
+        if not vals:
+            return {"mean_util": 0.0, "p10_util": 0.0}
+        return {"mean_util": float(np.mean(vals)),
+                "p10_util": float(np.quantile(vals, 0.10)),
+                "p90_util": float(np.quantile(vals, 0.90))}
+
+    def utilization_timeline(self, bucket: float = 60.0
+                             ) -> Tuple[np.ndarray, np.ndarray]:
+        """Cluster-mean utilization per time bucket (Fig. 11a)."""
+        allsamp = [(t, u) for s in self.util_samples.values() for t, u in s]
+        if not allsamp:
+            return np.zeros(0), np.zeros(0)
+        allsamp.sort()
+        ts = np.asarray([t for t, _ in allsamp])
+        us = np.asarray([u for _, u in allsamp])
+        nb = max(int(self.horizon / bucket), 1)
+        idx = np.minimum((ts / bucket).astype(int), nb - 1)
+        sums = np.bincount(idx, weights=us, minlength=nb)
+        cnts = np.maximum(np.bincount(idx, minlength=nb), 1)
+        return (np.arange(nb) + 0.5) * bucket, sums / cnts
+
+    def overhead_fraction(self) -> float:
+        total = self.overhead_time + self.infer_time + self.train_time
+        return self.overhead_time / max(total, 1e-9)

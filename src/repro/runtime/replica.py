@@ -1,0 +1,341 @@
+"""Replica implementations of the ReplicaHandle protocol.
+
+``SimReplica``  — discrete-event replica with analytic interference
+                  surfaces (ground truth the control plane must learn).
+``LiveReplica`` — real JAX execution: serve/train/combined steps on a
+                  (reduced) model, wall-clock latencies.  Used by the
+                  integration tests and examples/.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import math
+import time as _time
+from typing import Any, Callable, Deque, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.interfaces import (
+    BatchResult, ReplicaHandle, Request, TrainRoundStats,
+)
+
+
+# =========================================================================
+# Simulated replica
+# =========================================================================
+@dataclasses.dataclass
+class InterferenceSurface:
+    """Ground-truth latency surfaces (bivariate + noise, §2.2).
+
+    Defaults are calibrated to an 8B-class model on a 2-accelerator
+    replica: exclusive inference latency 0.02·b + 0.05 s (b=16 ⇒ 0.37 s,
+    inside the 0.5 s SLO), training step 0.03·B + 0.10 s, with cross
+    terms producing the Fig. 4b interference regime.
+    """
+    infer_alpha: float = 0.020    # s per inference-batch element
+    infer_beta: float = 0.008     # interference from co-running train batch
+    infer_gamma: float = 0.050    # fixed cost
+    train_alpha: float = 0.030
+    train_beta: float = 0.010
+    train_gamma: float = 0.100
+    noise_frac: float = 0.04      # lognormal-ish multiplicative noise
+
+    def t_infer(self, b: int, train_b: int, rng: np.random.Generator
+                ) -> float:
+        base = self.infer_alpha * b + self.infer_beta * train_b \
+            + self.infer_gamma
+        return float(base * rng.lognormal(0.0, self.noise_frac))
+
+    def t_train(self, train_b: int, b: int, rng: np.random.Generator
+                ) -> float:
+        base = self.train_alpha * train_b + self.train_beta * b \
+            + self.train_gamma
+        return float(base * rng.lognormal(0.0, self.noise_frac))
+
+
+@dataclasses.dataclass
+class LossCurve:
+    """Per-replica fine-tuning dynamics: exponential-decay loss toward a
+    data-dependent floor, driven by samples seen; FedAvg pulls members
+    toward the cohort mean (heterogeneous data, §4.2)."""
+    init_loss: float = 2.4
+    floor: float = 0.8
+    rate: float = 1.0 / 6000.0    # per training sample
+    seen: int = 0
+
+    def loss(self) -> float:
+        return self.floor + (self.init_loss - self.floor) \
+            * math.exp(-self.rate * self.seen)
+
+    def advance(self, samples: int, batch_size: int = 0
+                ) -> Tuple[float, float]:
+        """Advance by ``samples``; with a batch size given, apply
+        Pollux-style statistical efficiency (McCandlish): per-sample
+        progress decays once the batch exceeds the gradient-noise scale
+        — the ground truth the Coordinator's Eq. 8 has to learn."""
+        before = self.loss()
+        eff = 1.0
+        if batch_size > 0:
+            noise = self.noise_scale()
+            eff = (noise + 1.0) / (noise + float(batch_size))
+        self.seen += samples * eff
+        return before, self.loss()
+
+    def noise_scale(self) -> float:
+        """Gradient noise scale grows as loss approaches the floor
+        (empirically: later training tolerates larger batches)."""
+        prog = 1.0 - (self.loss() - self.floor) \
+            / max(self.init_loss - self.floor, 1e-9)
+        return 4.0 + 60.0 * prog
+
+
+class SimReplica:
+    """Discrete-event replica.  One batch executes at a time (Eq. 13d);
+    a COMBINED-mode training round occupies a parallel 'stream' whose
+    only coupling to serving is the interference surface — the simulator
+    analogue of the fused XLA program."""
+
+    def __init__(self, replica_id: str, model_id: str, simulator,
+                 on_result: Callable[[BatchResult, str], None],
+                 surface: Optional[InterferenceSurface] = None,
+                 loss_curve: Optional[LossCurve] = None,
+                 seed: int = 0, slow_factor: float = 1.0):
+        self.replica_id = replica_id
+        self.model_id = model_id
+        self.sim = simulator
+        self.on_result = on_result
+        self.surface = surface or InterferenceSurface()
+        self.loss_curve = loss_curve or LossCurve()
+        self.rng = np.random.default_rng(seed)
+        self.slow_factor = slow_factor          # straggler injection
+        self.failed = False
+
+        self.busy_until: float = 0.0
+        self.pending: Deque[Tuple[float, List[Request]]] = collections.deque()
+        # scheduled-but-unfinished work: (finish_time, n_requests)
+        self.outstanding: Deque[Tuple[float, int]] = collections.deque()
+        self.train_batch: int = 0               # active co-running B
+        self.training_until: float = 0.0
+        self.adapter: Any = {"version": 0}
+        self.adapter_version: int = 0
+        # busy-interval bookkeeping for utilization()
+        self.busy_intervals: Deque[Tuple[float, float]] = collections.deque(
+            maxlen=4096)
+        self.served_requests: int = 0
+        self.served_tokens: int = 0
+        self.total_infer_time: float = 0.0
+        self.total_train_time: float = 0.0
+
+    # ------------------------------------------------------------- serving -
+    def submit_batch(self, requests: Sequence[Request], now: float) -> None:
+        if self.failed or not requests:
+            return
+        self.pending.append((now, list(requests)))
+        self._drain(now)
+
+    def _drain(self, now: float) -> None:
+        while self.pending:
+            submit_t, batch = self.pending.popleft()
+            start = max(now, self.busy_until)
+            train_b = self.train_batch if start < self.training_until else 0
+            lat = self.surface.t_infer(len(batch), train_b, self.rng) \
+                * self.slow_factor
+            finish = start + lat
+            self.busy_until = finish
+            self.busy_intervals.append((start, finish))
+            self.outstanding.append((finish, len(batch)))
+            q = self.quality_score(now)
+            self.sim.schedule(
+                finish,
+                lambda t, b=batch, s=submit_t, st=start, l=lat,
+                tb=train_b, qq=q: self._complete(t, b, s, st, l, tb, qq),
+                tag=f"batch:{self.replica_id}")
+
+    def _complete(self, now: float, batch: List[Request], submit_t: float,
+                  start: float, lat: float, train_b: int, q: float) -> None:
+        tokens = 0
+        queue_waits = []
+        for r in batch:
+            r.completed_at = now
+            r.quality = q
+            tokens += r.tokens
+            # T_queue per the paper §6.2: everything before processing
+            # starts — dispatcher pacing wait included ("the cost of
+            # controllability"), not just replica-side queueing.
+            queue_waits.append(start - r.arrival)
+        self.served_requests += len(batch)
+        self.served_tokens += tokens
+        self.total_infer_time += lat
+        stream = batch[0].stream_id
+        self.on_result(BatchResult(
+            replica_id=self.replica_id, batch_size=len(batch),
+            infer_latency=lat, total_latency=now - submit_t,
+            queue_latency=float(np.mean(queue_waits)), finished_at=now,
+            quality=q, tokens=tokens, train_batch=train_b), stream)
+
+    # ------------------------------------------------------------ telemetry
+    def _prune_outstanding(self, now: float) -> None:
+        while self.outstanding and self.outstanding[0][0] <= now:
+            self.outstanding.popleft()
+
+    def queue_length(self, now: float) -> int:
+        """Requests accepted but not yet finished."""
+        self._prune_outstanding(now)
+        return sum(n for _, n in self.outstanding) \
+            + sum(len(b) for _, b in self.pending)
+
+    def outstanding_batches(self, now: float) -> int:
+        self._prune_outstanding(now)
+        return len(self.outstanding) + len(self.pending)
+
+    def utilization(self, now: float, window: float = 10.0) -> float:
+        lo = now - window
+        busy = 0.0
+        for s, e in self.busy_intervals:
+            if e <= lo or s >= now:   # outside window / scheduled ahead
+                continue
+            busy += max(min(e, now) - max(s, lo), 0.0)
+        util = busy / window
+        if now < self.training_until and self.train_batch > 0:
+            util += 0.75  # co-running fine-tuning soaks spare compute
+        return float(min(util, 1.0))
+
+    # ------------------------------------------------------------ training -
+    def set_adapter(self, adapter: Any, version: int) -> None:
+        self.adapter = adapter
+        self.adapter_version = version
+
+    def get_adapter(self) -> Any:
+        return self.adapter
+
+    def train_round(self, train_batch: int, infer_batch: int, steps: int,
+                    now: float) -> TrainRoundStats:
+        step_time = self.surface.t_train(train_batch, infer_batch,
+                                         self.rng) * self.slow_factor
+        samples = train_batch * steps
+        before, after = self.loss_curve.advance(samples, train_batch)
+        self.train_batch = train_batch
+        self.training_until = max(self.training_until,
+                                  now + steps * step_time)
+        self.total_train_time += steps * step_time
+        return TrainRoundStats(
+            replica_id=self.replica_id, steps=steps,
+            train_batch=train_batch, infer_batch=infer_batch,
+            avg_step_time=step_time, loss_before=before, loss_after=after,
+            noise_scale=self.loss_curve.noise_scale(), samples=samples)
+
+    def quality_score(self, now: float) -> float:
+        """§8.1: response quality = 1 / CE-loss of the current model."""
+        return 1.0 / max(self.loss_curve.loss(), 1e-6)
+
+    # --------------------------------------------------------------- faults
+    def fail(self, now: float) -> None:
+        self.failed = True
+        self.pending.clear()
+
+    def recover(self, now: float) -> None:
+        self.failed = False
+        self.busy_until = now
+
+
+# =========================================================================
+# Live replica (real JAX execution)
+# =========================================================================
+class LiveReplica:
+    """Runs actual JAX steps (reduced models) and measures wall-clock —
+    the end-to-end integration path.  COMBINED mode executes the fused
+    ``combined_step`` (training + decode in one XLA program over shared
+    base weights)."""
+
+    def __init__(self, replica_id: str, model_id: str, engine,
+                 params, lora, opt_state,
+                 on_result: Callable[[BatchResult, str], None],
+                 data_fn: Callable[[int], Dict[str, Any]],
+                 eval_fn: Optional[Callable[[Any], float]] = None):
+        import jax
+        self.replica_id = replica_id
+        self.model_id = model_id
+        self.engine = engine
+        self.params = params
+        self.lora = lora
+        self.opt_state = opt_state
+        self.on_result = on_result
+        self.data_fn = data_fn          # batch_size -> training batch dict
+        self.eval_fn = eval_fn          # lora -> eval CE loss
+        self.adapter_version = 0
+        self.train_batch = 0
+        self._queue: Deque[Tuple[float, List[Request]]] = collections.deque()
+        self._busy_frac = 0.0
+        self._last_loss = float("nan")
+        self._jit_train = jax.jit(engine.train_step)
+        self._jit_combined = jax.jit(engine.combined_step)
+        self._jit_loss = jax.jit(
+            lambda p, l, b: engine.model.forward_loss(p, l, b)[0])
+
+    # ------------------------------------------------------------- serving -
+    def submit_batch(self, requests: Sequence[Request], now: float) -> None:
+        self._queue.append((now, list(requests)))
+
+    def pump(self, now: float) -> None:
+        """Synchronously execute queued batches (examples drive this)."""
+        while self._queue:
+            submit_t, batch = self._queue.popleft()
+            t0 = _time.perf_counter()
+            data = self.data_fn(len(batch))
+            loss = float(self._jit_loss(self.params, self.lora, data))
+            lat = _time.perf_counter() - t0
+            q = 1.0 / max(loss, 1e-6)
+            tokens = sum(r.tokens for r in batch)
+            for r in batch:
+                r.completed_at = now + lat
+                r.quality = q
+            self.on_result(BatchResult(
+                replica_id=self.replica_id, batch_size=len(batch),
+                infer_latency=lat, total_latency=now + lat - submit_t,
+                queue_latency=max(now - submit_t, 0.0),
+                finished_at=now + lat, quality=q, tokens=tokens,
+                train_batch=self.train_batch), batch[0].stream_id)
+
+    def queue_length(self, now: float) -> int:
+        return sum(len(b) for _, b in self._queue)
+
+    def utilization(self, now: float) -> float:
+        return self._busy_frac
+
+    # ------------------------------------------------------------ training -
+    def set_adapter(self, adapter: Any, version: int) -> None:
+        self.lora = adapter
+        self.adapter_version = version
+
+    def get_adapter(self) -> Any:
+        return self.lora
+
+    def train_round(self, train_batch: int, infer_batch: int, steps: int,
+                    now: float) -> TrainRoundStats:
+        import jax.numpy as jnp
+        self.train_batch = train_batch
+        t0 = _time.perf_counter()
+        losses = []
+        for _ in range(steps):
+            data = self.data_fn(train_batch)
+            self.lora, self.opt_state, metrics = self._jit_train(
+                self.params, self.lora, self.opt_state, data)
+            losses.append(float(metrics["ce_loss"]))
+        dt = (_time.perf_counter() - t0) / max(steps, 1)
+        self._busy_frac = 0.9
+        before = losses[0] if losses else float("nan")
+        after = losses[-1] if losses else float("nan")
+        self._last_loss = after
+        return TrainRoundStats(
+            replica_id=self.replica_id, steps=steps,
+            train_batch=train_batch, infer_batch=infer_batch,
+            avg_step_time=dt, loss_before=before, loss_after=after,
+            noise_scale=8.0, samples=train_batch * steps)
+
+    def quality_score(self, now: float) -> float:
+        if self.eval_fn is not None:
+            return 1.0 / max(self.eval_fn(self.lora), 1e-6)
+        if math.isnan(self._last_loss):
+            return 1.0
+        return 1.0 / max(self._last_loss, 1e-6)

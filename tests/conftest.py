@@ -1,0 +1,32 @@
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.registry import all_configs
+
+# smoke tests and benches must see ONE device (the dry-run sets its own
+# XLA_FLAGS in-process before importing jax) — nothing to do here, just
+# never set xla_force_host_platform_device_count globally.
+
+
+@pytest.fixture(scope="session")
+def smoke_configs():
+    return {name: cfg.scaled() for name, cfg in all_configs().items()}
+
+
+def make_batch(cfg, batch=2, seq=32, seed=0):
+    key = jax.random.key(seed)
+    out = {
+        "labels": jax.random.randint(key, (batch, seq), 0, cfg.vocab_size),
+        "mask": jnp.ones((batch, seq), jnp.float32),
+    }
+    if cfg.encoder_only:
+        out["embeds"] = jax.random.normal(key, (batch, seq, cfg.d_model),
+                                          jnp.float32)
+    else:
+        out["tokens"] = jax.random.randint(key, (batch, seq), 0,
+                                           cfg.vocab_size)
+    if cfg.family.value == "vlm":
+        out["vision"] = jax.random.normal(
+            key, (batch, cfg.vision_tokens, cfg.d_model), jnp.float32)
+    return out

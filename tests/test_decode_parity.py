@@ -1,0 +1,72 @@
+"""Incremental decode must reproduce the full-sequence forward pass —
+the core correctness invariant of the serving path (KV caches, SSD
+recurrence, ring buffers, cross-attention caches)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from conftest import make_batch
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.models.model import build
+
+PARITY_ARCHS = [a for a in ARCH_IDS if get_config(a).has_decode]
+
+
+@pytest.mark.parametrize("arch", PARITY_ARCHS)
+def test_decode_matches_forward(arch):
+    cfg = get_config(arch).scaled()
+    is_moe = cfg.n_experts > 0
+    m = build(cfg)
+    params = m.init(jax.random.key(1))
+    lora = jax.tree.map(lambda x: x + 0.01,
+                        m.init_lora(jax.random.key(2)))
+    B, S = 2, 20
+    batch = make_batch(cfg, batch=B, seq=S)
+    toks = batch["tokens"]
+    full = m.logits(params, lora, batch)
+    caches = m.init_caches(B, S)
+    errs = []
+    for t in range(S):
+        lg, caches = m.decode_step(params, lora, caches, toks[:, t:t + 1],
+                                   jnp.int32(t))
+        errs.append(float(jnp.max(jnp.abs(lg[:, 0] - full[:, t]))))
+    scale = float(jnp.max(jnp.abs(full))) + 1e-6
+    rel = sorted(e / scale for e in errs)
+    if is_moe:
+        # capacity-based top-k routing depends on batch composition: a
+        # near-tie router logit can select different experts between the
+        # 40-token forward group and the 2-token decode group (standard
+        # MoE serving nondeterminism).  Require the vast majority of
+        # positions to match exactly and the median to be tight.
+        matched = sum(1 for r in rel if r < 5e-5)
+        assert matched >= int(0.6 * S), f"{arch}: {matched}/{S} match"
+        assert rel[S // 2] < 5e-5, f"{arch}: median {rel[S // 2]}"
+        # decode itself is deterministic: same caches + token → same out
+        lg2, _ = m.decode_step(params, lora, caches,
+                               toks[:, -1:], jnp.int32(S - 1))
+        lg3, _ = m.decode_step(params, lora, caches,
+                               toks[:, -1:], jnp.int32(S - 1))
+        assert bool(jnp.all(lg2 == lg3))
+    else:
+        assert rel[-1] < 5e-5, f"{arch}: decode diverges ({rel[-1]})"
+
+
+def test_sliding_window_ring_buffer():
+    """Hymba's ring-buffer cache: decoding past the window must agree
+    with a full-cache decode (window masking equivalence)."""
+    cfg = get_config("hymba-1.5b").scaled(sliding_window=8)
+    m = build(cfg)
+    params = m.init(jax.random.key(0))
+    lora = m.init_lora(jax.random.key(1))
+    B, S = 1, 20
+    toks = jax.random.randint(jax.random.key(2), (B, S), 0, cfg.vocab_size)
+    full = m.logits(params, lora, {"tokens": toks})
+    caches = m.init_caches(B, S)     # ring buffer: min(S, window)=8 slots
+    assert caches["kv"][0].shape[2] == 8
+    worst = 0.0
+    for t in range(S):
+        lg, caches = m.decode_step(params, lora, caches, toks[:, t:t + 1],
+                                   jnp.int32(t))
+        worst = max(worst, float(jnp.max(jnp.abs(lg[:, 0] - full[:, t]))))
+    scale = float(jnp.max(jnp.abs(full))) + 1e-6
+    assert worst / scale < 5e-5

@@ -1,0 +1,145 @@
+"""Subflow dispatcher (§6): pacing, backpressure, feasibility shedding,
+micro-cycle priority allocation, overload promotion."""
+import pytest
+
+from repro.core.dispatcher import DispatcherConfig, Subflow, SubflowDispatcher
+from repro.core.interfaces import BatchResult, Request
+from repro.core.states import ReplicaState
+
+
+class FakeReplica:
+    def __init__(self, rid):
+        self.replica_id = rid
+        self.model_id = "m"
+        self.batches = []
+        self.outstanding = 0
+        self.quality = 1.0
+
+    def submit_batch(self, reqs, now):
+        self.batches.append((now, list(reqs)))
+
+    def outstanding_batches(self, now):
+        return self.outstanding
+
+    def queue_length(self, now):
+        return self.outstanding
+
+    def quality_score(self, now):
+        return self.quality
+
+
+def make_dispatcher(n=2, **cfg_kw):
+    cfg = DispatcherConfig(**cfg_kw)
+    replicas = {f"r{i}": FakeReplica(f"r{i}") for i in range(n)}
+    promoted = []
+
+    def promote(now):
+        promoted.append(now)
+        return None
+
+    d = SubflowDispatcher("m", cfg, replicas,
+                          state_of=lambda rid: ReplicaState.SERVING,
+                          promote_idle=promote)
+    return d, replicas, promoted
+
+
+def _req(i, t=0.0, slo=0.5):
+    return Request(request_id=i, stream_id="m", arrival=t, deadline=t + slo)
+
+
+def test_fire_respects_batch_bound():
+    d, replicas, _ = make_dispatcher(n=1)
+    for i in range(100):
+        d.submit(_req(i))
+    sf = d._ensure_subflow("r0", 0.0)
+    sf.batch_size = 4
+    sf.b_max = 4
+    d._fire_due_subflows(0.0)
+    assert len(replicas["r0"].batches) == 1
+    assert len(replicas["r0"].batches[0][1]) == 4
+
+
+def test_backpressure_blocks_busy_replica():
+    d, replicas, _ = make_dispatcher(n=1)
+    replicas["r0"].outstanding = 5
+    for i in range(10):
+        d.submit(_req(i))
+    d._fire_due_subflows(0.0)
+    assert replicas["r0"].batches == []
+    assert d.queue_depth() == 10
+
+
+def test_feasibility_shedding():
+    """Eq. 13c: requests that cannot meet their deadline are dropped."""
+    d, replicas, _ = make_dispatcher(n=1)
+    d._ensure_subflow("r0", 0.0)
+    lm = d.latency_models["r0"]
+    for b, lat in [(1, 0.12), (4, 0.18), (8, 0.26)]:
+        lm.observe(b, lat)
+    lm.fit()
+    d.submit(_req(0, t=-0.45))     # deadline 0.05 < predicted latency
+    d.submit(_req(1, t=0.0))
+    sf = d.subflows["r0"]
+    sf.batch_size = 4
+    d._fire_due_subflows(0.0)
+    assert d.dropped == 1
+    assert len(replicas["r0"].batches[0][1]) == 1
+
+
+def test_expired_requests_dropped():
+    d, _, _ = make_dispatcher(n=1)
+    d.submit(_req(0, t=0.0, slo=0.1))
+    d._expire_requests(now=1.0)
+    assert d.dropped == 1 and d.queue_depth() == 0
+
+
+def test_micro_cycle_priority_allocation():
+    """Eq. 18-19: higher quality + higher unsaturation gets more batch."""
+    d, replicas, _ = make_dispatcher(n=2)
+    a = d._ensure_subflow("r0", 0.0)
+    b = d._ensure_subflow("r1", 0.0)
+    a.b_max = b.b_max = 32
+    a.batch_size = b.batch_size = 16
+    replicas["r0"].quality = 4.0
+    replicas["r1"].quality = 1.0
+    a.history.append((16, 16))
+    b.history.append((16, 16))
+    d.micro_cycle(0.0)
+    assert a.batch_size > b.batch_size
+
+
+def test_micro_cycle_smoothing_bounds():
+    d, replicas, _ = make_dispatcher(n=1)
+    sf = d._ensure_subflow("r0", 0.0)
+    sf.b_max = 64
+    sf.batch_size = 4
+    replicas["r0"].quality = 100.0
+    d.micro_cycle(0.0)
+    assert sf.batch_size <= int(1.5 * 4) + 1   # no abrupt jump
+
+
+def test_overload_pressure_promotes():
+    d, replicas, promoted = make_dispatcher(n=1)
+    sf = d._ensure_subflow("r0", 0.0)
+    sf.b_max = 4
+    for i in range(50):
+        d.submit(_req(i))
+    d._overload_pressure(0.0)
+    assert promoted, "deep backlog must trigger promotion"
+
+
+def test_macro_cycle_sets_bmax_from_model():
+    d, replicas, _ = make_dispatcher(n=1)
+    d._ensure_subflow("r0", 0.0)
+    lm = d.latency_models["r0"]
+    for b in range(1, 12):
+        lm.observe(b, 0.02 * b + 0.05)
+    # completed batches feed T_queue
+    d.on_batch_result(BatchResult(
+        replica_id="r0", batch_size=4, infer_latency=0.13,
+        total_latency=0.2, queue_latency=0.07, finished_at=1.0,
+        quality=1.0, tokens=100))
+    d.macro_cycle(1.0)
+    sf = d.subflows["r0"]
+    expected = int(((0.5 - 0.07) - 0.05) // 0.02)
+    assert abs(sf.b_max - expected) <= 1

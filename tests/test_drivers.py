@@ -1,0 +1,70 @@
+"""Launch drivers: training loop (with NaN-restore fault tolerance) and
+the serving loop (incl. combined co-execution)."""
+import pytest
+
+from repro.launch.serve import run_serving
+from repro.launch.train import run_training
+
+
+def test_training_reduces_loss(tmp_path):
+    out = run_training("qwen1.5-0.5b", smoke=True, steps=30, batch=8,
+                       seq=32, ckpt_dir=str(tmp_path), ckpt_every=10,
+                       lr=5e-3, verbose=False)
+    assert out["steps"] == 30
+    # per-batch train losses are noisy at 30 steps; compare eval CE on a
+    # FIXED held-out batch with the initial vs the trained adapter
+    # (params/adapters are seed-reconstructible from run_training)
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.registry import get_config
+    from repro.core.engine import make_engine
+    from repro.data.synthetic import SyntheticDataset
+    cfg = get_config("qwen1.5-0.5b").scaled()
+    model = make_engine(cfg).model
+    params = model.init(jax.random.key(0))
+    lora0 = model.init_lora(jax.random.key(1))
+    held = {k: jnp.asarray(v) for k, v in SyntheticDataset(
+        "alpaca", vocab_size=cfg.vocab_size, seq_len=32,
+        seed=0).batch(16).items()}
+    l0 = float(model.forward_loss(params, lora0, held)[0])
+    l1 = float(model.forward_loss(params, out["lora"], held)[0])
+    assert l1 < l0, f"LoRA training should reduce held-out CE ({l0}->{l1})"
+
+
+def test_training_restores_after_nan(tmp_path):
+    out = run_training("qwen1.5-0.5b", smoke=True, steps=25, batch=4,
+                       seq=32, ckpt_dir=str(tmp_path), ckpt_every=5,
+                       inject_nan_at=12, verbose=False)
+    # the injected failure rolled back to step 10 and retrained
+    assert out["steps"] == 25
+    assert all(l == l for l in out["losses"])  # no NaN kept
+
+
+def test_training_restart_from_checkpoint(tmp_path):
+    run_training("qwen1.5-0.5b", smoke=True, steps=10, batch=4, seq=32,
+                 ckpt_dir=str(tmp_path), ckpt_every=5, verbose=False)
+    out = run_training("qwen1.5-0.5b", smoke=True, steps=15, batch=4,
+                       seq=32, ckpt_dir=str(tmp_path), restore=True,
+                       verbose=False)
+    assert out["steps"] == 15
+    assert len(out["losses"]) == 5  # only steps 10..15 re-run
+
+
+def test_serving_generates():
+    out = run_serving("qwen1.5-0.5b", n_requests=4, prompt_len=8,
+                      gen_tokens=4, batch_size=4, verbose=False)
+    assert out["tokens_generated"] == 16
+    assert out["throughput_tok_s"] > 0
+
+
+def test_serving_combined_trains_while_serving():
+    out = run_serving("qwen1.5-0.5b", n_requests=4, prompt_len=12,
+                      gen_tokens=2, batch_size=4, combined=True,
+                      train_batch=4, verbose=False)
+    assert out["tokens_generated"] == 8
+    assert len(out["train_losses"]) == 12      # one per prefill position
+    # losses vary batch-to-batch; strict decrease over 12 random batches
+    # is flaky — monotone improvement is asserted on a fixed batch in
+    # test_engine_combined; here require finiteness + no blow-up
+    assert all(l == l for l in out["train_losses"])
+    assert out["train_losses"][-1] < out["train_losses"][0] + 0.5

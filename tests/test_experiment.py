@@ -1,0 +1,71 @@
+"""End-to-end simulation: CoLLM + baselines on short traces — the
+integration surface every paper figure rests on."""
+import pytest
+
+from repro.runtime.experiment import ExperimentConfig, run_experiment
+
+
+@pytest.fixture(scope="module")
+def short_runs():
+    out = {}
+    for policy in ["collm", "dlora", "shepherd", "peft", "rr"]:
+        cfg = ExperimentConfig(policy=policy, n_replicas=6,
+                               duration=420.0, scale=1.0, seed=3)
+        out[policy] = run_experiment(cfg)
+    return out
+
+
+def test_all_policies_complete_requests(short_runs):
+    for policy, out in short_runs.items():
+        assert out["requests"] > 0
+        assert out["completed"] > 0, policy
+        assert out["slo_rate"] > 0.3, (policy, out["slo_rate"])
+
+
+def test_collm_finetunes_at_low_load(short_runs):
+    out = short_runs["collm"]
+    assert out["fl_rounds"] > 0, "idle troughs must trigger FL rounds"
+    assert out["mean_loss"] < 2.4, "fine-tuning must reduce loss"
+
+
+def test_collm_quality_beats_static_baselines(short_runs):
+    q_collm = short_runs["collm"]["mean_quality"]
+    for p in ["dlora", "shepherd", "peft", "rr"]:
+        assert q_collm > short_runs[p]["mean_quality"], p
+
+
+def test_collm_utilization_higher(short_runs):
+    u_collm = short_runs["collm"]["mean_util"]
+    assert u_collm > short_runs["peft"]["mean_util"]
+
+
+def test_overhead_small(short_runs):
+    assert short_runs["collm"]["overhead_frac"] < 0.05
+
+
+def test_determinism():
+    cfg = ExperimentConfig(policy="collm", n_replicas=4, duration=200.0,
+                           seed=7)
+    a = run_experiment(cfg)
+    b = run_experiment(cfg)
+    assert a["slo_met"] == b["slo_met"]
+    assert a["goodput_tok_s"] == pytest.approx(b["goodput_tok_s"])
+
+
+def test_replica_failure_tolerated():
+    cfg = ExperimentConfig(policy="collm", n_replicas=6, duration=300.0,
+                           seed=1, failures=[(2, 100.0, 200.0)])
+    out = run_experiment(cfg)
+    assert out["slo_rate"] > 0.3
+    assert out["completed"] > 0
+
+
+def test_straggler_mitigated():
+    base = ExperimentConfig(policy="collm", n_replicas=6, duration=300.0,
+                            seed=2)
+    slow = ExperimentConfig(policy="collm", n_replicas=6, duration=300.0,
+                            seed=2, stragglers={0: 3.0})
+    out_base = run_experiment(base)
+    out_slow = run_experiment(slow)
+    # a 3x straggler on 1/6 replicas must not collapse goodput
+    assert out_slow["goodput_tok_s"] > 0.6 * out_base["goodput_tok_s"]

@@ -1,0 +1,69 @@
+"""Fault tolerance: detection, elastic pool membership, stragglers."""
+import pytest
+
+from repro.core.cluster import ClusterConfig, ClusterController
+from repro.core.interfaces import BatchResult
+from repro.runtime.elastic import ElasticServingPool
+from repro.runtime.fault import FailureDetector, StragglerWatch
+from repro.runtime.replica import InterferenceSurface, SimReplica
+from repro.runtime.simulator import Simulator
+
+
+def _cluster(n=4):
+    sim = Simulator()
+    cluster = ClusterController(ClusterConfig())
+    results = []
+    for i in range(n):
+        r = SimReplica(f"r{i}", "m", sim,
+                       lambda res, sid: results.append(res), seed=i)
+        cluster.add_replica(r)
+    return sim, cluster, results
+
+
+def test_failure_detector_removes_dead_replica():
+    sim, cluster, _ = _cluster()
+    det = FailureDetector(cluster, timeout=1.0, max_misses=2)
+    cluster.replicas["r1"].fail(0.0)
+    det.poll(0.5)
+    assert "r1" in cluster.replicas        # within timeout
+    det.poll(2.0)
+    det.poll(3.5)
+    assert "r1" not in cluster.replicas
+    assert det.removed == ["r1"]
+
+
+def test_elastic_join_leave():
+    sim, cluster, results = _cluster(2)
+    pool = ElasticServingPool(cluster)
+    cluster.dispatcher_for("m")
+    newr = SimReplica("r9", "m", sim, lambda res, sid: None, seed=9)
+    pool.join(newr, now=1.0)
+    assert "r9" in cluster.replicas
+    assert "r9" in cluster.dispatchers["m"].replicas
+    pool.leave("r9", now=2.0)
+    assert "r9" not in cluster.replicas
+    assert "r9" not in cluster.dispatchers["m"].replicas
+
+
+def test_straggler_watch_flags_outlier():
+    w = StragglerWatch(threshold=2.0, window=16)
+    for _ in range(10):
+        for rid, lat in [("a", 1.0), ("b", 1.1), ("c", 0.9), ("d", 5.0)]:
+            w.observe(rid, lat)
+    assert w.stragglers() == ["d"]
+
+
+def test_remove_replica_mid_session():
+    """Losing a COMBINED replica must not wedge the FL session."""
+    from repro.core.states import ReplicaState
+    sim, cluster, _ = _cluster(4)
+    for rid in cluster.replicas:
+        cluster.states.transition(rid, ReplicaState.IDLE, 0.0)
+    cluster.launcher.maybe_launch(0.0)
+    assert cluster.launcher.sessions
+    some = next(iter(cluster.launcher.sessions.values()))
+    victim = some.session.members[0]
+    cluster.remove_replica(victim, 1.0)
+    assert victim not in cluster.replicas
+    for a in cluster.launcher.sessions.values():
+        assert victim not in a.session.members

@@ -1,0 +1,71 @@
+"""FedAvg over LoRA trees (Eq. 5), quality scores (Eq. 6), and early
+stopping (§4.3) — with hypothesis properties on the aggregation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.federated import (
+    EarlyStopper, FederatedSession, FLRoundResult, fedavg, quality_update,
+)
+
+
+def _tree(val):
+    return {"q": {"a": jnp.full((2, 3), val), "b": jnp.full((3,), val)}}
+
+
+def test_fedavg_is_mean():
+    out = fedavg([_tree(1.0), _tree(3.0)])
+    assert float(out["q"]["a"][0, 0]) == 2.0
+
+
+def test_fedavg_weighted():
+    out = fedavg([_tree(0.0), _tree(4.0)], weights=[3.0, 1.0])
+    assert float(out["q"]["b"][0]) == 1.0
+
+
+@given(st.lists(st.floats(-10, 10), min_size=2, max_size=6))
+@settings(max_examples=50, deadline=None)
+def test_fedavg_bounded_by_extremes(vals):
+    out = fedavg([_tree(v) for v in vals])
+    x = float(out["q"]["a"][0, 0])
+    assert min(vals) - 1e-6 <= x <= max(vals) + 1e-6
+
+
+def test_quality_update_grows_with_improvement():
+    q1 = quality_update(1.0, loss_prev=2.0, loss_now=1.5)
+    assert q1 > 1.0
+    q2 = quality_update(q1, loss_prev=1.5, loss_now=1.5)
+    assert q2 == pytest.approx(q1)
+
+
+def test_quality_update_literal_eq6():
+    # the paper's literal rule contracts Q; we keep it available
+    assert quality_update(1.0, 2.0, 1.5, literal_eq6=True) == \
+        pytest.approx(0.25)
+
+
+def test_early_stopper_patience():
+    s = EarlyStopper(patience=2, min_delta=1e-3)
+    assert not s.update(1.0)
+    assert not s.update(0.9)       # improving
+    assert not s.update(0.9)       # plateau 1
+    assert s.update(0.9)           # plateau 2 -> stop
+
+
+def test_session_round_flow():
+    sess = FederatedSession("m", ["a", "b", "c"], server="a",
+                            global_adapter=_tree(0.0))
+    res = [FLRoundResult(r, _tree(v), local_loss=l, samples=10)
+           for r, v, l in [("a", 1.0, 2.0), ("b", 2.0, 2.2),
+                           ("c", 3.0, 1.8)]]
+    g = sess.aggregate(res)
+    assert float(g["q"]["a"][0, 0]) == pytest.approx(2.0)
+    assert sess.round == 1
+    # no early stop on first round (losses establish baselines)
+    assert sess.early_stops(res) == []
+    # plateau everyone for two rounds -> all stop, session dies
+    for _ in range(2):
+        stopped = sess.early_stops(res)
+    assert not sess.alive

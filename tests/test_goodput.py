@@ -1,0 +1,56 @@
+"""Goodput model (Eq. 7-8) + constrained optimization (Eq. 11-12)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.goodput import (
+    EfficiencyParams, efficiency, goodput, optimize, throughput,
+)
+from repro.core.latency_model import BivariateLatencyModel
+
+
+def _models():
+    tt = BivariateLatencyModel(alpha=0.03, beta=0.01, gamma=0.1)
+    ti = BivariateLatencyModel(alpha=0.02, beta=0.008, gamma=0.05)
+    for m in (tt, ti):
+        m._samples.extend([(1, 1, 1.0)] * 3)  # mark as fitted
+    return tt, ti
+
+
+def test_efficiency_monotone_decreasing_in_batch():
+    p = EfficiencyParams(noise_scale=10.0, loss_reduction=0.05)
+    vals = [efficiency(b, p) for b in (1, 4, 16, 64)]
+    assert all(a >= b for a, b in zip(vals, vals[1:]))
+    assert vals[0] <= (p.scale_a * 10 * 0.05 + p.init_batch) / \
+        (p.scale_a * 10 * 0.05 + 1) + 1e-9
+
+
+def test_higher_noise_scale_tolerates_larger_batches():
+    lo = EfficiencyParams(noise_scale=1.0)
+    hi = EfficiencyParams(noise_scale=100.0)
+    assert efficiency(64, hi) > efficiency(64, lo)
+
+
+def test_optimize_respects_slo():
+    tt, ti = _models()
+    p = EfficiencyParams(noise_scale=10.0, loss_reduction=0.05)
+    B, b, g = optimize(tt, ti, p, latency_budget=0.45)
+    assert b >= 1 and B >= 1 and g > 0
+    assert ti.predict(b, B) <= 0.45 + 1e-9
+
+
+def test_optimize_tightening_budget_shrinks_inference_batch():
+    tt, ti = _models()
+    p = EfficiencyParams(noise_scale=10.0, loss_reduction=0.05)
+    _, b_loose, _ = optimize(tt, ti, p, latency_budget=0.45)
+    _, b_tight, _ = optimize(tt, ti, p, latency_budget=0.15)
+    assert b_tight < b_loose
+
+
+@given(st.floats(0.1, 0.6), st.floats(0.5, 100.0), st.floats(0.001, 1.0))
+@settings(max_examples=40, deadline=None)
+def test_optimize_always_feasible(budget, noise, lred):
+    tt, ti = _models()
+    p = EfficiencyParams(noise_scale=noise, loss_reduction=lred)
+    B, b, g = optimize(tt, ti, p, latency_budget=budget)
+    assert B >= 1 and b >= 1
+    assert g >= 0 or (B, b) == (1, 1)

@@ -1,0 +1,67 @@
+"""Latency-model fits (Eq. 9/10/14/16) — including the paper's §2.2
+claim that interference breaks univariate fits (R² drop) while the
+bivariate model recovers accuracy."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.latency_model import BivariateLatencyModel, LinearLatencyModel
+
+
+def test_linear_recovers_coefficients():
+    m = LinearLatencyModel()
+    rng = np.random.default_rng(0)
+    for _ in range(100):
+        b = rng.integers(1, 64)
+        m.observe(b, 0.02 * b + 0.05 + rng.normal(0, 1e-4))
+    a, beta = m.fit()
+    assert abs(a - 0.02) < 1e-3 and abs(beta - 0.05) < 5e-3
+    assert m.r2 > 0.99
+
+
+def test_max_batch_eq16():
+    m = LinearLatencyModel(alpha=0.02, beta=0.05)
+    m._samples.extend([(1, 0.07), (2, 0.09)])
+    m.fit()
+    # b_max = floor((0.45 - beta)/alpha)
+    assert m.max_batch(0.45) == int((0.45 - m.beta) // m.alpha)
+
+
+def test_bivariate_beats_univariate_under_interference():
+    """Fig. 4b reproduction in miniature: univariate R² degrades when a
+    co-running training batch varies; bivariate stays high."""
+    rng = np.random.default_rng(1)
+    uni = LinearLatencyModel()
+    bi = BivariateLatencyModel()
+    for _ in range(200):
+        b = int(rng.integers(2, 8))
+        B = int(rng.integers(0, 20))
+        lat = 0.02 * b + 0.008 * B + 0.05 + rng.normal(0, 5e-4)
+        uni.observe(b, lat)
+        bi.observe(b, B, lat)
+    uni.fit()
+    bi.fit()
+    assert bi.r2 > 0.97
+    assert uni.r2 < bi.r2 - 0.1, (uni.r2, bi.r2)
+
+
+def test_bivariate_max_x1_respects_budget():
+    m = BivariateLatencyModel(alpha=0.02, beta=0.01, gamma=0.05)
+    m._samples.extend([(1, 0, 0.07), (2, 0, 0.09), (3, 1, 0.12)])
+    for B in range(0, 30, 5):
+        b = m.max_x1(0.5, B)
+        assert m.predict(b, B) <= 0.5 + 1e-9
+        assert m.predict(b + 1, B) > 0.5 - 1e-9  # maximality (fp slack)
+
+
+@given(st.lists(st.tuples(st.integers(1, 128),
+                          st.floats(0.01, 10.0)), min_size=2, max_size=64))
+@settings(max_examples=50, deadline=None)
+def test_linear_fit_never_crashes(samples):
+    m = LinearLatencyModel()
+    for b, lat in samples:
+        m.observe(b, lat)
+    a, beta = m.fit()
+    assert np.isfinite(a) and np.isfinite(beta)
+    # R² may be epsilon-negative from the ridge term; must stay ≤ 1
+    assert np.isfinite(m.r2) and m.r2 <= 1.0 + 1e-9

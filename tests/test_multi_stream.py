@@ -1,0 +1,59 @@
+"""Multi-stream dispatching: requests for different models (streams) are
+routed to the right replica pools with independent subflow state —
+'requests querying the same model and having the same SLO form a
+stream' (paper §6.1)."""
+import pytest
+
+from repro.core.cluster import ClusterConfig, ClusterController
+from repro.core.interfaces import Request
+from repro.runtime.replica import SimReplica
+from repro.runtime.simulator import Simulator
+
+
+def test_streams_route_to_matching_model_pools():
+    sim = Simulator()
+    cluster = ClusterController(ClusterConfig())
+    completions = {"m1": 0, "m2": 0}
+
+    def on_result(res, sid):
+        completions[sid.split("/")[0]] += res.batch_size
+        cluster.on_batch_result(res, sid)
+
+    for i in range(2):
+        cluster.add_replica(SimReplica(f"a{i}", "m1", sim, on_result,
+                                       seed=i))
+        cluster.add_replica(SimReplica(f"b{i}", "m2", sim, on_result,
+                                       seed=10 + i))
+
+    rid = 0
+    for t in range(50):
+        now = t * 0.1
+        for stream in ("m1", "m2"):
+            cluster.submit_request(Request(rid, stream, now, now + 0.5))
+            rid += 1
+    sim.schedule_every(0.05, cluster.tick, until=8.0)
+    sim.run(8.0)
+
+    assert completions["m1"] > 0 and completions["m2"] > 0
+    # stream isolation: each dispatcher only owns its model's replicas
+    assert set(cluster.dispatchers["m1"].replicas) == {"a0", "a1"}
+    assert set(cluster.dispatchers["m2"].replicas) == {"b0", "b1"}
+
+
+def test_idle_pools_are_per_model():
+    """FL cohorts must not mix models (§4.2: 'same model')."""
+    from repro.core.states import ReplicaState
+    sim = Simulator()
+    cluster = ClusterController(ClusterConfig())
+    for i in range(3):
+        cluster.add_replica(SimReplica(f"a{i}", "m1", sim,
+                                       lambda r, s: None, seed=i))
+    for i in range(2):
+        cluster.add_replica(SimReplica(f"b{i}", "m2", sim,
+                                       lambda r, s: None, seed=i))
+    for rid in list(cluster.replicas):
+        cluster.states.transition(rid, ReplicaState.IDLE, 0.0)
+    cluster.launcher.maybe_launch(1.0)
+    models = {a.session.model_id: sorted(a.session.members)
+              for a in cluster.launcher.sessions.values()}
+    assert models == {"m1": ["a0", "a1", "a2"]}  # m2 below min_cohort=3

@@ -1,0 +1,75 @@
+"""Optimizer substrate: AdamW, schedules, noise scale, compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import AdamW, cosine_schedule, global_norm
+from repro.optim.compression import (
+    compress_tree_topk, dequantize_int8, init_error_feedback, quantize_int8,
+)
+from repro.optim.grad_noise import noise_scale_from_microbatches
+
+
+def test_adamw_minimizes_quadratic():
+    opt = AdamW(lr=0.1, clip_norm=0.0)
+    params = {"x": jnp.array([5.0, -3.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = jax.tree.map(lambda p: 2 * p, params)
+        params, state, _ = opt.update(grads, state, params)
+    assert float(jnp.max(jnp.abs(params["x"]))) < 1e-2
+
+
+def test_grad_clip():
+    opt = AdamW(lr=0.1, clip_norm=1.0)
+    params = {"x": jnp.zeros(3)}
+    state = opt.init(params)
+    _, _, m = opt.update({"x": jnp.full(3, 100.0)}, state, params)
+    assert float(m["grad_norm"]) > 1.0  # reported pre-clip
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1e-3, warmup=10, total=100)
+    assert float(lr(jnp.int32(0))) == 0.0
+    assert float(lr(jnp.int32(10))) == pytest.approx(1e-3)
+    assert float(lr(jnp.int32(100))) == pytest.approx(1e-4, rel=1e-2)
+
+
+def test_noise_scale_estimator():
+    # with |g_small|^2 = sigma^2/b_small + |G|^2 the estimator recovers
+    # Sigma/Signal = sigma^2 / |G|^2
+    sigma2, g2, bs, n = 4.0, 2.0, 8, 4
+    small = sigma2 / bs + g2
+    big = sigma2 / (bs * n) + g2
+    est = noise_scale_from_microbatches(jnp.float32(small),
+                                        jnp.float32(big), bs, n)
+    assert float(est) == pytest.approx(sigma2 / g2, rel=1e-4)
+
+
+def test_topk_compression_keeps_largest():
+    grads = {"a": jnp.array([0.1, -5.0, 0.2, 3.0, -0.05])}
+    ef = init_error_feedback(grads)
+    kept, ef2 = compress_tree_topk(grads, ef, frac=0.4)
+    nz = np.nonzero(np.asarray(kept["a"]))[0]
+    assert set(nz) == {1, 3}
+    # error feedback: residual + kept == original
+    total = np.asarray(kept["a"]) + np.asarray(ef2.residual["a"])
+    np.testing.assert_allclose(total, np.asarray(grads["a"]), rtol=1e-6)
+
+
+@given(st.lists(st.floats(-100, 100, allow_nan=False), min_size=4,
+                max_size=64))
+@settings(max_examples=50, deadline=None)
+def test_int8_quantization_error_bounded(vals):
+    g = jnp.asarray(vals, jnp.float32)
+    q, scale = quantize_int8(g)
+    deq = dequantize_int8(q, scale)
+    max_err = float(jnp.max(jnp.abs(deq - g)))
+    assert max_err <= float(scale) * 0.5 + 1e-6
+
+
+def test_global_norm():
+    t = {"a": jnp.array([3.0]), "b": jnp.array([4.0])}
+    assert float(global_norm(t)) == pytest.approx(5.0)

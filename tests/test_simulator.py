@@ -1,0 +1,97 @@
+"""Discrete-event simulator + SimReplica mechanics."""
+import pytest
+
+from repro.core.interfaces import Request
+from repro.runtime.replica import InterferenceSurface, SimReplica
+from repro.runtime.simulator import Simulator
+
+
+def test_event_ordering_deterministic():
+    sim = Simulator()
+    log = []
+    sim.schedule(2.0, lambda t: log.append(("b", t)))
+    sim.schedule(1.0, lambda t: log.append(("a", t)))
+    sim.schedule(1.0, lambda t: log.append(("a2", t)))  # FIFO at same time
+    sim.run(10.0)
+    assert [x[0] for x in log] == ["a", "a2", "b"]
+    assert sim.now == 10.0
+
+
+def test_schedule_every_respects_until():
+    sim = Simulator()
+    hits = []
+    sim.schedule_every(1.0, hits.append, until=3.5)
+    sim.run(10.0)
+    assert hits == [0.0, 1.0, 2.0, 3.0]
+
+
+def _mk_replica(sim, results):
+    return SimReplica("r0", "m", sim,
+                      lambda res, sid: results.append(res),
+                      InterferenceSurface(noise_frac=0.0), seed=1)
+
+
+def test_replica_serializes_batches():
+    """Eq. 13d: one batch at a time; later batch waits."""
+    sim = Simulator()
+    results = []
+    r = _mk_replica(sim, results)
+    reqs1 = [Request(i, "m", 0.0, 1.0) for i in range(4)]
+    reqs2 = [Request(i + 4, "m", 0.0, 1.0) for i in range(4)]
+    r.submit_batch(reqs1, 0.0)
+    r.submit_batch(reqs2, 0.0)
+    sim.run(5.0)
+    assert len(results) == 2
+    lat = 0.02 * 4 + 0.05
+    assert results[0].finished_at == pytest.approx(lat, rel=1e-6)
+    assert results[1].finished_at == pytest.approx(2 * lat, rel=1e-6)
+    assert results[1].queue_latency == pytest.approx(lat, rel=1e-6)
+
+
+def test_interference_slows_inference():
+    sim = Simulator()
+    results = []
+    r = _mk_replica(sim, results)
+    r.train_round(train_batch=16, infer_batch=4, steps=100, now=0.0)
+    r.submit_batch([Request(0, "m", 0.0, 1.0)], 0.0)
+    sim.run(5.0)
+    base = 0.02 * 1 + 0.05
+    assert results[0].infer_latency == pytest.approx(
+        base + 0.008 * 16, rel=1e-6)
+    assert results[0].train_batch == 16
+
+
+def test_utilization_window():
+    sim = Simulator()
+    results = []
+    r = _mk_replica(sim, results)
+    for k in range(20):
+        sim.schedule(k * 0.5, lambda t, rr=r: rr.submit_batch(
+            [Request(int(t * 10), "m", t, t + 1.0)], t))
+    sim.run(10.0)
+    u = r.utilization(10.0)
+    # each 1-request batch takes 0.07s every 0.5s => ~14% busy
+    assert 0.05 < u < 0.30
+
+
+def test_failure_drops_requests():
+    sim = Simulator()
+    results = []
+    r = _mk_replica(sim, results)
+    r.fail(0.0)
+    r.submit_batch([Request(0, "m", 0.0, 1.0)], 0.0)
+    sim.run(1.0)
+    assert results == []
+    r.recover(1.0)
+    r.submit_batch([Request(1, "m", 1.0, 2.0)], 1.0)
+    sim.run(3.0)
+    assert len(results) == 1
+
+
+def test_loss_curve_monotone():
+    from repro.runtime.replica import LossCurve
+    c = LossCurve()
+    l0 = c.loss()
+    c.advance(5000)
+    assert c.loss() < l0
+    assert c.loss() >= c.floor

@@ -1,0 +1,86 @@
+"""Replica state machine (Eq. 1-4) invariants, including hypothesis
+properties: at least one replica always stays SERVING, T' rollback."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.states import (
+    ClusterStateManager, EWMAWindow, ReplicaState, StatePolicy,
+)
+
+
+def test_ewma_recent_weighted():
+    w = EWMAWindow(window=4, decay=1.0)
+    for v in [0.0, 0.0, 0.0, 1.0]:
+        w.observe(v)
+    assert w.value > 0.5  # newest sample dominates with strong decay
+
+
+def test_idle_transition_at_low_load():
+    mgr = ClusterStateManager(StatePolicy(window=3))
+    for i in range(4):
+        mgr.register(f"r{i}")
+    for _ in range(3):
+        for i in range(4):
+            mgr.observe(f"r{i}", 0.01 * (i + 1) * 0.1, 0.0)
+    idled = mgr.evaluate_idle_transitions(now=10.0)
+    assert idled, "low-utilization cluster should idle some replicas"
+    assert len(mgr.replicas_in(ReplicaState.SERVING)) >= 1
+
+
+def test_no_idle_at_high_load():
+    mgr = ClusterStateManager(StatePolicy(window=3))
+    for i in range(4):
+        mgr.register(f"r{i}")
+    for _ in range(3):
+        for i in range(4):
+            mgr.observe(f"r{i}", 0.9, 5.0)
+    assert mgr.evaluate_idle_transitions(now=10.0) == []
+
+
+def test_queue_backlog_blocks_idle():
+    """Paper insight (a): low utilization alone is insufficient."""
+    mgr = ClusterStateManager(StatePolicy(window=3))
+    for i in range(4):
+        mgr.register(f"r{i}")
+    for _ in range(3):
+        mgr.observe("r0", 0.01, 50.0)       # idle-looking but backlogged
+        for i in range(1, 4):
+            mgr.observe(f"r{i}", 0.5, 0.0)
+    assert "r0" not in mgr.evaluate_idle_transitions(now=1.0)
+
+
+def test_rollback_after_unselected_rounds():
+    mgr = ClusterStateManager(StatePolicy(rollback_rounds=3))
+    mgr.register("a", ReplicaState.IDLE)
+    mgr.register("b", ReplicaState.IDLE)
+    for k in range(3):
+        reverted = mgr.tick_unselected(["b"], now=float(k))
+    assert "a" in reverted
+    assert mgr.state_of("a") is ReplicaState.SERVING
+    assert mgr.state_of("b") is ReplicaState.IDLE
+
+
+def test_promote_idle():
+    mgr = ClusterStateManager()
+    mgr.register("a", ReplicaState.IDLE)
+    assert mgr.promote_idle(0.0) == "a"
+    assert mgr.state_of("a") is ReplicaState.SERVING
+    assert mgr.promote_idle(0.0) is None
+
+
+@given(st.lists(st.tuples(st.floats(0, 1), st.floats(0, 20)),
+                min_size=8, max_size=8),
+       st.integers(2, 8))
+@settings(max_examples=50, deadline=None)
+def test_at_least_one_replica_serves(telemetry, n):
+    """Whatever the telemetry, Eq. 1-4 must never idle the whole pool."""
+    mgr = ClusterStateManager(StatePolicy(window=2))
+    for i in range(n):
+        mgr.register(f"r{i}")
+    for _ in range(3):
+        for i in range(n):
+            u, q = telemetry[i % len(telemetry)]
+            mgr.observe(f"r{i}", u, q)
+        mgr.evaluate_idle_transitions(now=1.0)
+    assert len(mgr.replicas_in(ReplicaState.SERVING)) >= 1
