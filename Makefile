@@ -1,0 +1,15 @@
+PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test collect bench serve
+
+collect:
+	PYTHONPATH=$(PYTHONPATH) python -m pytest --collect-only -q
+
+test: collect
+	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
+
+bench:
+	PYTHONPATH=$(PYTHONPATH):. python benchmarks/run.py
+
+serve:
+	PYTHONPATH=$(PYTHONPATH) python -m repro.launch.serve --arch qwen1.5-0.5b

@@ -1,0 +1,78 @@
+"""Continuous vs static batching on the live smoke model: identical
+ragged request sets (varying prompt + generation lengths) through the
+slot-based ``ContinuousBatcher`` and the lock-step ``static_batch_serve``
+baseline.  The static loop pays max-of-batch decode steps per batch
+(short requests ride as dead slots); continuous batching evicts and
+admits mid-flight, so the same tokens take fewer, fuller steps —
+token throughput and goodput-per-step are the paper-level win.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from benchmarks.common import timed
+from repro.configs.registry import get_config
+from repro.core.engine import make_engine
+from repro.data.synthetic import SyntheticDataset
+from repro.runtime.serving_loop import (
+    ContinuousBatcher, GenRequest, static_batch_serve,
+)
+
+QUICK = bool(int(os.environ.get("BENCH_QUICK", "0")))
+
+
+def _requests(cfg, n, prompt_pad, max_gen, seed=0):
+    rng = np.random.default_rng(seed)
+    data = SyntheticDataset("alpaca", vocab_size=cfg.vocab_size,
+                            seq_len=prompt_pad, seed=seed)
+    toks = data.sample_tokens(n)
+    lens = rng.integers(prompt_pad // 2, prompt_pad + 1, size=n)
+    gens = rng.integers(2, max_gen + 1, size=n)
+    return [GenRequest(request_id=i,
+                       prompt=toks[i, :lens[i]].astype(np.int32),
+                       max_new_tokens=int(gens[i]))
+            for i in range(n)]
+
+
+@timed("continuous_vs_static_batching")
+def run() -> str:
+    import jax
+    n_req = 8 if QUICK else 24
+    slots = 4
+    prompt_pad, max_gen = 16, 12
+    cfg = get_config("qwen1.5-0.5b").scaled()
+    engine = make_engine(cfg, lr=1e-3)
+    model = engine.model
+    params = model.init(jax.random.key(0))
+    lora = model.init_lora(jax.random.key(1))
+    max_seq = prompt_pad + max_gen
+
+    def measure(mode):
+        reqs = _requests(cfg, n_req, prompt_pad, max_gen)
+        if mode == "continuous":
+            b = ContinuousBatcher(engine, params, lora, n_slots=slots,
+                                  max_seq=max_seq, prompt_pad=prompt_pad)
+            return b.run(reqs)
+        return static_batch_serve(engine, params, lora, reqs,
+                                  batch_size=slots, prompt_pad=prompt_pad,
+                                  max_seq=max_seq)
+
+    for mode in ("continuous", "static"):   # warm the jit caches
+        measure(mode)
+    stat = measure("static")
+    cont = measure("continuous")
+    # same requests, same greedy tokens either way (equivalence-tested);
+    # continuous wins by finishing them in fewer, fuller decode steps
+    speedup = stat.wall_time / max(cont.wall_time, 1e-9)
+    return (f"tokens={cont.generated_tokens} "
+            f"continuous={cont.decode_steps}steps/"
+            f"{cont.throughput():.1f}tok_s "
+            f"static={stat.decode_steps}steps/"
+            f"{stat.throughput():.1f}tok_s "
+            f"speedup={speedup:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

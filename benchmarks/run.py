@@ -11,16 +11,17 @@ import traceback
 
 def main() -> None:
     from benchmarks import (
-        component_ablation, coordinator_ablation, dispatcher_stability,
-        end_to_end_goodput, latency_model_fit, model_sharing_cost,
-        overhead, quality_sharing, roofline, trace_stats, utilization,
+        component_ablation, continuous_batching, coordinator_ablation,
+        dispatcher_stability, end_to_end_goodput, latency_model_fit,
+        model_sharing_cost, overhead, quality_sharing, roofline,
+        trace_stats, utilization,
     )
     print("name,us_per_call,derived")
     failures = []
     for mod in (trace_stats, model_sharing_cost, latency_model_fit,
                 quality_sharing, dispatcher_stability, coordinator_ablation,
                 end_to_end_goodput, utilization, overhead,
-                component_ablation, roofline):
+                component_ablation, continuous_batching, roofline):
         try:
             mod.run()
         except Exception as e:

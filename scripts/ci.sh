@@ -1,0 +1,13 @@
+#!/usr/bin/env bash
+# CI entry: collection health gate first (import errors surface as a
+# clean failure instead of a half-run suite), then the tier-1 suite.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== collection gate =="
+python -m pytest --collect-only -q
+
+echo "== tier-1 =="
+python -m pytest -x -q

@@ -1,10 +1,16 @@
 """Sharded, async, reshardable checkpointing (fault-tolerance substrate).
 
 Format: one directory per step with
-  manifest.json     tree structure, shapes, dtypes, step, config hash
-  <leaf-id>.bin.zst zstd-compressed raw bytes per leaf (written from the
+  manifest.json     tree structure, shapes, dtypes, step, config hash,
+                    and the compression codec used
+  <leaf-id>.bin.zst compressed raw bytes per leaf (written from the
                     addressable shards; on restore, any mesh/sharding may
                     be requested — elastic restart after node loss)
+
+zstandard is an optional dependency: when absent the writer falls back
+to stdlib zlib, recording the codec in the manifest so checkpoints stay
+readable either way (a zstd checkpoint restored without zstandard is a
+clear error, not garbage bytes).
 
 The writer runs on a background thread (training never blocks on I/O);
 ``wait()`` joins before the next save or at shutdown.  Restore validates
@@ -23,9 +29,34 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ImportError:               # optional dep: fall back to stdlib zlib
+    zstandard = None
+import zlib
 
 _FLAG = "_COMPLETE"
+
+
+def _compressor(codec: str):
+    if codec == "zstd":
+        cctx = zstandard.ZstdCompressor(level=3)
+        return cctx.compress
+    return lambda data: zlib.compress(data, 3)
+
+
+def _decompressor(codec: str):
+    if codec == "zstd":
+        if zstandard is None:
+            raise ModuleNotFoundError(
+                "checkpoint was written with zstd compression but "
+                "zstandard is not installed")
+        dctx = zstandard.ZstdDecompressor()
+        return dctx.decompress
+    if codec == "zlib":
+        return zlib.decompress
+    raise ValueError(f"unknown checkpoint codec {codec!r}")
 
 
 def _tree_paths(tree) -> List[Tuple[str, Any]]:
@@ -63,16 +94,18 @@ class Checkpointer:
             try:
                 tmp = path + ".tmp"
                 os.makedirs(tmp, exist_ok=True)
+                codec = "zstd" if zstandard is not None else "zlib"
                 manifest = {"step": step, "extra": extra or {},
+                            "codec": codec,
                             "treedef": str(treedef), "leaves": {}}
-                cctx = zstandard.ZstdCompressor(level=3)
+                compress = _compressor(codec)
                 for i, (key, arr) in enumerate(leaves):
                     fn = f"leaf_{i:05d}.bin.zst"
                     manifest["leaves"][key] = {
                         "file": fn, "shape": list(arr.shape),
                         "dtype": str(arr.dtype), "index": i}
                     with open(os.path.join(tmp, fn), "wb") as f:
-                        f.write(cctx.compress(
+                        f.write(compress(
                             np.ascontiguousarray(arr).tobytes()))
                 with open(os.path.join(tmp, "manifest.json"), "w") as f:
                     json.dump(manifest, f)
@@ -133,7 +166,8 @@ class Checkpointer:
         path = os.path.join(self.directory, f"step_{step:010d}")
         with open(os.path.join(path, "manifest.json")) as f:
             manifest = json.load(f)
-        dctx = zstandard.ZstdDecompressor()
+        # pre-codec checkpoints carry no codec field and were zstd-only
+        decompress = _decompressor(manifest.get("codec", "zstd"))
         by_key = manifest["leaves"]
         paths = _tree_paths(template)
         leaves_out = []
@@ -149,7 +183,7 @@ class Checkpointer:
                     f"{key}: checkpoint shape {meta['shape']} != "
                     f"template {want_shape}")
             with open(os.path.join(path, meta["file"]), "rb") as f:
-                raw = dctx.decompress(f.read())
+                raw = decompress(f.read())
             arr = np.frombuffer(raw, dtype=np.dtype(meta["dtype"])) \
                 .reshape(want_shape)
             if str(arr.dtype) != str(jnp.dtype(leaf.dtype)):

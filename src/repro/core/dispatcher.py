@@ -231,6 +231,11 @@ class SubflowDispatcher:
                 self.overload_promotions += 1
                 self._ensure_subflow(promoted, now)
                 self._queue_lat_reset = 0.1 * self.cfg.slo
+                # drop the pre-promotion samples too: once the override
+                # expires (next macro cycle) a stale window would read
+                # as the SAME overload and re-promote immediately —
+                # T̄_queue must be re-measured with the new capacity
+                self.queue_lat.clear()
                 budget = self.cfg.slo - self.avg_queue_latency()
         for rid in self._active_replicas():
             sf = self._ensure_subflow(rid, now)

@@ -1,6 +1,9 @@
-"""Serving driver (deliverable b): batched prefill + decode with KV
-caches, optionally co-executing LoRA fine-tuning via the fused
-``combined_step`` — the paper's model-sharing mechanism live.
+"""Serving driver (deliverable b): continuous-batching decode runtime —
+prompts run through real ``model.prefill`` (one XLA program, no
+per-token warm fill), finished sequences are evicted and new requests
+admitted mid-flight, and ``--combined`` co-runs LoRA fine-tuning via the
+fused ``combined_step`` on every decode tick — the paper's
+model-sharing mechanism live.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
@@ -10,15 +13,14 @@ Usage:
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import ARCH_IDS, get_config
 from repro.core.engine import make_engine
 from repro.data.synthetic import SyntheticDataset
+from repro.runtime.serving_loop import ContinuousBatcher, GenRequest
 
 
 def run_serving(arch: str, *, smoke: bool = True, n_requests: int = 16,
@@ -26,79 +28,55 @@ def run_serving(arch: str, *, smoke: bool = True, n_requests: int = 16,
                 batch_size: int = 8, combined: bool = False,
                 train_batch: int = 4, seed: int = 0,
                 verbose: bool = True) -> dict:
+    """Serve ``n_requests`` prompts on a ``batch_size``-slot continuous
+    batcher; returns throughput + (combined mode) train losses."""
     cfg = get_config(arch)
     if smoke:
         cfg = cfg.scaled()
     assert cfg.has_decode, f"{arch} is encoder-only; no decode serving"
     engine = make_engine(cfg, lr=3e-3)
     model = engine.model
-    key = jax.random.key(seed)
-    params = model.init(key)
+    params = model.init(jax.random.key(seed))
     lora = model.init_lora(jax.random.key(seed + 1))
     opt_state = engine.optimizer.init(lora)
     data = SyntheticDataset("alpaca", vocab_size=cfg.vocab_size,
                             seq_len=prompt_len, seed=seed)
 
-    jit_prefill = jax.jit(model.prefill)
-    jit_decode = jax.jit(model.decode_step, donate_argnums=(2,))
-    jit_combined = jax.jit(engine.combined_step, donate_argnums=(2, 4))
+    batcher = ContinuousBatcher(
+        engine, params, lora, n_slots=batch_size,
+        max_seq=prompt_len + gen_tokens, prompt_pad=prompt_len,
+        opt_state=opt_state)
+    prompts = data.sample_tokens(n_requests)[:, :prompt_len]
+    requests = [GenRequest(request_id=i, prompt=prompts[i],
+                           max_new_tokens=gen_tokens)
+                for i in range(n_requests)]
 
-    total_tokens = 0
-    latencies = []
-    train_losses = []
-    rng = np.random.default_rng(seed)
-    n_batches = -(-n_requests // batch_size)
-    for bi in range(n_batches):
-        bsz = min(batch_size, n_requests - bi * batch_size)
-        prompts = data.sample_tokens(bsz)[:, :prompt_len]
-        batch = {"tokens": jnp.asarray(prompts)}
-        if cfg.family.value == "vlm":
-            batch["vision"] = jnp.zeros(
-                (bsz, cfg.vision_tokens, cfg.d_model), jnp.float32)
-        t0 = time.perf_counter()
-        # prefill into a cache sized for prompt + generation
-        caches = model.init_caches(bsz, prompt_len + gen_tokens)
-        logits = None
-        tok = jnp.asarray(prompts[:, :1])
-        for pos in range(prompt_len):          # teacher-forced warm fill
-            tok = jnp.asarray(prompts[:, pos:pos + 1])
-            if combined:
-                tb = {k: jnp.asarray(v)
-                      for k, v in data.batch(train_batch).items()}
-                if cfg.family.value == "vlm":
-                    tb["vision"] = jnp.zeros(
-                        (train_batch, cfg.vision_tokens, cfg.d_model),
-                        jnp.float32)
-                lora, opt_state, logits, caches, metrics = jit_combined(
-                    params, lora, opt_state, tb, caches, tok,
-                    jnp.int32(pos))
-                train_losses.append(float(metrics["ce_loss"]))
-            else:
-                logits, caches = jit_decode(params, lora, caches, tok,
-                                            jnp.int32(pos))
-        # greedy generation
-        for g in range(gen_tokens):
-            tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-            logits, caches = jit_decode(params, lora, caches, tok,
-                                        jnp.int32(prompt_len + g))
-            total_tokens += bsz
-        latencies.append(time.perf_counter() - t0)
-        if verbose:
-            print(f"batch {bi}: {bsz} reqs, {latencies[-1]:.3f}s"
-                  + (f", train loss {train_losses[-1]:.3f}"
-                     if train_losses else ""))
+    def train_fn():
+        import jax.numpy as jnp
+        return {k: jnp.asarray(v) for k, v in data.batch(train_batch).items()}
+
+    stats = batcher.run(requests, train_data_fn=train_fn if combined
+                        else None)
+    # completion time since run start (all requests arrive at t=0, so
+    # later admission waves legitimately include queueing time)
+    per_req = [r.finished_at for r in requests
+               if r.finished_at is not None]
     out = {
-        "tokens_generated": total_tokens,
-        "mean_batch_latency": float(np.mean(latencies)),
-        "throughput_tok_s": total_tokens / max(sum(latencies), 1e-9),
-        "train_losses": train_losses,
+        "tokens_generated": stats.generated_tokens,
+        "prefill_tokens": stats.prefill_tokens,
+        "decode_steps": stats.decode_steps,
+        "mean_completion_s": float(np.mean(per_req)) if per_req else 0.0,
+        "throughput_tok_s": stats.throughput(),
+        "train_losses": batcher.train_losses,
     }
     if verbose:
-        print(f"served {total_tokens} tokens, "
-              f"{out['throughput_tok_s']:.1f} tok/s"
-              + (f"; co-trained {len(train_losses)} steps "
-                 f"(loss {train_losses[0]:.3f} -> {train_losses[-1]:.3f})"
-                 if train_losses else ""))
+        print(f"served {stats.finished}/{n_requests} requests, "
+              f"{stats.generated_tokens} tokens in {stats.decode_steps} "
+              f"decode steps, {out['throughput_tok_s']:.1f} tok/s"
+              + (f"; co-trained {stats.train_steps} fused steps "
+                 f"(loss {batcher.train_losses[0]:.3f} -> "
+                 f"{batcher.train_losses[-1]:.3f})"
+                 if batcher.train_losses else ""))
     return out
 
 

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.models.sharding import shard
+from repro.models.sharding import shard, shard_map_compat
 
 
 # ---------------------------------------------------------------- norms ----
@@ -339,11 +339,10 @@ def attention_decode_seqsharded(q, k_new, v_new, k_cache, v_cache, pos, *,
 
     pq = P(batch_ax, None, None, None)
     pc = P(batch_ax, seq_ax, None, None)
-    out, new_k, new_v = jax.shard_map(
+    out, new_k, new_v = shard_map_compat(
         body, mesh=mesh,
         in_specs=(pq, pq, pq, pc, pc, P()),
         out_specs=(pq, pc, pc),
-        check_vma=False,
     )(q, k_new, v_new, k_cache, v_cache, pos)
     return out, new_k, new_v
 

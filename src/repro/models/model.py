@@ -262,18 +262,79 @@ class Model:
             out_caches["ssm"] = caches["ssm"]  # conv tail + final SSD state
         return logits, out_caches
 
+    def prefill_ragged(self, params, lora, batch, prompt_lens, *,
+                       block_kv: int = 512,
+                       skip_masked_blocks: bool = False):
+        """Prefill right-padded ragged prompts in one batch.
+
+        ``prompt_lens`` [B] int32 gives each row's true prompt length;
+        logits are gathered at each row's *last real token* rather than
+        the (padded) final position.  Valid for attention-only stacks:
+        causal masking keeps pad tokens out of every real position's KV,
+        and cache rows past ``prompt_lens`` are dead weight masked by the
+        per-slot kv_len at decode time.  SSM/hybrid recurrences thread
+        state through pads, so those families must prefill exact-length
+        (see runtime/serving_loop.py)."""
+        cfg = self.cfg
+        assert not cfg.has_ssm, \
+            f"{cfg.name}: ragged (padded) prefill breaks SSM recurrence"
+        hidden, caches, _ = self.hidden_states(
+            params, lora, batch, collect_caches=True, block_kv=block_kv,
+            skip_masked_blocks=skip_masked_blocks)
+        idx = (prompt_lens - 1).astype(jnp.int32)[:, None, None]
+        last = jnp.take_along_axis(
+            hidden, jnp.broadcast_to(idx, (hidden.shape[0], 1,
+                                           hidden.shape[2])), axis=1)
+        logits = last @ params["lm_head"]
+        out_caches: Dict[str, Any] = {}
+        if caches and caches.get("kv") is not None:
+            out_caches["kv"] = caches["kv"]
+        if caches and caches.get("cross_kv") is not None:
+            out_caches["cross_kv"] = caches["cross_kv"]
+        return logits, out_caches
+
+    # ---------------------------------------------------------- slot ops ---
+    def write_prefill_slot(self, pool_caches, prefill_caches, slot,
+                           src=0):
+        """Copy sequence ``src`` of a prefill cache into decode slot
+        ``slot`` of a pool cache (continuous batching admission).
+
+        Every non-VLM cache leaf is laid out [L, B, ...]; row ``src`` of
+        the prefill leaf has trailing dims <= the pool's (shorter prompt
+        into a longer slot), so a single dynamic_update_slice at batch
+        index ``slot`` covers KV rings, conv tails and SSD states alike.
+        Cache rows beyond the prompt keep stale bytes — never attended,
+        because the slot's kv_len masks them until decode overwrites
+        them in order."""
+        assert self.cfg.family is not Family.VLM, \
+            "VLM cache slots (units-leading layout) are future work"
+
+        def write(pool, pre):
+            row = lax.dynamic_slice_in_dim(
+                pre, jnp.asarray(src, jnp.int32), 1, axis=1)
+            start = (jnp.int32(0), jnp.asarray(slot, jnp.int32)) \
+                + (jnp.int32(0),) * (pool.ndim - 2)
+            return lax.dynamic_update_slice(
+                pool, row.astype(pool.dtype), start)
+
+        return jax.tree.map(write, pool_caches, prefill_caches)
+
     # --------------------------------------------------------------- decode -
     def decode_step(self, params, lora, caches, token, pos):
         """One decode step.  token: [B,1] int32; pos: scalar int32 (next
-        write position).  Returns (logits [B,1,V], updated caches)."""
+        write position, shared) or [B] int32 (per-sequence positions —
+        ragged decode slots for continuous batching).  Returns
+        (logits [B,1,V], updated caches)."""
         cfg = self.cfg
+        pos = jnp.asarray(pos)
         x = jnp.take(params["embed"], token, axis=0)
         x = shard(x, "batch", None, "embed")
         rope_cs = None
         if cfg.has_attention:
-            rope_cs = rope_tables(pos[None] if jnp.ndim(pos) == 0
-                                  else jnp.asarray(pos),
-                                  cfg.head_dim, cfg.rope_theta)
+            # scalar pos -> [1, Dh/2] tables broadcast over the batch;
+            # vector pos -> [B, 1, Dh/2] per-sequence tables
+            rope_pos = pos[None] if pos.ndim == 0 else pos[:, None]
+            rope_cs = rope_tables(rope_pos, cfg.head_dim, cfg.rope_theta)
 
         scan = _scan_or_loop if not cfg.scan_layers else lax.scan
 

@@ -20,7 +20,7 @@ from jax import lax
 
 from repro.configs.base import ModelConfig
 from repro.models.layers import dense_init
-from repro.models.sharding import shard
+from repro.models.sharding import shard, shard_map_compat
 
 
 class MoEParams(NamedTuple):
@@ -157,11 +157,10 @@ def moe_decode_shardmap(params: MoEParams, x: jax.Array, cfg: ModelConfig
 
     pw_g = P(e_ax, d_ax, f_ax)
     pw_d = P(e_ax, f_ax, d_ax)
-    y, aux = jax.shard_map(
+    y, aux = shard_map_compat(
         body, mesh=mesh,
         in_specs=(P(), P(), pw_g, pw_g, pw_d),
         out_specs=(P(), P()),
-        check_vma=False,
     )(xt, params.router, params.wg, params.wu, params.wd)
     return y.reshape(bt, s, d), aux
 

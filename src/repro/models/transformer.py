@@ -147,15 +147,17 @@ def attn_decode(p, x, cfg: ModelConfig, cache_kv, pos, rope_cs, lora=None):
     """One-token attention against a KV cache.
 
     cache_kv: (k_cache, v_cache) [B,S,Hkv,Dh]; pos: scalar int32 absolute
-    position of the new token.  Sliding-window archs keep a *ring buffer*
-    of window size (keys carry absolute RoPE, so ring order is irrelevant
-    — attention is permutation-invariant over cache slots).
-    Returns (out, updated cache)."""
+    position of the new token, or [B] int32 per-sequence positions
+    (ragged decode slots — continuous batching).  Sliding-window archs
+    keep a *ring buffer* of window size (keys carry absolute RoPE, so
+    ring order is irrelevant — attention is permutation-invariant over
+    cache slots).  Returns (out, updated cache)."""
     k_cache, v_cache = cache_kv
     cache_len = k_cache.shape[1]
+    ragged = jnp.ndim(pos) > 0
     q, k, v = _proj_qkv(p, x, cfg, lora)
     if rope_cs is not None:
-        cos, sin = rope_cs  # [1, Dh/2] tables for this position
+        cos, sin = rope_cs  # [1, Dh/2] (shared) or [B, 1, Dh/2] (ragged)
         q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
 
     # sequence-sharded flash-decode (shard_map) when the cache's seq dim
@@ -165,7 +167,7 @@ def attn_decode(p, x, cfg: ModelConfig, cache_kv, pos, rope_cs, lora=None):
     mesh = current_mesh()
     rules = current_rules() if mesh is not None else None
     use_sharded = (
-        mesh is not None and rules is not None
+        mesh is not None and rules is not None and not ragged
         and rules.kv_seq in getattr(mesh, "shape", {})
         and cfg.sliding_window == 0
         and cache_len % mesh.shape[rules.kv_seq] == 0)
@@ -180,10 +182,18 @@ def attn_decode(p, x, cfg: ModelConfig, cache_kv, pos, rope_cs, lora=None):
         return out, (k_cache, v_cache)
 
     wpos = lax.rem(pos, cache_len) if cfg.sliding_window > 0 else pos
-    k_cache = lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype),
-                                              wpos, axis=1)
-    v_cache = lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype),
-                                              wpos, axis=1)
+    if ragged:
+        # each sequence writes its new K/V at its own cache position
+        row_update = jax.vmap(
+            lambda c, new, w: lax.dynamic_update_slice_in_dim(
+                c, new, w, axis=0))
+        k_cache = row_update(k_cache, k.astype(k_cache.dtype), wpos)
+        v_cache = row_update(v_cache, v.astype(v_cache.dtype), wpos)
+    else:
+        k_cache = lax.dynamic_update_slice_in_dim(
+            k_cache, k.astype(k_cache.dtype), wpos, axis=1)
+        v_cache = lax.dynamic_update_slice_in_dim(
+            v_cache, v.astype(v_cache.dtype), wpos, axis=1)
     kv_len = jnp.minimum(pos + 1, cache_len)
     o = attention_decode(q, k_cache, v_cache, kv_len)
     o = o.reshape(x.shape[0], 1, cfg.n_heads * cfg.head_dim)

@@ -2,3 +2,6 @@ from repro.runtime.simulator import Simulator  # noqa: F401
 from repro.runtime.replica import (  # noqa: F401
     InterferenceSurface, LiveReplica, LossCurve, SimReplica,
 )
+from repro.runtime.serving_loop import (  # noqa: F401
+    ContinuousBatcher, GenRequest, ServeStats, static_batch_serve,
+)

@@ -62,7 +62,9 @@ class LossCurve:
     init_loss: float = 2.4
     floor: float = 0.8
     rate: float = 1.0 / 6000.0    # per training sample
-    seen: int = 0
+    # effective samples: statistical-efficiency scaling accumulates
+    # fractional ``samples * eff`` increments, so this is a float
+    seen: float = 0.0
 
     def loss(self) -> float:
         return self.floor + (self.init_loss - self.floor) \
@@ -243,50 +245,109 @@ class SimReplica:
 # Live replica (real JAX execution)
 # =========================================================================
 class LiveReplica:
-    """Runs actual JAX steps (reduced models) and measures wall-clock —
-    the end-to-end integration path.  COMBINED mode executes the fused
-    ``combined_step`` (training + decode in one XLA program over shared
-    base weights)."""
+    """Runs actual JAX serving + training (reduced models) and measures
+    wall-clock — the end-to-end integration path.
+
+    Serving goes through the slot-based ``ContinuousBatcher``
+    (``runtime.serving_loop``): submitted requests become real
+    prefill-then-decode generation over shared caches, and a COMBINED
+    train round executes the fused ``combined_step`` per decode tick
+    whenever serving work is in flight (training + decode in one XLA
+    program over shared base weights)."""
 
     def __init__(self, replica_id: str, model_id: str, engine,
                  params, lora, opt_state,
                  on_result: Callable[[BatchResult, str], None],
                  data_fn: Callable[[int], Dict[str, Any]],
-                 eval_fn: Optional[Callable[[Any], float]] = None):
-        import jax
+                 eval_fn: Optional[Callable[[Any], float]] = None,
+                 serve_slots: int = 4, serve_prompt_len: int = 16,
+                 max_gen_tokens: int = 8):
+        from repro.runtime.serving_loop import ContinuousBatcher
         self.replica_id = replica_id
         self.model_id = model_id
         self.engine = engine
         self.params = params
-        self.lora = lora
-        self.opt_state = opt_state
         self.on_result = on_result
         self.data_fn = data_fn          # batch_size -> training batch dict
         self.eval_fn = eval_fn          # lora -> eval CE loss
         self.adapter_version = 0
         self.train_batch = 0
+        self.serve_prompt_len = serve_prompt_len
+        self.max_gen_tokens = max_gen_tokens
         self._queue: Deque[Tuple[float, List[Request]]] = collections.deque()
+        # submitted-but-unfinished groups:
+        # (submit_t, [Request], {gen_id: GenRequest}, t_start)
+        self._inflight: List[Tuple[float, List[Request],
+                                   Dict[int, Any], float]] = []
+        self._gen_counter = 0
         self._busy_frac = 0.0
         self._last_loss = float("nan")
-        self._jit_train = jax.jit(engine.train_step)
-        self._jit_combined = jax.jit(engine.combined_step)
-        self._jit_loss = jax.jit(
-            lambda p, l, b: engine.model.forward_loss(p, l, b)[0])
+        self.batcher = ContinuousBatcher(
+            engine, params, lora, n_slots=serve_slots,
+            max_seq=serve_prompt_len + max_gen_tokens,
+            prompt_pad=serve_prompt_len, opt_state=opt_state)
+        from repro.runtime.serving_loop import _engine_jits
+        self._jit_loss = _engine_jits(engine)["loss"]
+
+    # adapter + optimizer state live in the batcher so the fused path
+    # can donate/update them in place
+    @property
+    def lora(self):
+        return self.batcher.lora
+
+    @lora.setter
+    def lora(self, value):
+        self.batcher.lora = value
+        # new adapter -> any cached CE probe is stale
+        self._last_loss = float("nan")
+
+    @property
+    def opt_state(self):
+        return self.batcher.opt_state
+
+    @opt_state.setter
+    def opt_state(self, value):
+        self.batcher.opt_state = value
 
     # ------------------------------------------------------------- serving -
     def submit_batch(self, requests: Sequence[Request], now: float) -> None:
         self._queue.append((now, list(requests)))
 
-    def pump(self, now: float) -> None:
-        """Synchronously execute queued batches (examples drive this)."""
+    def _ingest(self, now: float) -> None:
+        """Turn queued control-plane Requests into generation requests on
+        the continuous batcher (prompts drawn from the replica's data
+        distribution; requested output length capped to the smoke
+        budget)."""
+        from repro.runtime.serving_loop import GenRequest
         while self._queue:
             submit_t, batch = self._queue.popleft()
-            t0 = _time.perf_counter()
-            data = self.data_fn(len(batch))
-            loss = float(self._jit_loss(self.params, self.lora, data))
-            lat = _time.perf_counter() - t0
-            q = 1.0 / max(loss, 1e-6)
-            tokens = sum(r.tokens for r in batch)
+            prompts = np.asarray(
+                self.data_fn(len(batch))["tokens"])[:, :self.serve_prompt_len]
+            group: Dict[int, Any] = {}
+            for r, prompt in zip(batch, prompts):
+                g = GenRequest(
+                    request_id=self._gen_counter, prompt=prompt,
+                    max_new_tokens=min(r.tokens, self.max_gen_tokens),
+                    arrival=now)
+                self._gen_counter += 1
+                self.batcher.submit(g)
+                group[g.request_id] = g
+            self._inflight.append((submit_t, batch, group,
+                                   _time.perf_counter()))
+
+    def _emit_finished(self, now: float) -> None:
+        still = []
+        q = None
+        for submit_t, batch, group, t0 in self._inflight:
+            if not all(g.done for g in group.values()):
+                still.append((submit_t, batch, group, t0))
+                continue
+            if q is None:
+                q = self.quality_score(now)
+            # latency up to the LAST request's finish stamp, not up to
+            # whenever the control plane got around to emitting
+            lat = max(g.finished_wall for g in group.values()) - t0
+            tokens = sum(len(g.tokens) for g in group.values())
             for r in batch:
                 r.completed_at = now + lat
                 r.quality = q
@@ -296,9 +357,20 @@ class LiveReplica:
                 queue_latency=max(now - submit_t, 0.0),
                 finished_at=now + lat, quality=q, tokens=tokens,
                 train_batch=self.train_batch), batch[0].stream_id)
+        self._inflight = still
+
+    def pump(self, now: float) -> None:
+        """Synchronously drain queued serving work through the
+        continuous batcher (examples drive this)."""
+        self._ingest(now)
+        while not self.batcher.idle():
+            self.batcher.step(now=now)
+            self._emit_finished(now)
 
     def queue_length(self, now: float) -> int:
-        return sum(len(b) for _, b in self._queue)
+        return sum(len(b) for _, b in self._queue) \
+            + sum(len(b) for _, b, g, _t in self._inflight
+                  if not all(x.done for x in g.values()))
 
     def utilization(self, now: float) -> float:
         return self._busy_frac
@@ -313,17 +385,22 @@ class LiveReplica:
 
     def train_round(self, train_batch: int, infer_batch: int, steps: int,
                     now: float) -> TrainRoundStats:
-        import jax.numpy as jnp
+        """One local round through the batcher: each tick is the fused
+        combined_step while serving work is in flight, a plain LoRA step
+        otherwise."""
         self.train_batch = train_batch
+        self._ingest(now)
         t0 = _time.perf_counter()
-        losses = []
+        n_before = len(self.batcher.train_losses)
         for _ in range(steps):
-            data = self.data_fn(train_batch)
-            self.lora, self.opt_state, metrics = self._jit_train(
-                self.params, self.lora, self.opt_state, data)
-            losses.append(float(metrics["ce_loss"]))
+            self.batcher.step(train_batch=self.data_fn(train_batch),
+                              now=now)
+            # emit groups the moment they complete so their latency
+            # reflects serving time, not the rest of the round
+            self._emit_finished(now)
         dt = (_time.perf_counter() - t0) / max(steps, 1)
         self._busy_frac = 0.9
+        losses = self.batcher.train_losses[n_before:]
         before = losses[0] if losses else float("nan")
         after = losses[-1] if losses else float("nan")
         self._last_loss = after
@@ -337,5 +414,9 @@ class LiveReplica:
         if self.eval_fn is not None:
             return 1.0 / max(self.eval_fn(self.lora), 1e-6)
         if math.isnan(self._last_loss):
-            return 1.0
+            # serving-only replica with no training signal yet: probe
+            # the current adapter's CE on a held-out-style batch so
+            # BatchResult.quality tracks the real model, not a constant
+            self._last_loss = float(self._jit_loss(
+                self.params, self.lora, self.data_fn(4)))
         return 1.0 / max(self._last_loss, 1e-6)

@@ -1,0 +1,357 @@
+"""Slot-based continuous-batching decode runtime (FlexLLM-style
+token-level co-serving over one shared base model).
+
+A ``ContinuousBatcher`` owns a fixed pool of decode *slots* backed by a
+single pre-allocated cache pool (``model.init_caches(n_slots, max_seq)``)
+with per-slot KV lengths — the ragged ``kv_len [B]`` path the decode
+attention (jnp and Pallas) already supports, finally exploited upstream:
+
+  admission   a free slot takes the next queued request; the prompt runs
+              through REAL ``model.prefill`` / ``model.prefill_ragged``
+              (one XLA program, no per-token warm fill) and the caches
+              are copied into the slot via ``model.write_prefill_slot``;
+  decode      every step advances ALL active slots one token with
+              per-slot positions (``decode_step`` with ``pos [B]``);
+  eviction    a slot frees the moment its request hits max_new_tokens /
+              EOS — the next queued request is admitted mid-flight while
+              the other slots keep decoding (no lock-step drain);
+  co-serving  passing a training batch to ``step`` runs the fused
+              ``engine.combined_step`` — LoRA finetuning + the decode
+              tick in ONE program over shared base weights (the paper's
+              model-sharing semantics, per token instead of per batch).
+
+``static_batch_serve`` is the lock-step baseline (prefill a batch,
+decode until the LONGEST request finishes, then drain) used by
+benchmarks/continuous_batching.py and the equivalence tests.
+
+Scope: non-VLM families; full-attention or cache-covering windows
+(``sliding_window == 0 or >= max_seq``) — ring-buffer prefill handoff
+and VLM cross-KV slots are ROADMAP items.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import functools
+import time
+from typing import Any, Callable, Deque, Dict, List, Optional, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.lru_cache(maxsize=16)
+def _engine_jits(engine) -> Dict[str, Callable]:
+    """One set of jitted step programs per (frozen, hashable) Engine —
+    shared across every batcher / baseline run on that engine so fresh
+    runtimes never retrace (donation is per-call, sharing is safe)."""
+    model = engine.model
+    return {
+        "decode": jax.jit(model.decode_step, donate_argnums=(2,)),
+        "prefill_ragged": jax.jit(model.prefill_ragged),
+        "prefill_exact": jax.jit(model.prefill),
+        "write": jax.jit(model.write_prefill_slot, donate_argnums=(0,)),
+        "combined": jax.jit(engine.combined_step, donate_argnums=(2, 4)),
+        "train": jax.jit(engine.train_step, donate_argnums=(2,)),
+        "loss": jax.jit(
+            lambda p, l, b: engine.model.forward_loss(p, l, b)[0]),
+    }
+
+
+@dataclasses.dataclass
+class GenRequest:
+    """One generation request: prompt in, greedy tokens out."""
+    request_id: int
+    prompt: np.ndarray                  # [P] int32 token ids
+    max_new_tokens: int = 16
+    arrival: float = 0.0
+    # filled by the runtime
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    prefill_at: Optional[float] = None
+    finished_at: Optional[float] = None
+    # wall-clock (perf_counter) finish stamp — ``finished_at`` carries
+    # whatever clock the caller's ``now`` uses, which may be sim time
+    finished_wall: Optional[float] = None
+
+    @property
+    def done(self) -> bool:
+        return self.finished_at is not None
+
+
+@dataclasses.dataclass
+class ServeStats:
+    admitted: int = 0
+    finished: int = 0
+    prefill_tokens: int = 0
+    generated_tokens: int = 0
+    decode_steps: int = 0
+    train_steps: int = 0
+    wall_time: float = 0.0
+
+    def throughput(self) -> float:
+        return self.generated_tokens / max(self.wall_time, 1e-9)
+
+
+class ContinuousBatcher:
+    """Fixed-slot continuous batching over one model replica.
+
+    Owns the adapter + optimizer state so the fused combined path can
+    donate/update them in place; ``LiveReplica`` delegates its adapter
+    accessors here.
+    """
+
+    def __init__(self, engine, params, lora, *, n_slots: int = 8,
+                 max_seq: int = 128, prompt_pad: int = 32,
+                 opt_state: Any = None, eos_id: Optional[int] = None):
+        cfg = engine.model.cfg
+        if n_slots < 1:
+            # run() makes progress only through slots; zero would spin
+            # forever on a non-empty queue
+            raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        if not cfg.has_decode:
+            raise NotImplementedError(
+                f"{cfg.name}: encoder-only, no decode serving")
+        if cfg.family.value == "vlm":
+            raise NotImplementedError(
+                f"{cfg.name}: VLM cross-KV slot plumbing (units-leading "
+                "cache layout + per-request vision inputs) is a ROADMAP "
+                "item; use the prefill/decode API directly")
+        if cfg.sliding_window > 0 and prompt_pad > cfg.sliding_window:
+            # ring handoff is sound as long as the whole prompt fits the
+            # window: prefill K/V land in the ring verbatim and decode
+            # wraps exactly like the seed's ring-buffer parity test
+            raise ValueError(
+                f"{cfg.name}: prompt_pad {prompt_pad} exceeds the "
+                f"attention window {cfg.sliding_window}; windowed "
+                "prompt eviction at admission is not implemented")
+        self.engine = engine
+        self.model = engine.model
+        self.cfg = cfg
+        self.params = params
+        self.lora = lora
+        self.opt_state = opt_state
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.prompt_pad = min(prompt_pad, max_seq)
+        self.eos_id = eos_id
+
+        self.caches = self.model.init_caches(n_slots, max_seq)
+        self.queue: Deque[GenRequest] = collections.deque()
+        self.slot_req: List[Optional[GenRequest]] = [None] * n_slots
+        self.slot_pos = np.zeros(n_slots, np.int32)   # next write position
+        self.slot_tok = np.zeros(n_slots, np.int32)   # next token to feed
+        self.stats = ServeStats()
+        self.train_losses: List[float] = []
+
+        jits = _engine_jits(engine)
+        self._jit_decode = jits["decode"]
+        self._jit_prefill_ragged = jits["prefill_ragged"]
+        self._jit_prefill_exact = jits["prefill_exact"]
+        self._jit_write = jits["write"]
+        self._jit_combined = jits["combined"]
+        self._jit_train = jits["train"]
+
+    # ------------------------------------------------------------ ingestion -
+    def submit(self, req: GenRequest) -> None:
+        req.prompt = np.asarray(req.prompt, np.int32).reshape(-1)
+        assert len(req.prompt) <= self.prompt_pad, \
+            f"prompt len {len(req.prompt)} > prompt_pad {self.prompt_pad}"
+        # a slot holds prompt + generation; clamp so writes stay in-pool
+        budget = self.max_seq - len(req.prompt)
+        req.max_new_tokens = max(1, min(req.max_new_tokens, budget))
+        self.queue.append(req)
+
+    def active_slots(self) -> List[int]:
+        return [i for i in range(self.n_slots)
+                if self.slot_req[i] is not None]
+
+    def idle(self) -> bool:
+        return not self.queue and not self.active_slots()
+
+    # ------------------------------------------------------------ admission -
+    def _prefill_wave(self, reqs: List[GenRequest]):
+        """Prefill an admission wave.  Attention stacks: ONE ragged
+        (right-padded) prefill program for the whole wave.  SSM/hybrid:
+        state threads through pads, so exact-length per-request prefill
+        (one compile per distinct prompt length)."""
+        if self.cfg.has_ssm:
+            outs = [self._jit_prefill_exact(
+                self.params, self.lora,
+                {"tokens": jnp.asarray(r.prompt[None])}) for r in reqs]
+            return [(logits[0], pre, 0) for logits, pre in outs]
+        lens = np.array([len(r.prompt) for r in reqs], np.int32)
+        padded = np.zeros((len(reqs), self.prompt_pad), np.int32)
+        for j, r in enumerate(reqs):
+            padded[j, :lens[j]] = r.prompt
+        logits, pre = self._jit_prefill_ragged(
+            self.params, self.lora, {"tokens": jnp.asarray(padded)},
+            jnp.asarray(lens))
+        return [(logits[j], pre, j) for j in range(len(reqs))]
+
+    def admit(self, now: float = 0.0) -> List[GenRequest]:
+        """Fill free slots from the queue; returns requests that finished
+        at admission (max_new_tokens == 1)."""
+        finished: List[GenRequest] = []
+        free = [i for i in range(self.n_slots)
+                if self.slot_req[i] is None]
+        take = min(len(free), len(self.queue))
+        if not take:
+            return finished
+        reqs = [self.queue.popleft() for _ in range(take)]
+        for slot, req, (logits_row, pre_caches, src) in zip(
+                free, reqs, self._prefill_wave(reqs)):
+            first = int(jnp.argmax(logits_row[-1]))
+            req.tokens.append(first)
+            req.prefill_at = now
+            self.stats.admitted += 1
+            self.stats.prefill_tokens += len(req.prompt)
+            self.stats.generated_tokens += 1
+            if len(req.tokens) >= req.max_new_tokens \
+                    or first == self.eos_id:
+                # done at admission: never occupies the slot, so skip
+                # the cache write entirely
+                req.finished_at = now
+                req.finished_wall = time.perf_counter()
+                self.stats.finished += 1
+                finished.append(req)
+                continue
+            self.caches = self._jit_write(self.caches, pre_caches,
+                                          slot, src)
+            self.slot_req[slot] = req
+            self.slot_pos[slot] = len(req.prompt)
+            self.slot_tok[slot] = first
+        return finished
+
+    # --------------------------------------------------------------- decode -
+    def step(self, train_batch: Optional[Dict[str, Any]] = None,
+             now: float = 0.0) -> List[GenRequest]:
+        """One runtime tick: admit, then advance every active slot one
+        token (fused with a LoRA training step when ``train_batch`` is
+        given).  Returns the requests that finished this tick."""
+        if train_batch is not None and self.opt_state is None:
+            raise ValueError(
+                "step(train_batch=...) requires opt_state (pass it to "
+                "the ContinuousBatcher constructor)")
+        finished = self.admit(now)
+        active = self.active_slots()
+        if not active:
+            if train_batch is not None:
+                self._plain_train(train_batch)
+            return finished
+        toks = jnp.asarray(self.slot_tok[:, None])
+        pos = jnp.asarray(self.slot_pos)
+        if train_batch is not None:
+            (self.lora, self.opt_state, logits, self.caches,
+             metrics) = self._jit_combined(
+                self.params, self.lora, self.opt_state, train_batch,
+                self.caches, toks, pos)
+            self.train_losses.append(float(metrics["ce_loss"]))
+            self.stats.train_steps += 1
+        else:
+            logits, self.caches = self._jit_decode(
+                self.params, self.lora, self.caches, toks, pos)
+        self.stats.decode_steps += 1
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+        for i in active:
+            req = self.slot_req[i]
+            req.tokens.append(int(nxt[i]))
+            self.stats.generated_tokens += 1
+            self.slot_pos[i] += 1
+            self.slot_tok[i] = nxt[i]
+            if len(req.tokens) >= req.max_new_tokens \
+                    or int(nxt[i]) == self.eos_id:
+                req.finished_at = now
+                req.finished_wall = time.perf_counter()
+                self.stats.finished += 1
+                self.slot_req[i] = None
+                self.slot_pos[i] = 0
+                finished.append(req)
+        return finished
+
+    def _plain_train(self, train_batch) -> None:
+        self.lora, self.opt_state, metrics = self._jit_train(
+            self.params, self.lora, self.opt_state, train_batch)
+        self.train_losses.append(float(metrics["ce_loss"]))
+        self.stats.train_steps += 1
+
+    # ------------------------------------------------------------------ run -
+    def run(self, requests: Sequence[GenRequest],
+            train_data_fn: Optional[Callable[[], Dict[str, Any]]] = None
+            ) -> ServeStats:
+        """Drain ``requests`` to completion; with ``train_data_fn``,
+        every tick co-runs a fused training step."""
+        for r in requests:
+            self.submit(r)
+        t0 = time.perf_counter()
+        while not self.idle():
+            tb = train_data_fn() if train_data_fn is not None else None
+            self.step(train_batch=tb, now=time.perf_counter() - t0)
+        self.stats.wall_time += time.perf_counter() - t0
+        return self.stats
+
+
+# ========================================================================
+# Lock-step static-batch baseline
+# ========================================================================
+def static_batch_serve(engine, params, lora, requests: Sequence[GenRequest],
+                       *, batch_size: int = 8, prompt_pad: int = 32,
+                       max_seq: int = 128) -> ServeStats:
+    """The pre-continuous-batching serving loop: group requests into
+    fixed batches, prefill the batch, then decode lock-step until the
+    LONGEST request in the batch finishes — short requests ride along as
+    dead slots.  Same greedy math as ``ContinuousBatcher`` (equivalence-
+    tested), so throughput differences are pure scheduling."""
+    model = engine.model
+    cfg = model.cfg
+    assert not cfg.has_ssm and cfg.family.value != "vlm", \
+        "baseline supports attention-only stacks"
+    jits = _engine_jits(engine)
+    jit_prefill = jits["prefill_ragged"]
+    jit_decode = jits["decode"]
+    stats = ServeStats()
+    t0 = time.perf_counter()
+    reqs = list(requests)
+    for lo in range(0, len(reqs), batch_size):
+        batch = reqs[lo:lo + batch_size]
+        bsz = len(batch)
+        lens = np.array([len(r.prompt) for r in batch], np.int32)
+        padded = np.zeros((bsz, prompt_pad), np.int32)
+        for i, r in enumerate(batch):
+            padded[i, :lens[i]] = r.prompt
+            r.max_new_tokens = max(
+                1, min(r.max_new_tokens, max_seq - lens[i]))
+        logits, pre = jit_prefill(params, lora,
+                                  {"tokens": jnp.asarray(padded)},
+                                  jnp.asarray(lens))
+        caches = model.init_caches(bsz, max_seq)
+        caches = jax.tree.map(
+            lambda pool, p: jax.lax.dynamic_update_slice(
+                pool, p.astype(pool.dtype), (0,) * pool.ndim),
+            caches, {"kv": pre["kv"]})
+        toks = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+        pos = lens.copy()
+        for i, r in enumerate(batch):
+            r.tokens.append(int(toks[i]))
+        stats.admitted += bsz
+        stats.prefill_tokens += int(lens.sum())
+        stats.generated_tokens += bsz
+        # lock-step decode: every slot pays for the longest request
+        steps = max(r.max_new_tokens for r in batch) - 1
+        for _ in range(steps):
+            logits, caches = jit_decode(params, lora, caches,
+                                        jnp.asarray(toks[:, None]),
+                                        jnp.asarray(pos))
+            stats.decode_steps += 1
+            toks = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+            pos += 1
+            for i, r in enumerate(batch):
+                if len(r.tokens) < r.max_new_tokens:
+                    r.tokens.append(int(toks[i]))
+                    stats.generated_tokens += 1
+        for r in batch:
+            r.finished_at = time.perf_counter() - t0
+            stats.finished += 1
+    stats.wall_time += time.perf_counter() - t0
+    return stats

@@ -1,0 +1,91 @@
+"""Optional-hypothesis shim: property tests run under real hypothesis
+when it is installed, and under a lightweight deterministic random
+sampler otherwise (so `pytest` collects and exercises them either way —
+the seed's hard `from hypothesis import ...` lines broke collection of
+six modules on minimal installs).
+
+Usage in tests:  ``from _hyp import given, settings, st``
+
+The fallback implements just the strategy surface this repo uses
+(integers / floats / booleans / sampled_from / lists / tuples) as
+draw-callables over one seeded numpy Generator; ``@given`` replays
+``max_examples`` random draws (default 20).  It does NOT shrink or
+persist failing examples — it is a coverage fallback, not a hypothesis
+replacement.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+    import zlib
+
+    import numpy as _np
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda r: int(r.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, allow_nan=False,
+                   allow_infinity=False, **_kw):
+            return _Strategy(
+                lambda r: float(r.uniform(min_value, max_value)))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda r: bool(r.integers(0, 2)))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(
+                lambda r: elements[int(r.integers(0, len(elements)))])
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10, **_kw):
+            return _Strategy(lambda r: [
+                elements.draw(r)
+                for _ in range(int(r.integers(min_size, max_size + 1)))])
+
+        @staticmethod
+        def tuples(*strategies):
+            return _Strategy(
+                lambda r: tuple(s.draw(r) for s in strategies))
+
+    st = _Strategies()
+
+    def settings(max_examples=20, **_kw):
+        def deco(fn):
+            fn._hyp_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            # NOT functools.wraps: pytest would see the wrapped
+            # signature and demand fixtures for the drawn params —
+            # like hypothesis, expose a zero-arg test function
+            def run():
+                n = getattr(run, "_hyp_max_examples",
+                            getattr(fn, "_hyp_max_examples", 20))
+                # crc32, not hash(): str hashing is salted per process,
+                # and a failing draw must reproduce on rerun
+                rng = _np.random.default_rng(
+                    zlib.crc32(fn.__qualname__.encode()))
+                for _ in range(n):
+                    fn(*(s.draw(rng) for s in strategies))
+            run.__name__ = fn.__name__
+            run.__qualname__ = fn.__qualname__
+            run.__doc__ = fn.__doc__
+            run.__module__ = fn.__module__
+            return run
+        return deco

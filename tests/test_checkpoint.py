@@ -7,6 +7,7 @@ import numpy as np
 import pytest
 
 from repro.checkpoint import Checkpointer
+from repro.launch.mesh import make_mesh_compat
 
 
 def _tree():
@@ -72,8 +73,7 @@ def test_elastic_restore_mesh_change(tmp_path):
     tree = {"w": jnp.arange(16.0).reshape(4, 4)}
     ck.save(1, tree)
     ck.wait()
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh_compat((1,), ("data",))
     restored, _ = elastic_restore(ck, jax.eval_shape(lambda: tree), mesh,
                                   lambda key, leaf: P())
     np.testing.assert_array_equal(np.asarray(restored["w"]),

@@ -143,3 +143,29 @@ def test_macro_cycle_sets_bmax_from_model():
     sf = d.subflows["r0"]
     expected = int(((0.5 - 0.07) - 0.05) // 0.02)
     assert abs(sf.b_max - expected) <= 1
+
+
+def test_macro_overload_reset_clears_stale_queue_samples():
+    """Regression: the overload promotion resets T̄_queue to 0.1τ for the
+    current cycle, but the pre-promotion latency samples used to stay in
+    the deque — the NEXT macro cycle read the same stale overload and
+    re-promoted immediately.  The reset must clear the window so
+    T̄_queue is re-measured under the new capacity."""
+    cfg = DispatcherConfig(slo=0.5)
+    replicas = {"r0": FakeReplica("r0"), "r1": FakeReplica("r1")}
+    d = SubflowDispatcher("m", cfg, replicas,
+                          state_of=lambda rid: ReplicaState.SERVING,
+                          promote_idle=lambda now: "r1")
+    for _ in range(8):                      # way past the SLO
+        d.on_batch_result(BatchResult(
+            replica_id="r0", batch_size=4, infer_latency=0.2,
+            total_latency=0.9, queue_latency=0.7, finished_at=1.0,
+            quality=1.0, tokens=100))
+    d.macro_cycle(0.0)
+    assert d.overload_promotions == 1
+    assert len(d.queue_lat) == 0            # stale window dropped
+    assert d.avg_queue_latency() == pytest.approx(0.1 * cfg.slo)
+    # next macro cycle: override expired, no fresh samples -> no
+    # phantom re-promotion off the old window
+    d.macro_cycle(cfg.t_fit)
+    assert d.overload_promotions == 1

@@ -1,6 +1,6 @@
 """Goodput model (Eq. 7-8) + constrained optimization (Eq. 11-12)."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.goodput import (
     EfficiencyParams, efficiency, goodput, optimize, throughput,

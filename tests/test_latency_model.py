@@ -3,7 +3,7 @@ claim that interference breaks univariate fits (R² drop) while the
 bivariate model recovers accuracy."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.latency_model import BivariateLatencyModel, LinearLatencyModel
 

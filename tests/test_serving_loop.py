@@ -1,0 +1,238 @@
+"""Continuous-batching runtime: prefill/decode parity, continuous-vs-
+static equivalence, mid-flight admission/eviction, fused co-training,
+and the LiveReplica integration path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.core.engine import make_engine
+from repro.core.interfaces import Request
+from repro.data.synthetic import SyntheticDataset
+from repro.runtime.replica import LiveReplica
+from repro.runtime.serving_loop import (
+    ContinuousBatcher, GenRequest, static_batch_serve,
+)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("qwen1.5-0.5b").scaled()
+    engine = make_engine(cfg, lr=3e-3)
+    model = engine.model
+    params = model.init(jax.random.key(0))
+    lora = jax.tree.map(lambda x: x + 0.01,
+                        model.init_lora(jax.random.key(1)))
+    return cfg, engine, model, params, lora
+
+
+def _prompts(cfg, n, lens, seed=3):
+    data = SyntheticDataset("alpaca", vocab_size=cfg.vocab_size,
+                            seq_len=max(lens), seed=seed)
+    toks = data.sample_tokens(n)
+    return [toks[i, :lens[i]].astype(np.int32) for i in range(n)]
+
+
+# ------------------------------------------------------------- parity ------
+def test_prefill_matches_teacher_forced_decode(setup):
+    """model.prefill must produce the same last-token logits AND caches
+    as feeding the prompt token-by-token through decode_step."""
+    cfg, engine, model, params, lora = setup
+    B, P = 2, 12
+    toks = jnp.asarray(np.stack(_prompts(cfg, B, [P] * B)))
+    logits_pre, caches_pre = model.prefill(params, lora, {"tokens": toks})
+
+    caches = model.init_caches(B, P)
+    for t in range(P):
+        logits_dec, caches = model.decode_step(
+            params, lora, caches, toks[:, t:t + 1], jnp.int32(t))
+    np.testing.assert_allclose(np.asarray(logits_pre),
+                               np.asarray(logits_dec),
+                               rtol=1e-4, atol=1e-4)
+    for a, b in zip(jax.tree.leaves(caches_pre["kv"]),
+                    jax.tree.leaves(caches["kv"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_prefill_ragged_matches_exact(setup):
+    """Right-padded ragged prefill: each row's last-real-token logits
+    and live cache rows must match an exact-length prefill of that row."""
+    cfg, engine, model, params, lora = setup
+    lens = [5, 12, 9]
+    pad = 12
+    prompts = _prompts(cfg, len(lens), lens)
+    padded = np.zeros((len(lens), pad), np.int32)
+    for i, p in enumerate(prompts):
+        padded[i, :len(p)] = p
+    logits_r, caches_r = model.prefill_ragged(
+        params, lora, {"tokens": jnp.asarray(padded)},
+        jnp.asarray(lens, jnp.int32))
+    for i, p in enumerate(prompts):
+        logits_e, caches_e = model.prefill(
+            params, lora, {"tokens": jnp.asarray(p[None])})
+        np.testing.assert_allclose(np.asarray(logits_r[i]),
+                                   np.asarray(logits_e[0]),
+                                   rtol=1e-4, atol=1e-4)
+        # cache rows up to the true prompt length are live; beyond is
+        # dead weight masked by kv_len
+        for a, b in zip(jax.tree.leaves(caches_r["kv"]),
+                        jax.tree.leaves(caches_e["kv"])):
+            np.testing.assert_allclose(
+                np.asarray(a)[:, i, :len(p)], np.asarray(b)[:, 0],
+                rtol=1e-4, atol=1e-4)
+
+
+def test_vector_pos_decode_matches_scalar(setup):
+    """decode_step with pos [B] (all equal) == scalar pos."""
+    cfg, engine, model, params, lora = setup
+    B, S = 3, 16
+    tok = jnp.asarray([[7], [11], [13]], jnp.int32)
+    c0 = model.init_caches(B, S)
+    lg_s, c_s = model.decode_step(params, lora, c0, tok, jnp.int32(4))
+    c0 = model.init_caches(B, S)
+    lg_v, c_v = model.decode_step(params, lora, c0, tok,
+                                  jnp.full((B,), 4, jnp.int32))
+    np.testing.assert_allclose(np.asarray(lg_s), np.asarray(lg_v),
+                               rtol=1e-5, atol=1e-5)
+    for a, b in zip(jax.tree.leaves(c_s), jax.tree.leaves(c_v)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+
+
+# -------------------------------------------------------- equivalence ------
+def _reference_greedy(model, params, lora, prompt, n_new):
+    """Single-sequence prefill + decode: the unambiguous ground truth."""
+    logits, caches = model.prefill(params, lora,
+                                   {"tokens": jnp.asarray(prompt[None])})
+    pool = model.init_caches(1, len(prompt) + n_new)
+    pool = model.write_prefill_slot(pool, caches, 0)
+    out = [int(jnp.argmax(logits[0, -1]))]
+    pos = len(prompt)
+    while len(out) < n_new:
+        logits, pool = model.decode_step(
+            params, lora, pool, jnp.asarray([[out[-1]]], jnp.int32),
+            jnp.asarray([pos], jnp.int32))
+        out.append(int(jnp.argmax(logits[0, -1])))
+        pos += 1
+    return out
+
+
+def test_continuous_matches_static_and_reference(setup):
+    """Same requests => same greedy tokens per request, whether served
+    by the continuous batcher (2 slots, mid-flight admission), the
+    lock-step static baseline, or one-at-a-time reference decode."""
+    cfg, engine, model, params, lora = setup
+    lens = [6, 10, 4, 8, 7]
+    gens = [5, 2, 6, 3, 4]
+    prompts = _prompts(cfg, len(lens), lens)
+
+    def fresh():
+        return [GenRequest(request_id=i, prompt=prompts[i].copy(),
+                           max_new_tokens=gens[i])
+                for i in range(len(lens))]
+
+    cont = fresh()
+    batcher = ContinuousBatcher(engine, params, lora, n_slots=2,
+                                max_seq=16, prompt_pad=10)
+    batcher.run(cont)
+    stat = fresh()
+    static_batch_serve(engine, params, lora, stat, batch_size=2,
+                       prompt_pad=10, max_seq=16)
+    for i in range(len(lens)):
+        ref = _reference_greedy(model, params, lora, prompts[i], gens[i])
+        assert cont[i].tokens == ref, f"continuous diverges on req {i}"
+        assert stat[i].tokens == ref, f"static diverges on req {i}"
+
+
+# ----------------------------------------------------- slot lifecycle ------
+def test_mid_flight_admission_and_eviction(setup):
+    """6 requests on 2 slots: slots must be reused as requests finish,
+    and every request completes with its full token budget."""
+    cfg, engine, model, params, lora = setup
+    prompts = _prompts(cfg, 6, [6] * 6)
+    reqs = [GenRequest(request_id=i, prompt=prompts[i], max_new_tokens=3)
+            for i in range(6)]
+    batcher = ContinuousBatcher(engine, params, lora, n_slots=2,
+                                max_seq=12, prompt_pad=6)
+    stats = batcher.run(reqs)
+    assert stats.finished == 6
+    assert stats.admitted == 6
+    assert all(len(r.tokens) == 3 for r in reqs)
+    assert batcher.idle()
+    # 3 admission waves x 2 decode steps each (first token from prefill)
+    assert stats.decode_steps == 6
+    assert stats.generated_tokens == 18
+
+
+def test_max_new_tokens_clamped_to_slot_budget(setup):
+    cfg, engine, model, params, lora = setup
+    (prompt,) = _prompts(cfg, 1, [8])
+    req = GenRequest(request_id=0, prompt=prompt, max_new_tokens=100)
+    batcher = ContinuousBatcher(engine, params, lora, n_slots=1,
+                                max_seq=12, prompt_pad=8)
+    batcher.run([req])
+    assert len(req.tokens) == 4       # max_seq - prompt_len
+
+
+# ---------------------------------------------------------- co-serving -----
+def test_combined_interleaves_training(setup):
+    """Every decode tick with a train batch runs the fused
+    combined_step: the adapter must move while tokens stream out."""
+    cfg, engine, model, params, lora = setup
+    opt = engine.optimizer.init(lora)
+    data = SyntheticDataset("alpaca", vocab_size=cfg.vocab_size,
+                            seq_len=16, seed=0)
+    prompts = _prompts(cfg, 4, [8] * 4)
+    reqs = [GenRequest(request_id=i, prompt=prompts[i], max_new_tokens=4)
+            for i in range(4)]
+    batcher = ContinuousBatcher(engine, params, lora, n_slots=4,
+                                max_seq=16, prompt_pad=8, opt_state=opt)
+    stats = batcher.run(
+        reqs, train_data_fn=lambda: {
+            k: jnp.asarray(v) for k, v in data.batch(4).items()})
+    assert stats.finished == 4
+    assert stats.train_steps == stats.decode_steps >= 1
+    assert all(l == l for l in batcher.train_losses)
+    moved = any(
+        not np.allclose(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(lora),
+                        jax.tree.leaves(batcher.lora)))
+    assert moved, "fused co-training must update the adapter"
+
+
+# ---------------------------------------------------------- LiveReplica ----
+def test_live_replica_serves_and_cotrains(setup):
+    """The control-plane integration path: submitted Requests drive real
+    prefill+decode generation, and a train_round co-runs the fused step
+    while serving work is in flight."""
+    cfg, engine, model, params, lora = setup
+    opt = engine.optimizer.init(lora)
+    data = SyntheticDataset("alpaca", vocab_size=cfg.vocab_size,
+                            seq_len=24, seed=0)
+    results = []
+    rep = LiveReplica(
+        "r0", "m", engine, params, lora, opt,
+        on_result=lambda res, sid: results.append(res),
+        data_fn=lambda b: {k: jnp.asarray(v)
+                           for k, v in data.batch(b).items()},
+        serve_slots=2, serve_prompt_len=8, max_gen_tokens=4)
+    reqs = [Request(request_id=i, stream_id="s", arrival=0.0,
+                    deadline=60.0, tokens=4) for i in range(3)]
+    rep.submit_batch(reqs, now=0.0)
+    assert rep.queue_length(0.0) == 3
+    # a train round with serving in flight runs the FUSED path
+    stats = rep.train_round(train_batch=4, infer_batch=3, steps=2,
+                            now=0.0)
+    assert stats.steps == 2
+    assert rep.batcher.stats.train_steps == 2
+    assert len(rep.batcher.active_slots()) > 0   # serving advanced too
+    rep.pump(now=1.0)                            # drain the rest
+    assert len(results) == 1
+    res = results[0]
+    assert res.batch_size == 3
+    assert res.tokens == 12                      # 3 reqs x 4 real tokens
+    assert res.infer_latency > 0
+    assert all(r.completed_at is not None for r in reqs)
+    assert rep.queue_length(2.0) == 0

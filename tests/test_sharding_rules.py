@@ -7,7 +7,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.registry import ARCH_IDS, get_config
 from repro.launch.mesh import (
-    batch_shardings, logical_axes_for, param_shardings, rules_for,
+    batch_shardings, logical_axes_for, make_mesh_compat, param_shardings,
+    rules_for,
 )
 from repro.models.model import build
 from repro.models.sharding import (
@@ -16,13 +17,11 @@ from repro.models.sharding import (
 
 
 def _mesh11():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh_compat((1, 1), ("data", "model"))
 
 
 def test_filter_spec_drops_nondivisible():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh_compat((1, 1), ("data", "model"))
     # craft a fake mesh shape dict via a real mesh of size 1 but checking
     # logic with the mesh axis sizes it reports
     spec = _filter_spec(P("model", "data"), mesh, (25, 16))
@@ -64,8 +63,7 @@ def test_param_shardings_cover_every_leaf(arch):
 
 
 def test_rules_for_head_fallback():
-    mesh16 = jax.make_mesh((1, 1), ("data", "model"),
-                           axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh16 = make_mesh_compat((1, 1), ("data", "model"))
     # qwen3 has 40 heads: on a 16-way model axis they don't divide —
     # emulate by checking the rule function's branch directly
 

@@ -15,7 +15,7 @@ import numpy as np
 from repro.configs.registry import get_config
 from repro.models.model import build
 from repro.models.sharding import ShardingRules, sharding_context
-from repro.launch.mesh import rules_for
+from repro.launch.mesh import make_mesh_compat, rules_for
 
 cfg = get_config("llama3-8b").scaled(n_layers=2, d_model=64, n_heads=4,
                                      d_ff=128, vocab_size=256)
@@ -34,8 +34,7 @@ for t in range(S):
     ref.append(lg)
 
 # sharded: 2x4 mesh, kv_seq on "model" (4-way) -> shard_map path
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh_compat((2, 4), ("data", "model"))
 rules = dataclasses.replace(
     ShardingRules(), kv_seq="model", kv_batch="data")
 with sharding_context(mesh, rules):
@@ -57,6 +56,9 @@ def test_shardmap_decode_matches_plain():
     res = subprocess.run([sys.executable, "-c", SCRIPT],
                          capture_output=True, text=True, timeout=600,
                          env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                              # force CPU: the faux 8-device mesh needs
+                              # the host platform even on TPU hosts
+                              "JAX_PLATFORMS": "cpu",
                               "HOME": "/root"})
     assert res.returncode == 0, res.stdout + res.stderr
     assert "OK" in res.stdout

@@ -14,6 +14,7 @@ import numpy as np
 from repro.configs.base import Family, ModelConfig
 from repro.models.moe import MoEParams, init_moe, moe_mlp
 from repro.models.sharding import ShardingRules, sharding_context
+from repro.launch.mesh import make_mesh_compat
 
 for moe_shard, rules_kw in [
     ("ep", dict(experts="model", expert_ff=None, w_embed="data")),
@@ -28,8 +29,7 @@ for moe_shard, rules_kw in [
     x = jax.random.normal(jax.random.key(1), (4, 8, 32), jnp.float32)
     y_ref, aux_ref = moe_mlp(p, x, cfg)   # no mesh -> plain path
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh_compat((2, 4), ("data", "model"))
     rules = dataclasses.replace(ShardingRules(), **rules_kw)
     with sharding_context(mesh, rules):
         y_sm, aux_sm = jax.jit(lambda pp, xx: moe_mlp(pp, xx, cfg))(p, x)
@@ -46,6 +46,9 @@ def test_shardmap_moe_matches_plain():
     res = subprocess.run([sys.executable, "-c", SCRIPT],
                          capture_output=True, text=True, timeout=600,
                          env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                              # force CPU: the faux 8-device mesh needs
+                              # the host platform even on TPU hosts
+                              "JAX_PLATFORMS": "cpu",
                               "HOME": "/root"})
     assert res.returncode == 0, res.stdout + res.stderr
     assert "OK" in res.stdout

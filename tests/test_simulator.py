@@ -95,3 +95,22 @@ def test_loss_curve_monotone():
     c.advance(5000)
     assert c.loss() < l0
     assert c.loss() >= c.floor
+
+
+def test_loss_curve_fractional_progress_monotone():
+    """Regression: ``seen`` accumulates fractional ``samples * eff``
+    (statistical efficiency < 1), so it is a float — and loss must stay
+    monotone non-increasing in samples under batch-size scaling."""
+    from repro.runtime.replica import LossCurve
+    c = LossCurve()
+    assert isinstance(c.seen, float)
+    prev = c.loss()
+    for _ in range(50):
+        before, after = c.advance(2, batch_size=64)
+        assert before == pytest.approx(prev)
+        assert after <= before
+        prev = after
+    # large batches well past the noise scale => eff << 1: progress is
+    # fractional, not floor-to-int
+    assert 0.0 < c.seen < 50 * 2
+    assert c.seen != int(c.seen)

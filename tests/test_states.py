@@ -2,7 +2,7 @@
 properties: at least one replica always stays SERVING, T' rollback."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.states import (
     ClusterStateManager, EWMAWindow, ReplicaState, StatePolicy,
