@@ -75,4 +75,10 @@ def run() -> str:
 
 
 if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="short trace for CI (same as BENCH_QUICK=1)")
+    if ap.parse_args().smoke:
+        QUICK = True
     run()

@@ -13,15 +13,16 @@ def main() -> None:
     from benchmarks import (
         component_ablation, continuous_batching, coordinator_ablation,
         dispatcher_stability, end_to_end_goodput, latency_model_fit,
-        model_sharing_cost, overhead, quality_sharing, roofline,
-        trace_stats, utilization,
+        model_sharing_cost, overhead, paged_kv, quality_sharing,
+        roofline, trace_stats, utilization,
     )
     print("name,us_per_call,derived")
     failures = []
     for mod in (trace_stats, model_sharing_cost, latency_model_fit,
                 quality_sharing, dispatcher_stability, coordinator_ablation,
                 end_to_end_goodput, utilization, overhead,
-                component_ablation, continuous_batching, roofline):
+                component_ablation, continuous_batching, paged_kv,
+                roofline):
         try:
             mod.run()
         except Exception as e:

@@ -1,13 +1,19 @@
 #!/usr/bin/env bash
 # CI entry: collection health gate first (import errors surface as a
-# clean failure instead of a half-run suite), then the tier-1 suite.
+# clean failure instead of a half-run suite), then the tier-1 suite,
+# then the serving perf smokes (BENCH_paged_kv.json tracks the paged
+# KV cache's memory/throughput trajectory per PR).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}"
 
 echo "== collection gate =="
 python -m pytest --collect-only -q
 
 echo "== tier-1 =="
 python -m pytest -x -q
+
+echo "== perf smoke =="
+python benchmarks/paged_kv.py --smoke
+python benchmarks/continuous_batching.py --smoke

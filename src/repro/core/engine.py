@@ -96,7 +96,8 @@ class Engine:
 
     # ------------------------------------------------- the paper's fusion --
     def combined_step(self, params, lora, opt_state: AdamWState,
-                      train_batch, caches, token, pos
+                      train_batch, caches, token, pos, *,
+                      attn_backend: Optional[str] = None
                       ) -> Tuple[Any, AdamWState, jax.Array, Any,
                                  Dict[str, jax.Array]]:
         """One fused program: LoRA train step + decode batch, sharing the
@@ -105,7 +106,23 @@ class Engine:
         isolation — matching the paper's subprocess snapshot semantics).
         """
         logits, new_caches = self.model.decode_step(
-            params, lora, caches, token, pos)
+            params, lora, caches, token, pos, attn_backend=attn_backend)
+        new_lora, new_opt, metrics = self.train_step(
+            params, lora, opt_state, train_batch)
+        return new_lora, new_opt, logits, new_caches, metrics
+
+    def combined_step_paged(self, params, lora, opt_state: AdamWState,
+                            train_batch, caches, token, pos, block_tables,
+                            *, ring_len: int = 0,
+                            attn_backend: Optional[str] = None
+                            ) -> Tuple[Any, AdamWState, jax.Array, Any,
+                                       Dict[str, jax.Array]]:
+        """``combined_step`` over the paged KV pool: LoRA train step +
+        block-table decode tick fused into one program (same pre-update
+        snapshot semantics)."""
+        logits, new_caches = self.model.decode_step_paged(
+            params, lora, caches, token, pos, block_tables,
+            ring_len=ring_len, attn_backend=attn_backend)
         new_lora, new_opt, metrics = self.train_step(
             params, lora, opt_state, train_batch)
         return new_lora, new_opt, logits, new_caches, metrics

@@ -9,6 +9,8 @@ Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
       --requests 16 --prompt-len 32 --gen 16
   ... --combined     # fine-tune while serving (one XLA program)
+  ... --paged --block-size 16 --n-blocks 64   # paged KV cache (block
+                     # tables; memory scales with live tokens)
 """
 from __future__ import annotations
 
@@ -27,7 +29,8 @@ def run_serving(arch: str, *, smoke: bool = True, n_requests: int = 16,
                 prompt_len: int = 32, gen_tokens: int = 16,
                 batch_size: int = 8, combined: bool = False,
                 train_batch: int = 4, seed: int = 0,
-                verbose: bool = True) -> dict:
+                paged: bool = False, block_size: int = 16,
+                n_blocks: int = 0, verbose: bool = True) -> dict:
     """Serve ``n_requests`` prompts on a ``batch_size``-slot continuous
     batcher; returns throughput + (combined mode) train losses."""
     cfg = get_config(arch)
@@ -45,7 +48,8 @@ def run_serving(arch: str, *, smoke: bool = True, n_requests: int = 16,
     batcher = ContinuousBatcher(
         engine, params, lora, n_slots=batch_size,
         max_seq=prompt_len + gen_tokens, prompt_pad=prompt_len,
-        opt_state=opt_state)
+        opt_state=opt_state, paged=paged, block_size=block_size,
+        n_blocks=n_blocks or None)
     prompts = data.sample_tokens(n_requests)[:, :prompt_len]
     requests = [GenRequest(request_id=i, prompt=prompts[i],
                            max_new_tokens=gen_tokens)
@@ -68,7 +72,11 @@ def run_serving(arch: str, *, smoke: bool = True, n_requests: int = 16,
         "mean_completion_s": float(np.mean(per_req)) if per_req else 0.0,
         "throughput_tok_s": stats.throughput(),
         "train_losses": batcher.train_losses,
+        "cache_bytes": batcher.cache_bytes(),
     }
+    if paged:
+        out["peak_used_blocks"] = batcher.allocator.peak_used
+        out["pool_blocks"] = batcher.allocator.capacity
     if verbose:
         print(f"served {stats.finished}/{n_requests} requests, "
               f"{stats.generated_tokens} tokens in {stats.decode_steps} "
@@ -88,10 +96,16 @@ def main() -> None:
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--combined", action="store_true")
+    ap.add_argument("--paged", action="store_true")
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--n-blocks", type=int, default=0,
+                    help="paged pool size (0 = full worst case)")
     args = ap.parse_args()
     run_serving(args.arch, n_requests=args.requests,
                 prompt_len=args.prompt_len, gen_tokens=args.gen,
-                batch_size=args.batch, combined=args.combined)
+                batch_size=args.batch, combined=args.combined,
+                paged=args.paged, block_size=args.block_size,
+                n_blocks=args.n_blocks)
 
 
 if __name__ == "__main__":

@@ -237,16 +237,57 @@ def attention_blockwise(q, k, v, *, causal: bool = True, window: int = 0,
     return out.astype(q.dtype)
 
 
+def resolve_decode_backend(backend: Optional[str]) -> str:
+    """Resolve a decode-attention backend name.
+
+    ``None``/"auto" picks the Pallas kernel on TPU and the jnp path
+    everywhere else; "pallas" / "interpret" / "jnp" force a path (tests
+    force "interpret" to exercise the kernel on CPU).  The choice is an
+    explicit (static) argument through the decode stack rather than an
+    env read at trace time, so jitted programs cache per backend.
+    """
+    if backend is None or backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if backend not in ("pallas", "interpret", "jnp"):
+        raise ValueError(f"unknown decode backend {backend!r}")
+    return backend
+
+
 def attention_decode(q, k_cache, v_cache, kv_len, *, window: int = 0,
-                     scale: Optional[float] = None):
+                     scale: Optional[float] = None,
+                     backend: Optional[str] = None):
     """Single-token decode attention over a KV cache.
 
     q: [B,1,Hq,D]; caches: [B,S,Hkv,D]; kv_len: [B] or scalar — number of
     valid cache entries (the new token's KV must already be written).
+
+    ``backend`` (see ``resolve_decode_backend``) dispatches to the Pallas
+    kernel when the masking is expressible as a pure ``kv_len`` prefix
+    (``window == 0`` here — ring-buffer callers already fold the window
+    into ``kv_len``): the contiguous cache is viewed as a block pool with
+    an identity block table, so one kernel serves both layouts.
     """
     b, _, hq, d = q.shape
     s = k_cache.shape[1]
     scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    backend = resolve_decode_backend(backend)
+    if backend in ("pallas", "interpret") and window == 0:
+        from repro.kernels.decode_attention import paged_decode_attention
+        hkv = k_cache.shape[2]
+        bk = next(bk for bk in (256, 128, 64, 32, 16, 8, 4, 2, 1)
+                  if s % bk == 0)
+        nk = s // bk
+        kp = k_cache.reshape(b * nk, bk, hkv, d)
+        vp = v_cache.reshape(b * nk, bk, hkv, d)
+        tables = (jnp.arange(b, dtype=jnp.int32)[:, None] * nk
+                  + jnp.arange(nk, dtype=jnp.int32)[None, :])
+        klen = jnp.asarray(kv_len)
+        if klen.ndim == 0:
+            klen = jnp.full((b,), klen)
+        out = paged_decode_attention(q[:, 0], kp, vp, tables, klen,
+                                     scale=scale,
+                                     interpret=backend == "interpret")
+        return out[:, None].astype(q.dtype)
     kr = _gqa_repeat(k_cache, hq)
     vr = _gqa_repeat(v_cache, hq)
     scores = jnp.einsum("bhd,bkhd->bhk", q[:, 0].astype(jnp.float32),
@@ -262,6 +303,39 @@ def attention_decode(q, k_cache, v_cache, kv_len, *, window: int = 0,
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhk,bkhd->bhd", probs, vr.astype(jnp.float32))
     return out.reshape(b, 1, hq, d).astype(q.dtype)
+
+
+def attention_decode_paged(q, k_pool, v_pool, block_tables, kv_len, *,
+                           scale: Optional[float] = None,
+                           backend: Optional[str] = None):
+    """Single-token decode attention over a paged KV cache.
+
+    q: [B,1,Hq,D]; pools: [n_blocks, block_size, Hkv, D] (one layer's
+    slice of the global block pool); block_tables: [B, NB] int32 mapping
+    each sequence's logical blocks to pool blocks; kv_len: [B] valid
+    logical length.  Pallas backends walk the table block-by-block; the
+    jnp fallback gathers the logical [B, NB*bs] view and reuses the
+    contiguous ``attention_decode`` math (identical masking, so paged
+    and contiguous runtimes agree to numerical identity).
+    """
+    backend = resolve_decode_backend(backend)
+    klen = jnp.asarray(kv_len)
+    if klen.ndim == 0:
+        klen = jnp.full((q.shape[0],), klen)
+    if backend in ("pallas", "interpret"):
+        from repro.kernels.decode_attention import paged_decode_attention
+        out = paged_decode_attention(q[:, 0], k_pool, v_pool,
+                                     block_tables, klen, scale=scale,
+                                     interpret=backend == "interpret")
+        return out[:, None].astype(q.dtype)
+    b = q.shape[0]
+    nb = block_tables.shape[1]
+    bs = k_pool.shape[1]
+    k = jnp.take(k_pool, block_tables, axis=0).reshape(
+        b, nb * bs, *k_pool.shape[2:])
+    v = jnp.take(v_pool, block_tables, axis=0).reshape(
+        b, nb * bs, *v_pool.shape[2:])
+    return attention_decode(q, k, v, klen, scale=scale, backend="jnp")
 
 
 def attention_decode_seqsharded(q, k_new, v_new, k_cache, v_cache, pos, *,

@@ -244,6 +244,23 @@ class Model:
             caches["ssm"] = c._asdict()
         return caches
 
+    def init_paged_caches(self, n_blocks: int, block_size: int,
+                          dtype=None) -> Dict:
+        """Global paged KV pool: [L, n_blocks, block_size, Hkv, Dh] per
+        K/V.  Sequences map logical positions to pool blocks through
+        per-slot block tables (see ``decode_step_paged``), so cache
+        memory scales with allocated blocks, not slots * max_seq.
+        Attention-only stacks: SSM/conv state is per-slot and tiny —
+        paging it buys nothing."""
+        cfg = self.cfg
+        assert cfg.has_attention and not cfg.has_ssm \
+            and cfg.family is not Family.VLM, \
+            f"{cfg.name}: paged KV caches need an attention-only stack"
+        dtype = dtype or jnp.dtype(cfg.kv_cache_dtype or cfg.dtype)
+        shape = (cfg.n_layers, n_blocks, block_size, cfg.n_kv_heads,
+                 cfg.head_dim)
+        return {"kv": (jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))}
+
     # -------------------------------------------------------------- prefill -
     def prefill(self, params, lora, batch, *, block_kv: int = 512,
                 skip_masked_blocks: bool = False):
@@ -319,12 +336,68 @@ class Model:
 
         return jax.tree.map(write, pool_caches, prefill_caches)
 
+    def write_prefill_slots(self, pool_caches, prefill_caches, slots):
+        """Batched admission: scatter a whole prefill wave into its
+        decode slots in ONE program (vs one ``write_prefill_slot`` call
+        per request).  ``slots`` [W] int32 gives row j's target slot;
+        rows flagged with slot id >= n_slots are dropped (requests that
+        finished at admission).  Attention ragged-wave path only, so
+        every leaf is a KV cache [L, B, S, Hkv, Dh]; wave rows shorter
+        than the pool's seq dim are zero-padded — those rows are masked
+        by the slot's kv_len until decode overwrites them in order."""
+        assert self.cfg.family is not Family.VLM, \
+            "VLM cache slots (units-leading layout) are future work"
+        slots = jnp.asarray(slots, jnp.int32)
+
+        def write(pool, pre):
+            p, s = pre.shape[2], pool.shape[2]
+            if p < s:
+                widths = [(0, 0)] * pre.ndim
+                widths[2] = (0, s - p)
+                pre = jnp.pad(pre, widths)
+            return pool.at[:, slots].set(pre.astype(pool.dtype),
+                                         mode="drop")
+
+        return jax.tree.map(write, pool_caches, prefill_caches)
+
+    def write_prefill_blocks(self, pool_caches, prefill_caches,
+                             wave_tables):
+        """Batched paged admission: scatter a whole prefill wave's KV
+        into freshly allocated pool blocks in ONE program.
+
+        ``wave_tables`` [W, NBP] int32 maps wave row j's logical blocks
+        to pool blocks; unused entries (short prompts, requests finished
+        at admission) hold ``n_blocks`` and are dropped by the scatter.
+        The wave's right-padded prefill [L, W, P, Hkv, Dh] is reshaped
+        to block granularity, so the whole wave lands as one scatter
+        per K/V pool leaf."""
+        wave_tables = jnp.asarray(wave_tables, jnp.int32)
+        nbp = wave_tables.shape[1]
+        ids = wave_tables.reshape(-1)
+
+        def write(pool, pre):
+            nl, w, p = pre.shape[0], pre.shape[1], pre.shape[2]
+            bs = pool.shape[2]
+            assert p <= nbp * bs, \
+                f"prefill len {p} exceeds wave table coverage {nbp * bs}"
+            if p < nbp * bs:
+                widths = [(0, 0)] * pre.ndim
+                widths[2] = (0, nbp * bs - p)
+                pre = jnp.pad(pre, widths)
+            vals = pre.reshape(nl, w * nbp, bs, *pre.shape[3:])
+            return pool.at[:, ids].set(vals.astype(pool.dtype),
+                                       mode="drop")
+
+        return jax.tree.map(write, pool_caches, prefill_caches)
+
     # --------------------------------------------------------------- decode -
-    def decode_step(self, params, lora, caches, token, pos):
+    def decode_step(self, params, lora, caches, token, pos, *,
+                    attn_backend: Optional[str] = None):
         """One decode step.  token: [B,1] int32; pos: scalar int32 (next
         write position, shared) or [B] int32 (per-sequence positions —
-        ragged decode slots for continuous batching).  Returns
-        (logits [B,1,V], updated caches)."""
+        ragged decode slots for continuous batching).  ``attn_backend``
+        (static) picks the decode-attention path — Pallas on TPU, jnp
+        elsewhere.  Returns (logits [B,1,V], updated caches)."""
         cfg = self.cfg
         pos = jnp.asarray(pos)
         x = jnp.take(params["embed"], token, axis=0)
@@ -347,7 +420,8 @@ class Model:
                 def inner(xc2, xs2):
                     bp, lsl, kvl = xs2
                     y, nc = tfm.block_decode(bp, xc2, cfg, {"kv": kvl},
-                                             pos, rope_cs, lora=lsl)
+                                             pos, rope_cs, lora=lsl,
+                                             backend=attn_backend)
                     return y, nc["kv"]
 
                 xc, new_kv = scan(inner, xc, (ublocks, ulora, ukv))
@@ -362,7 +436,8 @@ class Model:
             def body(xc, xs):
                 bp, lsl, cache_l = xs
                 y, nc = tfm.block_decode(bp, xc, cfg, cache_l, pos,
-                                         rope_cs, lora=lsl)
+                                         rope_cs, lora=lsl,
+                                         backend=attn_backend)
                 return y, nc
 
             cache_tree = {}
@@ -375,6 +450,54 @@ class Model:
         hidden = rms_norm(x, params["final_norm"])
         logits = hidden @ params["lm_head"]
         return logits, new_caches
+
+    def decode_step_paged(self, params, lora, caches, token, pos,
+                          block_tables, *, ring_len: int = 0,
+                          attn_backend: Optional[str] = None):
+        """One decode step over the paged KV pool.
+
+        caches: ``init_paged_caches`` tree; token: [B,1] int32; pos: [B]
+        int32 absolute positions (RoPE uses these); block_tables:
+        [B, NB] int32 (entries past a sequence's live blocks must point
+        at a valid pool block — the runtime keeps them at scratch block
+        0).  ``ring_len`` (static) is the logical cache length for
+        sliding-window archs: writes wrap at ``ring_len`` exactly like
+        the contiguous ring buffer, so greedy outputs are identical; 0
+        means no wrap (full attention, table covers the whole budget).
+        Returns (logits [B,1,V], updated caches)."""
+        cfg = self.cfg
+        assert cfg.has_attention and not cfg.has_ssm \
+            and cfg.family is not Family.VLM, \
+            f"{cfg.name}: paged decode needs an attention-only stack"
+        k_pool = caches["kv"][0]
+        bs = k_pool.shape[2]
+        block_tables = jnp.asarray(block_tables, jnp.int32)
+        pos = jnp.asarray(pos)
+        if pos.ndim == 0:
+            pos = jnp.full((token.shape[0],), pos, jnp.int32)
+        rl = ring_len if ring_len else block_tables.shape[1] * bs
+        wpos = jnp.remainder(pos, rl)
+        kv_len = jnp.minimum(pos + 1, rl)
+        write_block = jnp.take_along_axis(
+            block_tables, (wpos // bs)[:, None], axis=1)[:, 0]
+        write_off = wpos % bs
+
+        x = jnp.take(params["embed"], token, axis=0)
+        x = shard(x, "batch", None, "embed")
+        rope_cs = rope_tables(pos[:, None], cfg.head_dim, cfg.rope_theta)
+        scan = _scan_or_loop if not cfg.scan_layers else lax.scan
+
+        def body(xc, xs):
+            bp, lsl, pool_l = xs
+            y, new_pool = tfm.block_decode_paged(
+                bp, xc, cfg, pool_l, rope_cs, block_tables, write_block,
+                write_off, kv_len, lora=lsl, backend=attn_backend)
+            return y, new_pool
+
+        x, new_kv = scan(body, x, (params["blocks"], lora, caches["kv"]))
+        hidden = rms_norm(x, params["final_norm"])
+        logits = hidden @ params["lm_head"]
+        return logits, {"kv": new_kv}
 
     # ---------------------------------------------------------- input specs -
     def input_specs(self, cell: ShapeCell) -> Dict[str, Any]:

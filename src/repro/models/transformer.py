@@ -21,8 +21,9 @@ from repro.configs.base import Family, ModelConfig
 from repro.models import lora as lora_lib
 from repro.models import mamba2
 from repro.models.layers import (
-    apply_rope, attention_blockwise, attention_decode, attention_dense,
-    dense_init, rms_norm, rope_tables, swiglu,
+    apply_rope, attention_blockwise, attention_decode,
+    attention_decode_paged, attention_dense, dense_init, rms_norm,
+    rope_tables, swiglu,
 )
 from repro.models.sharding import shard
 
@@ -143,7 +144,8 @@ def attn_full(p, x, cfg: ModelConfig, rope_cs, lora=None,
     return out, (k, v)
 
 
-def attn_decode(p, x, cfg: ModelConfig, cache_kv, pos, rope_cs, lora=None):
+def attn_decode(p, x, cfg: ModelConfig, cache_kv, pos, rope_cs, lora=None,
+                backend=None):
     """One-token attention against a KV cache.
 
     cache_kv: (k_cache, v_cache) [B,S,Hkv,Dh]; pos: scalar int32 absolute
@@ -151,7 +153,9 @@ def attn_decode(p, x, cfg: ModelConfig, cache_kv, pos, rope_cs, lora=None):
     (ragged decode slots — continuous batching).  Sliding-window archs
     keep a *ring buffer* of window size (keys carry absolute RoPE, so
     ring order is irrelevant — attention is permutation-invariant over
-    cache slots).  Returns (out, updated cache)."""
+    cache slots).  ``backend`` picks the decode-attention path (Pallas
+    on TPU, jnp elsewhere; see ``layers.resolve_decode_backend``).
+    Returns (out, updated cache)."""
     k_cache, v_cache = cache_kv
     cache_len = k_cache.shape[1]
     ragged = jnp.ndim(pos) > 0
@@ -195,11 +199,43 @@ def attn_decode(p, x, cfg: ModelConfig, cache_kv, pos, rope_cs, lora=None):
         v_cache = lax.dynamic_update_slice_in_dim(
             v_cache, v.astype(v_cache.dtype), wpos, axis=1)
     kv_len = jnp.minimum(pos + 1, cache_len)
-    o = attention_decode(q, k_cache, v_cache, kv_len)
+    o = attention_decode(q, k_cache, v_cache, kv_len, backend=backend)
     o = o.reshape(x.shape[0], 1, cfg.n_heads * cfg.head_dim)
     out = lora_lib.apply(o, o @ p["wo"], lora.get("o") if lora else None,
                          cfg.lora.scaling)
     return out, (k_cache, v_cache)
+
+
+def attn_decode_paged(p, x, cfg: ModelConfig, pool_kv, rope_cs,
+                      block_tables, write_block, write_off, kv_len,
+                      lora=None, backend=None):
+    """One-token attention against one layer's paged KV block pool.
+
+    pool_kv: (k_pool, v_pool) [n_blocks, block_size, Hkv, Dh];
+    block_tables: [B, NB] int32; write_block/write_off: [B] int32 pool
+    block id and in-block offset where each sequence's new K/V lands
+    (precomputed once per step from the ragged positions — ring
+    addressing for sliding-window archs included); kv_len: [B] valid
+    logical length AFTER the write.  Returns (out, updated pools)."""
+    k_pool, v_pool = pool_kv
+    q, k, v = _proj_qkv(p, x, cfg, lora)
+    if rope_cs is not None:
+        cos, sin = rope_cs
+        q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+    # scatter the new token's K/V into each sequence's current block —
+    # distinct sequences own distinct blocks, so indices never collide
+    # (inactive slots share scratch block 0, where last-write-wins
+    # garbage is fine: their logits are discarded)
+    k_pool = k_pool.at[write_block, write_off].set(
+        k[:, 0].astype(k_pool.dtype))
+    v_pool = v_pool.at[write_block, write_off].set(
+        v[:, 0].astype(v_pool.dtype))
+    o = attention_decode_paged(q, k_pool, v_pool, block_tables, kv_len,
+                               backend=backend)
+    o = o.reshape(x.shape[0], 1, cfg.n_heads * cfg.head_dim)
+    out = lora_lib.apply(o, o @ p["wo"], lora.get("o") if lora else None,
+                         cfg.lora.scaling)
+    return out, (k_pool, v_pool)
 
 
 def cross_attn(p, x, vision_kv, cfg: ModelConfig):
@@ -271,7 +307,8 @@ def block_full(bp, x, cfg: ModelConfig, rope_cs, lora=None,
     return x, (kv, ssm_final, aux)
 
 
-def block_decode(bp, x, cfg: ModelConfig, caches, pos, rope_cs, lora=None):
+def block_decode(bp, x, cfg: ModelConfig, caches, pos, rope_cs, lora=None,
+                 backend=None):
     """One-token block.  caches: dict with optional 'kv' (k,v) and 'ssm'
     (SSMCache).  Returns (x, updated caches)."""
     h = rms_norm(x, bp["ln1"])
@@ -283,7 +320,7 @@ def block_decode(bp, x, cfg: ModelConfig, caches, pos, rope_cs, lora=None):
         new_caches["ssm"] = new_ssm._asdict()
         return x + y, new_caches
     attn_out, new_kv = attn_decode(bp["attn"], h, cfg, caches["kv"], pos,
-                                   rope_cs, lora=lora)
+                                   rope_cs, lora=lora, backend=backend)
     new_caches["kv"] = new_kv
     if cfg.family is Family.HYBRID:
         ssm_out, new_ssm = mamba2.ssm_mixer(
@@ -296,6 +333,23 @@ def block_decode(bp, x, cfg: ModelConfig, caches, pos, rope_cs, lora=None):
         y, _ = _mlp_out(bp, rms_norm(x, bp["ln2"]), cfg, lora)
         x = x + y
     return x, new_caches
+
+
+def block_decode_paged(bp, x, cfg: ModelConfig, pool_kv, rope_cs,
+                       block_tables, write_block, write_off, kv_len,
+                       lora=None, backend=None):
+    """One-token block against one layer's paged KV pool (attention-only
+    stacks — SSM state is per-slot, not per-block).  Returns
+    (x, updated pools)."""
+    h = rms_norm(x, bp["ln1"])
+    attn_out, new_kv = attn_decode_paged(
+        bp["attn"], h, cfg, pool_kv, rope_cs, block_tables, write_block,
+        write_off, kv_len, lora=lora, backend=backend)
+    x = x + attn_out
+    if cfg.d_ff > 0:
+        y, _ = _mlp_out(bp, rms_norm(x, bp["ln2"]), cfg, lora)
+        x = x + y
+    return x, new_kv
 
 
 def cross_block(cp, x, vkv, cfg: ModelConfig):

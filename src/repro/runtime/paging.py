@@ -1,0 +1,105 @@
+"""Host-side accounting for the paged KV cache (vLLM-style).
+
+The device side is a global block pool ``[L, n_blocks, block_size, Hkv,
+Dh]`` (``Model.init_paged_caches``) plus per-slot block tables; this
+module owns which pool blocks are free, which slot holds which blocks,
+and whether an admission's worst case fits — the policy half of paging,
+kept in plain Python/numpy so the decode program never depends on it.
+
+Reservation semantics (preemption-free admission): at admission the
+batcher reserves a request's WORST-CASE block count; blocks are then
+taken lazily — prompt blocks at admission, one more each time decode
+crosses a block boundary — always against the reservation.  A request
+is admitted only if its worst case fits the unreserved pool, so a slot
+can never stall mid-decode waiting for a block (no preemption/swap
+needed; that is the ROADMAP follow-on).
+
+Block 0 is reserved as the scratch block: inactive decode slots keep
+all-zero block tables, so their dead-lane writes land there instead of
+corrupting live blocks.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Deque, List, Sequence
+
+
+def blocks_for(n_tokens: int, block_size: int) -> int:
+    """Blocks needed to hold ``n_tokens`` cache rows."""
+    return -(-max(int(n_tokens), 0) // block_size)
+
+
+class OutOfBlocks(RuntimeError):
+    """Raised when an alloc/reserve exceeds the unreserved free pool."""
+
+
+class BlockAllocator:
+    """Free-list allocator over ``n_blocks`` pool blocks.
+
+    ``n_scratch`` leading blocks (default 1: block 0) are never handed
+    out.  ``reserve``/``release`` move the admission-time worst-case
+    bound; ``take`` converts reservation into concrete block ids;
+    ``free`` returns a finished slot's blocks to the pool.
+    """
+
+    def __init__(self, n_blocks: int, block_size: int,
+                 n_scratch: int = 1):
+        if n_blocks <= n_scratch:
+            raise ValueError(
+                f"n_blocks {n_blocks} must exceed scratch count "
+                f"{n_scratch}")
+        self.n_blocks = n_blocks
+        self.block_size = block_size
+        self.n_scratch = n_scratch
+        self.capacity = n_blocks - n_scratch
+        self._free: Deque[int] = collections.deque(
+            range(n_scratch, n_blocks))
+        self.reserved = 0
+        self.peak_used = 0
+
+    # ------------------------------------------------------------ queries --
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_used(self) -> int:
+        return self.capacity - len(self._free)
+
+    def available(self) -> int:
+        """Blocks neither allocated nor promised to an admitted slot."""
+        return len(self._free) - self.reserved
+
+    def can_reserve(self, n: int) -> bool:
+        return self.available() >= n
+
+    # ------------------------------------------------------------ mutation -
+    def reserve(self, n: int) -> None:
+        if not self.can_reserve(n):
+            raise OutOfBlocks(
+                f"reserve({n}): only {self.available()} unreserved "
+                f"blocks available")
+        self.reserved += n
+
+    def release(self, n: int) -> None:
+        assert 0 <= n <= self.reserved, \
+            f"release({n}) exceeds outstanding reservation {self.reserved}"
+        self.reserved -= n
+
+    def take(self, n: int) -> List[int]:
+        """Convert ``n`` reserved blocks into concrete pool block ids."""
+        assert n <= self.reserved, \
+            f"take({n}) without reservation (reserved={self.reserved})"
+        assert n <= len(self._free), \
+            "reservation accounting broken: reserved blocks must be free"
+        ids = [self._free.popleft() for _ in range(n)]
+        self.reserved -= n
+        self.peak_used = max(self.peak_used, self.n_used)
+        return ids
+
+    def free(self, ids: Sequence[int]) -> None:
+        for b in ids:
+            assert self.n_scratch <= b < self.n_blocks, \
+                f"free of invalid block id {b}"
+        self._free.extend(ids)
+        assert len(self._free) <= self.capacity, "double free"

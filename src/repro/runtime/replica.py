@@ -261,7 +261,9 @@ class LiveReplica:
                  data_fn: Callable[[int], Dict[str, Any]],
                  eval_fn: Optional[Callable[[Any], float]] = None,
                  serve_slots: int = 4, serve_prompt_len: int = 16,
-                 max_gen_tokens: int = 8):
+                 max_gen_tokens: int = 8, serve_paged: bool = False,
+                 serve_block_size: int = 16,
+                 serve_n_blocks: Optional[int] = None):
         from repro.runtime.serving_loop import ContinuousBatcher
         self.replica_id = replica_id
         self.model_id = model_id
@@ -285,7 +287,9 @@ class LiveReplica:
         self.batcher = ContinuousBatcher(
             engine, params, lora, n_slots=serve_slots,
             max_seq=serve_prompt_len + max_gen_tokens,
-            prompt_pad=serve_prompt_len, opt_state=opt_state)
+            prompt_pad=serve_prompt_len, opt_state=opt_state,
+            paged=serve_paged, block_size=serve_block_size,
+            n_blocks=serve_n_blocks)
         from repro.runtime.serving_loop import _engine_jits
         self._jit_loss = _engine_jits(engine)["loss"]
 

@@ -1,38 +1,63 @@
-"""Slot-based continuous-batching decode runtime (FlexLLM-style
-token-level co-serving over one shared base model).
+"""Slot-based continuous-batching decode runtime with a paged KV cache
+(FlexLLM-style token-level co-serving over one shared base model).
 
-A ``ContinuousBatcher`` owns a fixed pool of decode *slots* backed by a
-single pre-allocated cache pool (``model.init_caches(n_slots, max_seq)``)
-with per-slot KV lengths — the ragged ``kv_len [B]`` path the decode
-attention (jnp and Pallas) already supports, finally exploited upstream:
+A ``ContinuousBatcher`` owns a fixed pool of decode *slots* whose KV
+lives in one of two cache layouts:
 
-  admission   a free slot takes the next queued request; the prompt runs
-              through REAL ``model.prefill`` / ``model.prefill_ragged``
-              (one XLA program, no per-token warm fill) and the caches
-              are copied into the slot via ``model.write_prefill_slot``;
+  contiguous  ``model.init_caches(n_slots, max_seq)`` — every slot owns
+              a worst-case ``max_seq`` stripe (the pre-paging design,
+              kept as the equivalence baseline);
+  paged       ``paged=True``: a global block pool
+              ``[L, n_blocks, block_size, Hkv, Dh]``
+              (``model.init_paged_caches``) plus per-slot block tables.
+              A ``BlockAllocator`` (runtime/paging.py) reserves each
+              request's worst case at admission and hands out blocks
+              lazily — prompt blocks at admission, one more whenever
+              decode crosses a block boundary — so cache memory scales
+              with live tokens, not ``n_slots * max_seq``, and admission
+              is rejected (queue backpressure, preemption-free) when the
+              pool can't cover a request's worst case.
+
+The runtime tick is unchanged by the layout:
+
+  admission   free slots take queued requests; the whole wave prefills
+              through ONE ragged ``model.prefill_ragged`` program and
+              lands in the cache with ONE batched scatter
+              (``write_prefill_slots`` / ``write_prefill_blocks``) —
+              no per-request write calls;
   decode      every step advances ALL active slots one token with
-              per-slot positions (``decode_step`` with ``pos [B]``);
+              per-slot positions (``decode_step`` / ``decode_step_paged``
+              with ``pos [B]``); paged decode streams only the bucketed
+              live block range, and ``attention_decode`` dispatches to
+              the Pallas kernels (kernels/decode_attention.py) on TPU
+              with the jnp path as interpreter/CPU fallback;
   eviction    a slot frees the moment its request hits max_new_tokens /
-              EOS — the next queued request is admitted mid-flight while
-              the other slots keep decoding (no lock-step drain);
+              EOS — its blocks return to the allocator and the next
+              queued request is admitted mid-flight;
   co-serving  passing a training batch to ``step`` runs the fused
-              ``engine.combined_step`` — LoRA finetuning + the decode
-              tick in ONE program over shared base weights (the paper's
-              model-sharing semantics, per token instead of per batch).
+              ``engine.combined_step`` / ``combined_step_paged`` — LoRA
+              finetuning + the decode tick in ONE program over shared
+              base weights (the paper's model-sharing semantics, per
+              token instead of per batch).
 
 ``static_batch_serve`` is the lock-step baseline (prefill a batch,
-decode until the LONGEST request finishes, then drain) used by
-benchmarks/continuous_batching.py and the equivalence tests.
+decode until every request in the batch finishes, dead slots riding
+along) used by benchmarks/ and the equivalence tests.
 
 Scope: non-VLM families; full-attention or cache-covering windows
-(``sliding_window == 0 or >= max_seq``) — ring-buffer prefill handoff
-and VLM cross-KV slots are ROADMAP items.
+(``sliding_window == 0 or >= max_seq``) on the contiguous path, plus
+ring-over-blocks sliding windows on the paged path (the paged ring
+wraps at ``min(max_seq, window)`` exactly like the contiguous ring, so
+greedy outputs are identical).  Paged mode needs an attention-only
+stack — SSM state is per-slot, not per-block.  Preemption/swap of live
+blocks is the ROADMAP follow-on.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
 import functools
+import os
 import time
 from typing import Any, Callable, Deque, Dict, List, Optional, Sequence
 
@@ -40,6 +65,8 @@ import numpy as np
 
 import jax
 import jax.numpy as jnp
+
+from repro.runtime.paging import BlockAllocator, blocks_for
 
 
 @functools.lru_cache(maxsize=16)
@@ -49,11 +76,23 @@ def _engine_jits(engine) -> Dict[str, Callable]:
     runtimes never retrace (donation is per-call, sharing is safe)."""
     model = engine.model
     return {
-        "decode": jax.jit(model.decode_step, donate_argnums=(2,)),
+        "decode": jax.jit(model.decode_step, donate_argnums=(2,),
+                          static_argnames=("attn_backend",)),
+        "decode_paged": jax.jit(
+            model.decode_step_paged, donate_argnums=(2,),
+            static_argnames=("ring_len", "attn_backend")),
         "prefill_ragged": jax.jit(model.prefill_ragged),
         "prefill_exact": jax.jit(model.prefill),
         "write": jax.jit(model.write_prefill_slot, donate_argnums=(0,)),
-        "combined": jax.jit(engine.combined_step, donate_argnums=(2, 4)),
+        "write_slots": jax.jit(model.write_prefill_slots,
+                               donate_argnums=(0,)),
+        "write_blocks": jax.jit(model.write_prefill_blocks,
+                                donate_argnums=(0,)),
+        "combined": jax.jit(engine.combined_step, donate_argnums=(2, 4),
+                            static_argnames=("attn_backend",)),
+        "combined_paged": jax.jit(
+            engine.combined_step_paged, donate_argnums=(2, 4),
+            static_argnames=("ring_len", "attn_backend")),
         "train": jax.jit(engine.train_step, donate_argnums=(2,)),
         "loss": jax.jit(
             lambda p, l, b: engine.model.forward_loss(p, l, b)[0]),
@@ -99,12 +138,16 @@ class ContinuousBatcher:
 
     Owns the adapter + optimizer state so the fused combined path can
     donate/update them in place; ``LiveReplica`` delegates its adapter
-    accessors here.
+    accessors here.  With ``paged=True`` it also owns the block
+    allocator and per-slot block tables (see module docstring).
     """
 
     def __init__(self, engine, params, lora, *, n_slots: int = 8,
                  max_seq: int = 128, prompt_pad: int = 32,
-                 opt_state: Any = None, eos_id: Optional[int] = None):
+                 opt_state: Any = None, eos_id: Optional[int] = None,
+                 paged: bool = False, block_size: int = 16,
+                 n_blocks: Optional[int] = None,
+                 attn_backend: Optional[str] = None):
         cfg = engine.model.cfg
         if n_slots < 1:
             # run() makes progress only through slots; zero would spin
@@ -136,8 +179,52 @@ class ContinuousBatcher:
         self.max_seq = max_seq
         self.prompt_pad = min(prompt_pad, max_seq)
         self.eos_id = eos_id
+        # static decode-attention backend (None -> Pallas on TPU, jnp
+        # elsewhere); the env override is read ONCE here, host-side, so
+        # jitted programs cache per backend instead of per env state
+        self.attn_backend = attn_backend \
+            or os.environ.get("REPRO_DECODE_BACKEND") or None
 
-        self.caches = self.model.init_caches(n_slots, max_seq)
+        # logical cache length per slot: sliding-window archs ring-wrap
+        # at the window, everyone else uses the full budget
+        self.ring_len = min(max_seq, cfg.sliding_window) \
+            if cfg.sliding_window > 0 else max_seq
+        self.paged = paged
+        if paged:
+            if cfg.has_ssm or not cfg.has_attention:
+                raise NotImplementedError(
+                    f"{cfg.name}: paged KV serving needs an "
+                    "attention-only stack (SSM/conv state is per-slot, "
+                    "not per-block)")
+            self.block_size = block_size
+            self.blocks_per_slot = blocks_for(self.ring_len, block_size)
+            if n_blocks is None:
+                # full worst case + scratch block 0: paged-but-safe
+                # default; callers shrink it to realize memory savings
+                n_blocks = 1 + n_slots * self.blocks_per_slot
+            if n_blocks < 1 + self.blocks_per_slot:
+                raise ValueError(
+                    f"n_blocks {n_blocks} cannot cover one worst-case "
+                    f"request ({self.blocks_per_slot} blocks + scratch); "
+                    "admission would deadlock")
+            self.n_blocks = n_blocks
+            self.allocator = BlockAllocator(n_blocks, block_size)
+            self.caches = self.model.init_paged_caches(n_blocks,
+                                                       block_size)
+            # all-zero rows park inactive slots on scratch block 0
+            self.block_tables = np.zeros((n_slots, self.blocks_per_slot),
+                                         np.int32)
+            self.slot_blocks: List[List[int]] = [[] for _ in
+                                                 range(n_slots)]
+            # worst-case blocks still reserved (not yet taken) per slot
+            self.slot_reserved = np.zeros(n_slots, np.int32)
+            # device copy of the live table slice, refreshed only when
+            # tables actually change (admission/growth/eviction) — most
+            # ticks reuse it instead of re-uploading
+            self._dev_tables: Optional[jax.Array] = None
+            self._dev_tables_width = 0
+        else:
+            self.caches = self.model.init_caches(n_slots, max_seq)
         self.queue: Deque[GenRequest] = collections.deque()
         self.slot_req: List[Optional[GenRequest]] = [None] * n_slots
         self.slot_pos = np.zeros(n_slots, np.int32)   # next write position
@@ -147,10 +234,14 @@ class ContinuousBatcher:
 
         jits = _engine_jits(engine)
         self._jit_decode = jits["decode"]
+        self._jit_decode_paged = jits["decode_paged"]
         self._jit_prefill_ragged = jits["prefill_ragged"]
         self._jit_prefill_exact = jits["prefill_exact"]
         self._jit_write = jits["write"]
+        self._jit_write_slots = jits["write_slots"]
+        self._jit_write_blocks = jits["write_blocks"]
         self._jit_combined = jits["combined"]
+        self._jit_combined_paged = jits["combined_paged"]
         self._jit_train = jits["train"]
 
     # ------------------------------------------------------------ ingestion -
@@ -171,16 +262,28 @@ class ContinuousBatcher:
         return not self.queue and not self.active_slots()
 
     # ------------------------------------------------------------ admission -
+    def _worst_blocks(self, req: GenRequest) -> int:
+        """Worst-case block count over the request's lifetime: prompt
+        plus ``max_new_tokens - 1`` decode writes (the last sampled
+        token is never fed back), capped by the ring length."""
+        tokens = min(len(req.prompt) + req.max_new_tokens - 1,
+                     self.ring_len)
+        return blocks_for(tokens, self.block_size)
+
     def _prefill_wave(self, reqs: List[GenRequest]):
-        """Prefill an admission wave.  Attention stacks: ONE ragged
-        (right-padded) prefill program for the whole wave.  SSM/hybrid:
+        """Prefill an admission wave; returns (first_tokens [W] np,
+        [(prefill_caches, src_row)]).  Attention stacks: ONE ragged
+        (right-padded) prefill program for the whole wave and ONE
+        batched argmax sync for the wave's first tokens.  SSM/hybrid:
         state threads through pads, so exact-length per-request prefill
         (one compile per distinct prompt length)."""
         if self.cfg.has_ssm:
             outs = [self._jit_prefill_exact(
                 self.params, self.lora,
                 {"tokens": jnp.asarray(r.prompt[None])}) for r in reqs]
-            return [(logits[0], pre, 0) for logits, pre in outs]
+            firsts = np.array([int(jnp.argmax(logits[0, -1]))
+                               for logits, _ in outs], np.int32)
+            return firsts, [(pre, 0) for _, pre in outs]
         lens = np.array([len(r.prompt) for r in reqs], np.int32)
         padded = np.zeros((len(reqs), self.prompt_pad), np.int32)
         for j, r in enumerate(reqs):
@@ -188,21 +291,44 @@ class ContinuousBatcher:
         logits, pre = self._jit_prefill_ragged(
             self.params, self.lora, {"tokens": jnp.asarray(padded)},
             jnp.asarray(lens))
-        return [(logits[j], pre, j) for j in range(len(reqs))]
+        firsts = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+        return firsts, [(pre, j) for j in range(len(reqs))]
 
     def admit(self, now: float = 0.0) -> List[GenRequest]:
         """Fill free slots from the queue; returns requests that finished
-        at admission (max_new_tokens == 1)."""
+        at admission (max_new_tokens == 1 / instant EOS).  Paged mode
+        admits FCFS only while the allocator can reserve the head
+        request's worst case — otherwise the queue waits for an
+        eviction (preemption-free backpressure)."""
         finished: List[GenRequest] = []
         free = [i for i in range(self.n_slots)
                 if self.slot_req[i] is None]
-        take = min(len(free), len(self.queue))
-        if not take:
+        reqs: List[GenRequest] = []
+        while len(reqs) < len(free) and self.queue:
+            if self.paged:
+                worst = self._worst_blocks(self.queue[0])
+                if not self.allocator.can_reserve(worst):
+                    break
+                self.allocator.reserve(worst)
+            reqs.append(self.queue.popleft())
+        if not reqs:
             return finished
-        reqs = [self.queue.popleft() for _ in range(take)]
-        for slot, req, (logits_row, pre_caches, src) in zip(
-                free, reqs, self._prefill_wave(reqs)):
-            first = int(jnp.argmax(logits_row[-1]))
+        firsts, entries = self._prefill_wave(reqs)
+        # one batched scatter per wave on the ragged-attention paths;
+        # rows flagged with an out-of-range id are dropped (requests
+        # that finished at admission)
+        batched = not self.cfg.has_ssm
+        wave_pre = entries[0][0] if batched else None
+        if self.paged:
+            nbp = blocks_for(self.prompt_pad, self.block_size)
+            wave_tables = np.full((len(reqs), nbp), self.n_blocks,
+                                  np.int32)
+        elif batched:
+            wave_slots = np.full(len(reqs), self.n_slots, np.int32)
+        admitted_rows = 0
+        for slot, req, first, (pre_caches, src) in zip(
+                free, reqs, firsts, entries):
+            first = int(first)
             req.tokens.append(first)
             req.prefill_at = now
             self.stats.admitted += 1
@@ -215,16 +341,62 @@ class ContinuousBatcher:
                 req.finished_at = now
                 req.finished_wall = time.perf_counter()
                 self.stats.finished += 1
+                if self.paged:
+                    self.allocator.release(self._worst_blocks(req))
                 finished.append(req)
                 continue
-            self.caches = self._jit_write(self.caches, pre_caches,
-                                          slot, src)
+            if self.paged:
+                need = blocks_for(len(req.prompt), self.block_size)
+                ids = self.allocator.take(need)
+                self.slot_blocks[slot] = ids
+                self.slot_reserved[slot] = self._worst_blocks(req) - need
+                self.block_tables[slot, :] = 0
+                self.block_tables[slot, :need] = ids
+                wave_tables[src, :need] = ids
+                self._dev_tables = None
+            elif batched:
+                wave_slots[src] = slot
+            else:
+                self.caches = self._jit_write(self.caches, pre_caches,
+                                              slot, src)
+            admitted_rows += 1
             self.slot_req[slot] = req
             self.slot_pos[slot] = len(req.prompt)
             self.slot_tok[slot] = first
+        if admitted_rows and self.paged:
+            self.caches = self._jit_write_blocks(
+                self.caches, wave_pre, jnp.asarray(wave_tables))
+        elif admitted_rows and batched:
+            self.caches = self._jit_write_slots(
+                self.caches, wave_pre, jnp.asarray(wave_slots))
         return finished
 
     # --------------------------------------------------------------- decode -
+    def _grow_tables(self, active: List[int]) -> None:
+        """Allocate the block a slot's next write lands in, if its table
+        doesn't cover it yet — the 'grow one block at a time' step,
+        always against the slot's admission-time reservation."""
+        for i in active:
+            wr = int(self.slot_pos[i]) % self.ring_len
+            bidx = wr // self.block_size
+            if bidx >= len(self.slot_blocks[i]):
+                assert self.slot_reserved[i] > 0, \
+                    f"slot {i}: growth beyond admission reservation"
+                (bid,) = self.allocator.take(1)
+                self.slot_reserved[i] -= 1
+                self.slot_blocks[i].append(bid)
+                self.block_tables[i, bidx] = bid
+                self._dev_tables = None
+
+    def _table_width(self, active: List[int]) -> int:
+        """Bucketed live-table width: the decode program only streams
+        blocks up to the longest active slot, rounded up to a small
+        bucket (1, 2, then multiples of 2) so the jit cache stays at a
+        handful of variants instead of one per length."""
+        need = max(len(self.slot_blocks[i]) for i in active)
+        width = need if need <= 2 else 2 * (-(-need // 2))
+        return min(width, self.blocks_per_slot)
+
     def step(self, train_batch: Optional[Dict[str, Any]] = None,
              now: float = 0.0) -> List[GenRequest]:
         """One runtime tick: admit, then advance every active slot one
@@ -242,16 +414,39 @@ class ContinuousBatcher:
             return finished
         toks = jnp.asarray(self.slot_tok[:, None])
         pos = jnp.asarray(self.slot_pos)
+        if self.paged:
+            self._grow_tables(active)
+            width = self._table_width(active)
+            if self._dev_tables is None \
+                    or self._dev_tables_width != width:
+                self._dev_tables = jnp.asarray(
+                    self.block_tables[:, :width])
+                self._dev_tables_width = width
+            tables = self._dev_tables
         if train_batch is not None:
-            (self.lora, self.opt_state, logits, self.caches,
-             metrics) = self._jit_combined(
-                self.params, self.lora, self.opt_state, train_batch,
-                self.caches, toks, pos)
+            if self.paged:
+                (self.lora, self.opt_state, logits, self.caches,
+                 metrics) = self._jit_combined_paged(
+                    self.params, self.lora, self.opt_state, train_batch,
+                    self.caches, toks, pos, tables,
+                    ring_len=self.ring_len,
+                    attn_backend=self.attn_backend)
+            else:
+                (self.lora, self.opt_state, logits, self.caches,
+                 metrics) = self._jit_combined(
+                    self.params, self.lora, self.opt_state, train_batch,
+                    self.caches, toks, pos,
+                    attn_backend=self.attn_backend)
             self.train_losses.append(float(metrics["ce_loss"]))
             self.stats.train_steps += 1
+        elif self.paged:
+            logits, self.caches = self._jit_decode_paged(
+                self.params, self.lora, self.caches, toks, pos, tables,
+                ring_len=self.ring_len, attn_backend=self.attn_backend)
         else:
             logits, self.caches = self._jit_decode(
-                self.params, self.lora, self.caches, toks, pos)
+                self.params, self.lora, self.caches, toks, pos,
+                attn_backend=self.attn_backend)
         self.stats.decode_steps += 1
         nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
         for i in active:
@@ -265,10 +460,25 @@ class ContinuousBatcher:
                 req.finished_at = now
                 req.finished_wall = time.perf_counter()
                 self.stats.finished += 1
-                self.slot_req[i] = None
-                self.slot_pos[i] = 0
+                self._evict(i)
                 finished.append(req)
         return finished
+
+    def _evict(self, i: int) -> None:
+        """Free slot ``i`` completely: request pointer, ragged position
+        AND feed token (a stale ``slot_tok`` would leak the previous
+        request's last token into the next admission's first tick), plus
+        the slot's blocks and any unused reservation in paged mode."""
+        self.slot_req[i] = None
+        self.slot_pos[i] = 0
+        self.slot_tok[i] = 0
+        if self.paged:
+            self.allocator.free(self.slot_blocks[i])
+            self.slot_blocks[i] = []
+            self.allocator.release(int(self.slot_reserved[i]))
+            self.slot_reserved[i] = 0
+            self.block_tables[i, :] = 0   # back to scratch block 0
+            self._dev_tables = None
 
     def _plain_train(self, train_batch) -> None:
         self.lora, self.opt_state, metrics = self._jit_train(
@@ -291,18 +501,29 @@ class ContinuousBatcher:
         self.stats.wall_time += time.perf_counter() - t0
         return self.stats
 
+    # ---------------------------------------------------------- telemetry --
+    def cache_bytes(self) -> int:
+        """Allocated KV cache bytes (pool + tables)."""
+        total = sum(leaf.size * leaf.dtype.itemsize
+                    for leaf in jax.tree.leaves(self.caches))
+        if self.paged:
+            total += self.block_tables.nbytes
+        return total
+
 
 # ========================================================================
 # Lock-step static-batch baseline
 # ========================================================================
 def static_batch_serve(engine, params, lora, requests: Sequence[GenRequest],
                        *, batch_size: int = 8, prompt_pad: int = 32,
-                       max_seq: int = 128) -> ServeStats:
+                       max_seq: int = 128,
+                       eos_id: Optional[int] = None) -> ServeStats:
     """The pre-continuous-batching serving loop: group requests into
-    fixed batches, prefill the batch, then decode lock-step until the
-    LONGEST request in the batch finishes — short requests ride along as
-    dead slots.  Same greedy math as ``ContinuousBatcher`` (equivalence-
-    tested), so throughput differences are pure scheduling."""
+    fixed batches, prefill the batch, then decode lock-step until every
+    request in the batch finishes (max_new_tokens or EOS) — short /
+    early-EOS requests ride along as dead slots.  Same greedy math and
+    the same EOS rule as ``ContinuousBatcher`` (equivalence-tested), so
+    throughput differences are pure scheduling."""
     model = engine.model
     cfg = model.cfg
     assert not cfg.has_ssm and cfg.family.value != "vlm", \
@@ -312,6 +533,12 @@ def static_batch_serve(engine, params, lora, requests: Sequence[GenRequest],
     jit_decode = jits["decode"]
     stats = ServeStats()
     t0 = time.perf_counter()
+
+    def finish(r: GenRequest) -> None:
+        r.finished_at = time.perf_counter() - t0
+        r.finished_wall = time.perf_counter()
+        stats.finished += 1
+
     reqs = list(requests)
     for lo in range(0, len(reqs), batch_size):
         batch = reqs[lo:lo + batch_size]
@@ -332,14 +559,17 @@ def static_batch_serve(engine, params, lora, requests: Sequence[GenRequest],
             caches, {"kv": pre["kv"]})
         toks = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
         pos = lens.copy()
-        for i, r in enumerate(batch):
-            r.tokens.append(int(toks[i]))
         stats.admitted += bsz
         stats.prefill_tokens += int(lens.sum())
-        stats.generated_tokens += bsz
-        # lock-step decode: every slot pays for the longest request
-        steps = max(r.max_new_tokens for r in batch) - 1
-        for _ in range(steps):
+        for i, r in enumerate(batch):
+            r.tokens.append(int(toks[i]))
+            stats.generated_tokens += 1
+            if len(r.tokens) >= r.max_new_tokens \
+                    or int(toks[i]) == eos_id:
+                finish(r)
+        # lock-step decode: every slot pays until the batch's LAST
+        # request finishes; finished requests are dead weight
+        while not all(r.done for r in batch):
             logits, caches = jit_decode(params, lora, caches,
                                         jnp.asarray(toks[:, None]),
                                         jnp.asarray(pos))
@@ -347,11 +577,12 @@ def static_batch_serve(engine, params, lora, requests: Sequence[GenRequest],
             toks = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
             pos += 1
             for i, r in enumerate(batch):
-                if len(r.tokens) < r.max_new_tokens:
-                    r.tokens.append(int(toks[i]))
-                    stats.generated_tokens += 1
-        for r in batch:
-            r.finished_at = time.perf_counter() - t0
-            stats.finished += 1
+                if r.done:
+                    continue
+                r.tokens.append(int(toks[i]))
+                stats.generated_tokens += 1
+                if len(r.tokens) >= r.max_new_tokens \
+                        or int(toks[i]) == eos_id:
+                    finish(r)
     stats.wall_time += time.perf_counter() - t0
     return stats

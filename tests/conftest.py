@@ -1,5 +1,6 @@
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro.configs.registry import all_configs
@@ -29,4 +30,32 @@ def make_batch(cfg, batch=2, seq=32, seed=0):
     if cfg.family.value == "vlm":
         out["vision"] = jax.random.normal(
             key, (batch, cfg.vision_tokens, cfg.d_model), jnp.float32)
+    return out
+
+
+# ---------------------------------------------------- serving helpers ------
+def sample_prompts(cfg, n, lens, seed=3):
+    """Synthetic ragged prompts shared by the serving/paging suites."""
+    from repro.data.synthetic import SyntheticDataset
+    data = SyntheticDataset("alpaca", vocab_size=cfg.vocab_size,
+                            seq_len=max(lens), seed=seed)
+    toks = data.sample_tokens(n)
+    return [toks[i, :lens[i]].astype(np.int32) for i in range(n)]
+
+
+def reference_greedy(model, params, lora, prompt, n_new):
+    """Single-sequence prefill + decode: the unambiguous ground-truth
+    oracle the batched serving runtimes are equivalence-tested against."""
+    logits, caches = model.prefill(params, lora,
+                                   {"tokens": jnp.asarray(prompt[None])})
+    pool = model.init_caches(1, len(prompt) + n_new)
+    pool = model.write_prefill_slot(pool, caches, 0)
+    out = [int(jnp.argmax(logits[0, -1]))]
+    pos = len(prompt)
+    while len(out) < n_new:
+        logits, pool = model.decode_step(
+            params, lora, pool, jnp.asarray([[out[-1]]], jnp.int32),
+            jnp.asarray([pos], jnp.int32))
+        out.append(int(jnp.argmax(logits[0, -1])))
+        pos += 1
     return out

@@ -6,7 +6,9 @@ import numpy as np
 import pytest
 
 from repro.kernels import ref
-from repro.kernels.decode_attention import decode_attention
+from repro.kernels.decode_attention import (
+    decode_attention, paged_decode_attention,
+)
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.lora_matmul import lora_matmul
 from repro.kernels.ssd_scan import ssd_scan
@@ -58,6 +60,48 @@ def test_decode_attention(b, h, hkv, s, d):
     y = decode_attention(q, kc, vc, kl, bk=128, interpret=True)
     yr = ref.decode_attention(q, kc, vc, kl)
     np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("b,h,hkv,nb_pool,bs,nb,d", [
+    (2, 8, 2, 16, 16, 4, 64),       # GQA, short tables
+    (3, 4, 4, 12, 8, 8, 128),       # MHA, longer walk
+    (1, 16, 2, 32, 32, 6, 64),      # wide grouping
+])
+def test_paged_decode_attention(b, h, hkv, nb_pool, bs, nb, d):
+    """Block-table walk over a shuffled pool == dense attention over
+    the gathered logical cache."""
+    ks = jax.random.split(jax.random.key(6), 4)
+    q = jax.random.normal(ks[0], (b, h, d), jnp.float32)
+    kp = jax.random.normal(ks[1], (nb_pool, bs, hkv, d), jnp.float32)
+    vp = jax.random.normal(ks[2], (nb_pool, bs, hkv, d), jnp.float32)
+    rng = np.random.default_rng(7)
+    # distinct non-scratch blocks per sequence, shuffled pool order
+    tables = np.stack([rng.permutation(np.arange(1, nb_pool))[:nb]
+                       for _ in range(b)]).astype(np.int32)
+    kl = jax.random.randint(ks[3], (b,), 1, nb * bs + 1)
+    y = paged_decode_attention(q, kp, vp, jnp.asarray(tables), kl,
+                               interpret=True)
+    k_log = kp[tables].reshape(b, nb * bs, hkv, d).transpose(0, 2, 1, 3)
+    v_log = vp[tables].reshape(b, nb * bs, hkv, d).transpose(0, 2, 1, 3)
+    yr = ref.decode_attention(q, k_log, v_log, kl)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_contiguous_decode_dispatches_to_paged_kernel():
+    """layers.attention_decode with the kernel forced on (identity
+    block tables) must match its jnp path."""
+    from repro.models.layers import attention_decode
+    ks = jax.random.split(jax.random.key(8), 3)
+    b, s, hq, hkv, d = 3, 48, 8, 2, 64
+    q = jax.random.normal(ks[0], (b, 1, hq, d), jnp.float32)
+    kc = jax.random.normal(ks[1], (b, s, hkv, d), jnp.float32)
+    vc = jax.random.normal(ks[2], (b, s, hkv, d), jnp.float32)
+    klen = jnp.asarray([1, 17, 48], jnp.int32)
+    y_jnp = attention_decode(q, kc, vc, klen, backend="jnp")
+    y_ker = attention_decode(q, kc, vc, klen, backend="interpret")
+    np.testing.assert_allclose(np.asarray(y_ker), np.asarray(y_jnp),
                                rtol=2e-5, atol=2e-5)
 
 

@@ -1,0 +1,246 @@
+"""Paged KV cache runtime: block-allocator invariants, admission
+backpressure, block-table growth across block boundaries, batched
+block/slot writes, paged-vs-contiguous greedy equivalence (full
+attention and sliding-window ring), the Pallas paged-kernel dispatch
+path, and the eviction/EOS bookkeeping fixes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import reference_greedy as _reference_greedy
+from conftest import sample_prompts as _prompts
+from repro.configs.registry import get_config
+from repro.core.engine import make_engine
+from repro.runtime.paging import BlockAllocator, OutOfBlocks, blocks_for
+from repro.runtime.serving_loop import (
+    ContinuousBatcher, GenRequest, static_batch_serve,
+)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("qwen1.5-0.5b").scaled()
+    engine = make_engine(cfg, lr=3e-3)
+    model = engine.model
+    params = model.init(jax.random.key(0))
+    lora = jax.tree.map(lambda x: x + 0.01,
+                        model.init_lora(jax.random.key(1)))
+    return cfg, engine, model, params, lora
+
+
+# ----------------------------------------------------------- allocator -----
+def test_allocator_alloc_free_reuse():
+    a = BlockAllocator(n_blocks=8, block_size=4)
+    assert a.capacity == 7 and a.n_free == 7      # block 0 is scratch
+    a.reserve(5)
+    ids = a.take(3)
+    assert len(set(ids)) == 3 and 0 not in ids
+    assert a.n_used == 3 and a.reserved == 2
+    a.free(ids[:2])
+    assert a.n_free == 6
+    more = a.take(2)
+    assert 0 not in more and a.reserved == 0
+    # freed ids come back around
+    a.free(more)
+    a.free([ids[2]])
+    assert a.n_free == 7 and a.n_used == 0
+    assert a.peak_used == 3
+
+
+def test_allocator_reservation_backpressure():
+    a = BlockAllocator(n_blocks=6, block_size=4)   # capacity 5
+    a.reserve(4)
+    assert a.available() == 1
+    assert not a.can_reserve(2)
+    with pytest.raises(OutOfBlocks):
+        a.reserve(2)
+    a.release(2)
+    a.reserve(2)                                   # fits again
+    assert a.available() == 1
+    assert blocks_for(0, 4) == 0 and blocks_for(1, 4) == 1 \
+        and blocks_for(9, 4) == 3
+
+
+# --------------------------------------------------------- equivalence -----
+def test_paged_matches_contiguous_and_reference(setup):
+    """Same requests => same greedy tokens per request through the
+    paged runtime (2 slots, block tables, mid-flight admission), the
+    contiguous runtime, and one-at-a-time reference decode; eviction
+    must return every block and clear all slot state."""
+    cfg, engine, model, params, lora = setup
+    lens = [6, 10, 4, 8, 7]
+    gens = [5, 2, 6, 3, 4]
+    prompts = _prompts(cfg, len(lens), lens)
+
+    def fresh():
+        return [GenRequest(request_id=i, prompt=prompts[i].copy(),
+                           max_new_tokens=gens[i])
+                for i in range(len(lens))]
+
+    cont = fresh()
+    ContinuousBatcher(engine, params, lora, n_slots=2, max_seq=16,
+                      prompt_pad=10).run(cont)
+    pag = fresh()
+    b = ContinuousBatcher(engine, params, lora, n_slots=2, max_seq=16,
+                          prompt_pad=10, paged=True, block_size=4)
+    b.run(pag)
+    for i in range(len(lens)):
+        ref = _reference_greedy(model, params, lora, prompts[i], gens[i])
+        assert pag[i].tokens == ref, f"paged diverges on req {i}"
+        assert cont[i].tokens == ref, f"contiguous diverges on req {i}"
+    # eviction bookkeeping: blocks drained, reservations zero, slot
+    # state (including slot_tok — the stale-token fix) cleared
+    assert b.allocator.n_used == 0 and b.allocator.reserved == 0
+    assert all(not blks for blks in b.slot_blocks)
+    assert (b.block_tables == 0).all()
+    assert (b.slot_tok == 0).all() and (b.slot_pos == 0).all()
+    assert b.allocator.peak_used > 0
+
+
+def test_paged_sliding_window_matches_contiguous(setup):
+    """Sliding-window archs ring-wrap over blocks: decode past the
+    window must agree with the contiguous ring buffer."""
+    cfg = get_config("qwen1.5-0.5b").scaled(sliding_window=8)
+    engine = make_engine(cfg, lr=3e-3)
+    model = engine.model
+    params = model.init(jax.random.key(0))
+    lora = jax.tree.map(lambda x: x + 0.01,
+                        model.init_lora(jax.random.key(1)))
+    lens = [5, 8, 4]
+    gens = [12, 9, 14]          # all decode far past the 8-token window
+    prompts = _prompts(cfg, len(lens), lens)
+
+    def fresh():
+        return [GenRequest(request_id=i, prompt=prompts[i].copy(),
+                           max_new_tokens=gens[i])
+                for i in range(len(lens))]
+
+    cont = fresh()
+    ContinuousBatcher(engine, params, lora, n_slots=2, max_seq=24,
+                      prompt_pad=8).run(cont)
+    pag = fresh()
+    b = ContinuousBatcher(engine, params, lora, n_slots=2, max_seq=24,
+                          prompt_pad=8, paged=True, block_size=4)
+    b.run(pag)
+    assert b.ring_len == 8
+    assert b.blocks_per_slot == 2     # ring never needs more blocks
+    for i in range(len(lens)):
+        assert pag[i].tokens == cont[i].tokens, \
+            f"windowed paged diverges on req {i}"
+
+
+def test_paged_interpret_kernel_matches_jnp(setup):
+    """End-to-end Pallas dispatch: the paged runtime with the kernel
+    forced on (interpret mode on CPU) must produce the jnp path's
+    greedy tokens."""
+    cfg, engine, model, params, lora = setup
+    prompts = _prompts(cfg, 2, [6, 4])
+
+    def fresh():
+        return [GenRequest(request_id=i, prompt=prompts[i].copy(),
+                           max_new_tokens=4) for i in range(2)]
+
+    jn = fresh()
+    ContinuousBatcher(engine, params, lora, n_slots=2, max_seq=12,
+                      prompt_pad=6, paged=True, block_size=4).run(jn)
+    ker = fresh()
+    ContinuousBatcher(engine, params, lora, n_slots=2, max_seq=12,
+                      prompt_pad=6, paged=True, block_size=4,
+                      attn_backend="interpret").run(ker)
+    for i in range(2):
+        assert ker[i].tokens == jn[i].tokens
+
+
+# ------------------------------------------------------ slot lifecycle -----
+def test_block_table_growth_across_boundary(setup):
+    """A slot's table must grow one block at a time as decode crosses
+    block boundaries, always against its admission reservation."""
+    cfg, engine, model, params, lora = setup
+    (prompt,) = _prompts(cfg, 1, [5])
+    req = GenRequest(request_id=0, prompt=prompt, max_new_tokens=8)
+    b = ContinuousBatcher(engine, params, lora, n_slots=1, max_seq=16,
+                          prompt_pad=5, paged=True, block_size=4)
+    b.submit(req)
+    b.admit()
+    # prompt len 5 -> 2 blocks taken, worst = ceil((5+8-1)/4) = 3
+    assert len(b.slot_blocks[0]) == 2
+    assert int(b.slot_reserved[0]) == 1
+    seen = {2}
+    while not b.idle():
+        b.step()
+        if b.slot_req[0] is not None:
+            seen.add(len(b.slot_blocks[0]))
+    assert seen == {2, 3}, f"table growth went {sorted(seen)}"
+    ref = _reference_greedy(model, params, lora, prompt, 8)
+    assert req.tokens == ref
+    assert b.allocator.n_used == 0 and b.allocator.reserved == 0
+
+
+def test_out_of_blocks_admission_backpressure(setup):
+    """With a pool that covers only one worst-case request, the second
+    queued request must wait for the first's eviction — and still
+    complete with the right tokens."""
+    cfg, engine, model, params, lora = setup
+    prompts = _prompts(cfg, 2, [4, 4])
+    reqs = [GenRequest(request_id=i, prompt=prompts[i].copy(),
+                       max_new_tokens=4) for i in range(2)]
+    # max_seq 8, block 4 -> 2 blocks per worst-case slot; pool of
+    # exactly 2 + scratch serves one request at a time
+    b = ContinuousBatcher(engine, params, lora, n_slots=2, max_seq=8,
+                          prompt_pad=4, paged=True, block_size=4,
+                          n_blocks=3)
+    for r in reqs:
+        b.submit(r)
+    b.step()
+    assert b.slot_req[0] is not None and b.slot_req[1] is None, \
+        "second request must be held back by the allocator"
+    assert len(b.queue) == 1
+    while not b.idle():
+        b.step()
+    assert b.stats.admitted == 2 and b.stats.finished == 2
+    for i in range(2):
+        ref = _reference_greedy(model, params, lora, prompts[i], 4)
+        assert reqs[i].tokens == ref
+    assert b.allocator.n_used == 0 and b.allocator.reserved == 0
+
+
+# ------------------------------------------------------ EOS satellites -----
+def test_static_batch_honors_eos_and_wall_stamps(setup):
+    """``static_batch_serve`` must stop a request at EOS exactly like
+    the continuous path (same tokens, exact per-request accounting) and
+    stamp ``finished_wall`` on every request."""
+    cfg, engine, model, params, lora = setup
+    lens = [6, 8, 5, 7]
+    prompts = _prompts(cfg, len(lens), lens)
+    refs = [_reference_greedy(model, params, lora, prompts[i], 6)
+            for i in range(len(lens))]
+    # an EOS id that actually fires mid-stream for at least one request
+    eos = refs[0][2]
+    truncated = []
+    for r in refs:
+        cut = r.index(eos) + 1 if eos in r else len(r)
+        truncated.append(r[:cut])
+
+    def fresh():
+        return [GenRequest(request_id=i, prompt=prompts[i].copy(),
+                           max_new_tokens=6)
+                for i in range(len(lens))]
+
+    stat = fresh()
+    sstats = static_batch_serve(engine, params, lora, stat, batch_size=2,
+                                prompt_pad=8, max_seq=16, eos_id=eos)
+    cont = fresh()
+    cstats = ContinuousBatcher(engine, params, lora, n_slots=2,
+                               max_seq=16, prompt_pad=8,
+                               eos_id=eos).run(cont)
+    for i in range(len(lens)):
+        assert stat[i].tokens == truncated[i], f"static req {i}"
+        assert cont[i].tokens == truncated[i], f"continuous req {i}"
+        assert stat[i].finished_wall is not None
+        assert cont[i].finished_wall is not None
+    # exact token accounting: only real (pre/incl-EOS) tokens counted
+    n_real = sum(len(t) for t in truncated)
+    assert sstats.generated_tokens == n_real
+    assert cstats.generated_tokens == n_real
+    assert sstats.finished == cstats.finished == len(lens)

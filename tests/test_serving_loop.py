@@ -6,6 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import reference_greedy as _reference_greedy
+from conftest import sample_prompts as _prompts
 from repro.configs.registry import get_config
 from repro.core.engine import make_engine
 from repro.core.interfaces import Request
@@ -25,13 +27,6 @@ def setup():
     lora = jax.tree.map(lambda x: x + 0.01,
                         model.init_lora(jax.random.key(1)))
     return cfg, engine, model, params, lora
-
-
-def _prompts(cfg, n, lens, seed=3):
-    data = SyntheticDataset("alpaca", vocab_size=cfg.vocab_size,
-                            seq_len=max(lens), seed=seed)
-    toks = data.sample_tokens(n)
-    return [toks[i, :lens[i]].astype(np.int32) for i in range(n)]
 
 
 # ------------------------------------------------------------- parity ------
@@ -102,23 +97,6 @@ def test_vector_pos_decode_matches_scalar(setup):
 
 
 # -------------------------------------------------------- equivalence ------
-def _reference_greedy(model, params, lora, prompt, n_new):
-    """Single-sequence prefill + decode: the unambiguous ground truth."""
-    logits, caches = model.prefill(params, lora,
-                                   {"tokens": jnp.asarray(prompt[None])})
-    pool = model.init_caches(1, len(prompt) + n_new)
-    pool = model.write_prefill_slot(pool, caches, 0)
-    out = [int(jnp.argmax(logits[0, -1]))]
-    pos = len(prompt)
-    while len(out) < n_new:
-        logits, pool = model.decode_step(
-            params, lora, pool, jnp.asarray([[out[-1]]], jnp.int32),
-            jnp.asarray([pos], jnp.int32))
-        out.append(int(jnp.argmax(logits[0, -1])))
-        pos += 1
-    return out
-
-
 def test_continuous_matches_static_and_reference(setup):
     """Same requests => same greedy tokens per request, whether served
     by the continuous batcher (2 slots, mid-flight admission), the
