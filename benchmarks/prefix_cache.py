@@ -1,0 +1,148 @@
+"""Copy-on-write prefix sharing vs the plain paged runtime on a
+repeated-prefix trace (the edge-personalization pattern: a handful of
+system/few-shot prompts reused across many requests).
+
+Both runtimes serve the identical trace out of the same paged block
+pool; with ``prefix_cache=True`` each request's longest cached
+block-aligned prefix is aliased at refcount+1 and only the uncached
+suffix is prefilled, so prefill compute scales with *distinct* prompt
+tokens and concurrent same-prefix slots share pool blocks.  Greedy
+tokens are asserted identical, and the prefill-token reduction and
+peak-blocks-in-use drop are hard-gated (both are deterministic counts;
+tokens/s is reported best-of-N).  Written to ``BENCH_prefix_cache.json``
+so the perf trajectory is tracked per PR.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import timed
+from repro.configs.registry import get_config
+from repro.core.engine import make_engine
+from repro.data.synthetic import SyntheticDataset
+from repro.runtime.serving_loop import ContinuousBatcher, GenRequest
+
+QUICK = bool(int(os.environ.get("BENCH_QUICK", "0")))
+OUT_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "..", "BENCH_prefix_cache.json")
+
+
+def _repeated_prefix_requests(cfg, n, prompt_pad, max_gen, *,
+                              n_prefixes=2, prefix_len=56, seed=0):
+    """A few long shared prefixes (>=50% of every prompt) + short unique
+    tails.  The first ``n_prefixes`` requests finish fast, seeding the
+    cache; the rest decode long enough that same-prefix slots overlap,
+    so sharing shows up in peak blocks, not just prefill compute."""
+    rng = np.random.default_rng(seed)
+    data = SyntheticDataset("alpaca", vocab_size=cfg.vocab_size,
+                            seq_len=prompt_pad, seed=seed)
+    toks = data.sample_tokens(n + n_prefixes)
+    prefixes = [toks[n + p, :prefix_len].astype(np.int32)
+                for p in range(n_prefixes)]
+    reqs = []
+    for i in range(n):
+        fam = i % n_prefixes if i < n_prefixes \
+            else int(rng.integers(0, n_prefixes))
+        tail_len = int(rng.integers(2, 7))
+        prompt = np.concatenate([prefixes[fam],
+                                 toks[i, :tail_len].astype(np.int32)])
+        gen = 4 if i < n_prefixes else int(
+            rng.integers(max_gen // 2, max_gen + 1))
+        reqs.append(GenRequest(request_id=i, prompt=prompt,
+                               max_new_tokens=gen))
+    return reqs
+
+
+@timed("prefix_cache_vs_paged")
+def run() -> str:
+    import jax
+    n_req = 10 if QUICK else 24
+    reps = 3
+    slots, prompt_pad, max_gen, block_size = 4, 64, 16, 8
+    max_seq = prompt_pad + max_gen
+    cfg = get_config("qwen1.5-0.5b").scaled()
+    engine = make_engine(cfg, lr=1e-3)
+    model = engine.model
+    params = model.init(jax.random.key(0))
+    lora = model.init_lora(jax.random.key(1))
+
+    def build(shared: bool) -> ContinuousBatcher:
+        return ContinuousBatcher(
+            engine, params, lora, n_slots=slots, max_seq=max_seq,
+            prompt_pad=prompt_pad, paged=True, block_size=block_size,
+            prefix_cache=shared)
+
+    def trace():
+        return _repeated_prefix_requests(cfg, n_req, prompt_pad, max_gen)
+
+    for mode in ("paged", "shared"):        # warm the jit caches
+        build(mode == "shared").run(trace())
+    # interleaved best-of-N (timing only; the counters are deterministic)
+    results, tokens = {}, {}
+    for rep in range(reps):
+        for mode in ("paged", "shared"):
+            reqs = trace()
+            b = build(mode == "shared")
+            stats = b.run(reqs)
+            cur = {
+                "tokens_per_s": round(stats.throughput(), 1),
+                "prefill_tokens_computed": stats.prefill_tokens,
+                "cached_prefix_tokens": stats.cached_prefix_tokens,
+                "generated_tokens": stats.generated_tokens,
+                "decode_steps": stats.decode_steps,
+                "peak_used_blocks": b.allocator.peak_used,
+                "pool_blocks": b.allocator.capacity,
+            }
+            if mode == "shared":
+                cur["prefix_cache_hits"] = b.prefix_cache.hits
+                cur["retained_blocks_end"] = b.allocator.n_retained
+            if mode not in results or cur["tokens_per_s"] \
+                    > results[mode]["tokens_per_s"]:
+                results[mode] = cur
+            tokens[mode] = [r.tokens for r in
+                            sorted(reqs, key=lambda r: r.request_id)]
+    assert tokens["shared"] == tokens["paged"], \
+        "prefix sharing diverged from the non-shared paged greedy tokens"
+    prefill_ratio = (results["paged"]["prefill_tokens_computed"]
+                     / max(results["shared"]["prefill_tokens_computed"], 1))
+    assert prefill_ratio >= 1.5, \
+        f"prefill reduction {prefill_ratio:.2f}x < 1.5x target"
+    assert results["shared"]["peak_used_blocks"] \
+        < results["paged"]["peak_used_blocks"], \
+        "sharing did not reduce peak blocks in use"
+    speedup = (results["shared"]["tokens_per_s"]
+               / max(results["paged"]["tokens_per_s"], 1e-9))
+    out = {
+        "trace": {"n_requests": n_req, "slots": slots,
+                  "prompt_pad": prompt_pad, "max_gen": max_gen,
+                  "block_size": block_size,
+                  "shared_prefix_len": 56, "n_prefixes": 2},
+        "paged": results["paged"],
+        "shared": results["shared"],
+        "prefill_tokens_ratio": round(prefill_ratio, 3),
+        "peak_blocks_ratio": round(
+            results["paged"]["peak_used_blocks"]
+            / max(results["shared"]["peak_used_blocks"], 1), 3),
+        "tokens_per_s_ratio": round(speedup, 3),
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(out, f, indent=2)
+    return (f"prefill={prefill_ratio:.2f}x_fewer "
+            f"peak_blocks={results['shared']['peak_used_blocks']}"
+            f"/{results['paged']['peak_used_blocks']} "
+            f"shared={results['shared']['tokens_per_s']:.1f}tok_s "
+            f"paged={results['paged']['tokens_per_s']:.1f}tok_s "
+            f"speedup={speedup:.2f}x")
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="short trace for CI (same as BENCH_QUICK=1)")
+    if ap.parse_args().smoke:
+        QUICK = True
+    run()

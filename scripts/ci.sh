@@ -16,4 +16,5 @@ python -m pytest -x -q
 
 echo "== perf smoke =="
 python benchmarks/paged_kv.py --smoke
+python benchmarks/prefix_cache.py --smoke
 python benchmarks/continuous_batching.py --smoke

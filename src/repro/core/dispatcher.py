@@ -178,7 +178,10 @@ class SubflowDispatcher:
             outstanding = handle.outstanding_batches(now) \
                 if hasattr(handle, "outstanding_batches") \
                 else handle.queue_length(now)
-            if outstanding > self.cfg.in_flight_limit:
+            if outstanding >= self.cfg.in_flight_limit:
+                # "at most in_flight_limit outstanding": firing now
+                # would make outstanding+1 — with the default limit of
+                # 1 the old ``>`` stacked a third batch behind two
                 sf.next_fire = now + min(sf.interval, 0.05)
                 continue
             target = max(self.cfg.min_batch,
@@ -188,6 +191,7 @@ class SubflowDispatcher:
             # rather than burn capacity serving it late.
             m = self.latency_models[rid]
             pred = m.predict(target) if m.fitted else 0.0
+            had_demand = bool(self.queue)
             batch: List[Request] = []
             while self.queue and len(batch) < target:
                 r = self.queue.popleft()
@@ -197,7 +201,12 @@ class SubflowDispatcher:
                 r.dispatched = True
                 r.dispatch_time = now
                 batch.append(r)
-            sf.history.append((target, len(batch)))
+            if had_demand:
+                # Eq. 17's u_i measures the replica's unsaturation, not
+                # the stream's: an empty queue at fire time says nothing
+                # about capacity, and recording (target, 0) would inflate
+                # u_i and skew micro-cycle priorities toward idle streams
+                sf.history.append((target, len(batch)))
             if batch:
                 self.replicas[rid].submit_batch(batch, now)
                 self.dispatched += len(batch)

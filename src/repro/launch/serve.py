@@ -11,6 +11,8 @@ Usage:
   ... --combined     # fine-tune while serving (one XLA program)
   ... --paged --block-size 16 --n-blocks 64   # paged KV cache (block
                      # tables; memory scales with live tokens)
+  ... --paged --prefix-cache   # share identical prompt prefixes
+                     # copy-on-write over the paged pool
 """
 from __future__ import annotations
 
@@ -30,7 +32,8 @@ def run_serving(arch: str, *, smoke: bool = True, n_requests: int = 16,
                 batch_size: int = 8, combined: bool = False,
                 train_batch: int = 4, seed: int = 0,
                 paged: bool = False, block_size: int = 16,
-                n_blocks: int = 0, verbose: bool = True) -> dict:
+                n_blocks: int = 0, prefix_cache: bool = False,
+                verbose: bool = True) -> dict:
     """Serve ``n_requests`` prompts on a ``batch_size``-slot continuous
     batcher; returns throughput + (combined mode) train losses."""
     cfg = get_config(arch)
@@ -49,7 +52,7 @@ def run_serving(arch: str, *, smoke: bool = True, n_requests: int = 16,
         engine, params, lora, n_slots=batch_size,
         max_seq=prompt_len + gen_tokens, prompt_pad=prompt_len,
         opt_state=opt_state, paged=paged, block_size=block_size,
-        n_blocks=n_blocks or None)
+        n_blocks=n_blocks or None, prefix_cache=prefix_cache)
     prompts = data.sample_tokens(n_requests)[:, :prompt_len]
     requests = [GenRequest(request_id=i, prompt=prompts[i],
                            max_new_tokens=gen_tokens)
@@ -77,10 +80,15 @@ def run_serving(arch: str, *, smoke: bool = True, n_requests: int = 16,
     if paged:
         out["peak_used_blocks"] = batcher.allocator.peak_used
         out["pool_blocks"] = batcher.allocator.capacity
+    if prefix_cache:
+        out["cached_prefix_tokens"] = stats.cached_prefix_tokens
+        out["prefix_cache_hits"] = batcher.prefix_cache.hits
     if verbose:
         print(f"served {stats.finished}/{n_requests} requests, "
               f"{stats.generated_tokens} tokens in {stats.decode_steps} "
               f"decode steps, {out['throughput_tok_s']:.1f} tok/s"
+              + (f"; {stats.cached_prefix_tokens} prompt tokens served "
+                 "from the prefix cache" if prefix_cache else "")
               + (f"; co-trained {stats.train_steps} fused steps "
                  f"(loss {batcher.train_losses[0]:.3f} -> "
                  f"{batcher.train_losses[-1]:.3f})"
@@ -100,12 +108,18 @@ def main() -> None:
     ap.add_argument("--block-size", type=int, default=16)
     ap.add_argument("--n-blocks", type=int, default=0,
                     help="paged pool size (0 = full worst case)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share identical prompt prefixes copy-on-write "
+                         "over the paged pool (requires --paged)")
     args = ap.parse_args()
+    if args.prefix_cache and not args.paged:
+        ap.error("--prefix-cache requires --paged (sharing rides on "
+                 "pool block aliasing)")
     run_serving(args.arch, n_requests=args.requests,
                 prompt_len=args.prompt_len, gen_tokens=args.gen,
                 batch_size=args.batch, combined=args.combined,
                 paged=args.paged, block_size=args.block_size,
-                n_blocks=args.n_blocks)
+                n_blocks=args.n_blocks, prefix_cache=args.prefix_cache)
 
 
 if __name__ == "__main__":

@@ -237,6 +237,48 @@ def attention_blockwise(q, k, v, *, causal: bool = True, window: int = 0,
     return out.astype(q.dtype)
 
 
+def attention_prefix_suffix(q, k_pre, v_pre, k_suf, v_suf, prefix_len, *,
+                            window: int = 0,
+                            scale: Optional[float] = None):
+    """Suffix-prefill attention: suffix queries attend over a cached
+    (gathered) prefix's K/V plus the suffix's own causal K/V.
+
+    q, k_suf, v_suf: [B, Sq, H*, D] — the uncached suffix, row ``i`` at
+    absolute position ``prefix_len[b] + i``; k_pre, v_pre:
+    [B, Pp, Hkv, D] — prefix K/V gathered from pool blocks, positions
+    ``0 .. Pp-1``, valid where ``< prefix_len[b]`` (rows past a
+    sequence's real prefix are other blocks' garbage and are masked).
+    Mirrors ``attention_dense``'s score/softmax formulation exactly:
+    masked lanes contribute exact zeros, so a request prefilled as
+    (cached prefix + suffix) reproduces the full-prefill logits
+    bit-for-bit."""
+    b, sq, hq, d = q.shape
+    pp = k_pre.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    k = jnp.concatenate([k_pre.astype(q.dtype), k_suf], axis=1)
+    v = jnp.concatenate([v_pre.astype(q.dtype), v_suf], axis=1)
+    k = _gqa_repeat(k, hq)
+    v = _gqa_repeat(v, hq)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    plen = jnp.asarray(prefix_len, jnp.int32)
+    qpos = plen[:, None] + jnp.arange(sq)                    # [B, Sq]
+    kpos = jnp.concatenate(
+        [jnp.broadcast_to(jnp.arange(pp), (b, pp)),
+         plen[:, None] + jnp.arange(sq)], axis=1)            # [B, Pp+Sq]
+    mask = kpos[:, None, :] <= qpos[:, :, None]              # causal
+    mask &= jnp.concatenate(
+        [jnp.arange(pp)[None, :] < plen[:, None],            # real prefix
+         jnp.ones((b, sq), bool)], axis=1)[:, None, :]
+    if window > 0:
+        mask &= (qpos[:, :, None] - kpos[:, None, :]) < window
+    scores = jnp.where(mask[:, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)  # fully-masked rows
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
+    return out.reshape(b, sq, hq, d).astype(q.dtype)
+
+
 def resolve_decode_backend(backend: Optional[str]) -> str:
     """Resolve a decode-attention backend name.
 

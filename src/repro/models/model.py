@@ -390,6 +390,74 @@ class Model:
 
         return jax.tree.map(write, pool_caches, prefill_caches)
 
+    def prefill_ragged_suffix(self, params, lora, batch, suffix_lens,
+                              prefix_lens, caches, prefix_tables):
+        """Prefill only the uncached suffix of each prompt (prefix
+        sharing over the paged pool).
+
+        ``batch["tokens"]`` [W, SufPad] holds each row's right-padded
+        suffix tokens (absolute positions ``prefix_lens[w] + i``);
+        ``prefix_tables`` [W, NBpre] int32 names the pool blocks holding
+        each row's cached block-aligned prefix (scratch-padded past
+        ``prefix_lens[w]`` rows — those lanes are masked).  The prefix
+        K/V are gathered from ``caches`` in-program, so the suffix
+        attends over cached prefix + its own causal K/V and reproduces
+        the full-prefill logits bit-for-bit.  Returns (logits at each
+        row's last real suffix token [W,1,V], {"kv": suffix K/V
+        [L, W, SufPad, Hkv, Dh]}) for ``write_prefill_blocks`` into the
+        suffix's freshly allocated blocks."""
+        cfg = self.cfg
+        assert cfg.has_attention and not cfg.has_ssm \
+            and cfg.family is not Family.VLM, \
+            f"{cfg.name}: suffix prefill needs an attention-only stack"
+        tokens = batch["tokens"]
+        x = jnp.take(params["embed"], tokens, axis=0)
+        x = shard(x, "batch", "act_seq", "embed")
+        prefix_lens = jnp.asarray(prefix_lens, jnp.int32)
+        suffix_lens = jnp.asarray(suffix_lens, jnp.int32)
+        positions = prefix_lens[:, None] + jnp.arange(tokens.shape[1])
+        rope_cs = rope_tables(positions, cfg.head_dim, cfg.rope_theta)
+        tables = jnp.asarray(prefix_tables, jnp.int32)
+        w, nbpre = tables.shape
+
+        def gather(pool):
+            out = jnp.take(pool, tables.reshape(-1), axis=1)
+            return out.reshape(pool.shape[0], w,
+                               nbpre * pool.shape[2], *pool.shape[3:])
+
+        prefix_kv = (gather(caches["kv"][0]), gather(caches["kv"][1]))
+
+        def body(xc, xs):
+            bp, lsl, pre = xs
+            y, kv = tfm.block_prefill_suffix(bp, xc, cfg, pre,
+                                             prefix_lens, rope_cs,
+                                             lora=lsl)
+            return y, kv
+
+        scan = _scan_or_loop if not cfg.scan_layers else lax.scan
+        x, kvs = scan(body, x, (params["blocks"], lora, prefix_kv))
+        hidden = rms_norm(x, params["final_norm"])
+        idx = (suffix_lens - 1).astype(jnp.int32)[:, None, None]
+        last = jnp.take_along_axis(
+            hidden, jnp.broadcast_to(idx, (hidden.shape[0], 1,
+                                           hidden.shape[2])), axis=1)
+        logits = last @ params["lm_head"]
+        return logits, {"kv": kvs}
+
+    def copy_blocks(self, paged_caches, src_ids, dst_ids):
+        """Copy-on-write: duplicate whole pool blocks ``dst := src`` in
+        ONE gather+scatter per K/V leaf.  The runtime batches every COW
+        of a tick (shared block about to take a decode write) into one
+        call."""
+        src = jnp.asarray(src_ids, jnp.int32)
+        dst = jnp.asarray(dst_ids, jnp.int32)
+
+        def cp(pool):
+            return pool.at[:, dst].set(jnp.take(pool, src, axis=1))
+
+        k, v = paged_caches["kv"]
+        return {"kv": (cp(k), cp(v))}
+
     # --------------------------------------------------------------- decode -
     def decode_step(self, params, lora, caches, token, pos, *,
                     attn_backend: Optional[str] = None):

@@ -22,8 +22,8 @@ from repro.models import lora as lora_lib
 from repro.models import mamba2
 from repro.models.layers import (
     apply_rope, attention_blockwise, attention_decode,
-    attention_decode_paged, attention_dense, dense_init, rms_norm,
-    rope_tables, swiglu,
+    attention_decode_paged, attention_dense, attention_prefix_suffix,
+    dense_init, rms_norm, rope_tables, swiglu,
 )
 from repro.models.sharding import shard
 
@@ -111,6 +111,17 @@ def _proj_qkv(p, x, cfg, lora):
     return q, k, v
 
 
+def use_dense_prefill(cfg: ModelConfig, s: int) -> bool:
+    """Whether full-sequence attention at length ``s`` takes the dense
+    (full score matrix) path rather than the blockwise online-softmax
+    path.  Shared with the serving runtime's prefix-cache gate: suffix
+    prefill mirrors the DENSE softmax formulation bit-for-bit, so
+    prefix sharing is only sound for configs that prefill densely."""
+    return cfg.attn_impl == "dense" or (
+        cfg.attn_impl == "auto" and s * s <= 1024 * 1024
+        and not cfg.unroll_attn_blocks)
+
+
 def attn_full(p, x, cfg: ModelConfig, rope_cs, lora=None,
               block_kv: int = 512, skip_masked_blocks: bool = False
               ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
@@ -125,10 +136,7 @@ def attn_full(p, x, cfg: ModelConfig, rope_cs, lora=None,
     v = shard(v, "batch", "seq", "kv_heads", None)
     causal = not cfg.encoder_only
     s = x.shape[1]
-    use_dense = cfg.attn_impl == "dense" or (
-        cfg.attn_impl == "auto" and s * s <= 1024 * 1024
-        and not cfg.unroll_attn_blocks)
-    if use_dense:
+    if use_dense_prefill(cfg, s):
         o = attention_dense(q, k, v, causal=causal,
                             window=cfg.sliding_window)
     else:
@@ -236,6 +244,42 @@ def attn_decode_paged(p, x, cfg: ModelConfig, pool_kv, rope_cs,
     out = lora_lib.apply(o, o @ p["wo"], lora.get("o") if lora else None,
                          cfg.lora.scaling)
     return out, (k_pool, v_pool)
+
+
+def attn_prefill_suffix(p, x, cfg: ModelConfig, prefix_kv, prefix_len,
+                        rope_cs, lora=None):
+    """Ragged suffix prefill attention for one layer: queries are the
+    uncached suffix tokens (absolute positions ``prefix_len + i``, RoPE
+    tables precomputed per row); keys are the cached prefix K/V
+    (gathered from pool blocks) plus the suffix's own K/V.  Returns
+    (out, (k_suf, v_suf)) so the runtime can scatter the fresh suffix
+    K/V into its newly allocated blocks."""
+    q, k, v = _proj_qkv(p, x, cfg, lora)
+    if rope_cs is not None:
+        cos, sin = rope_cs
+        q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+    k_pre, v_pre = prefix_kv
+    o = attention_prefix_suffix(q, k_pre, v_pre, k, v, prefix_len,
+                                window=cfg.sliding_window)
+    o = o.reshape(x.shape[0], x.shape[1], cfg.n_heads * cfg.head_dim)
+    out = lora_lib.apply(o, o @ p["wo"], lora.get("o") if lora else None,
+                         cfg.lora.scaling)
+    return out, (k, v)
+
+
+def block_prefill_suffix(bp, x, cfg: ModelConfig, prefix_kv, prefix_len,
+                         rope_cs, lora=None):
+    """Suffix-prefill block (attention-only stacks — prefix sharing
+    rides on the paged KV pool).  Returns (x, (k_suf, v_suf))."""
+    h = rms_norm(x, bp["ln1"])
+    attn_out, kv = attn_prefill_suffix(bp["attn"], h, cfg, prefix_kv,
+                                       prefix_len, rope_cs, lora=lora)
+    x = x + attn_out
+    if cfg.d_ff > 0:
+        y, _ = _mlp_out(bp, rms_norm(x, bp["ln2"]), cfg, lora)
+        x = x + y
+    x = shard(x, "batch", "act_seq", "embed")
+    return x, kv
 
 
 def cross_attn(p, x, vision_kv, cfg: ModelConfig):

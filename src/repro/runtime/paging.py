@@ -1,4 +1,5 @@
-"""Host-side accounting for the paged KV cache (vLLM-style).
+"""Host-side accounting for the paged KV cache (vLLM-style), including
+copy-on-write prefix sharing.
 
 The device side is a global block pool ``[L, n_blocks, block_size, Hkv,
 Dh]`` (``Model.init_paged_caches``) plus per-slot block tables; this
@@ -14,6 +15,19 @@ is admitted only if its worst case fits the unreserved pool, so a slot
 can never stall mid-decode waiting for a block (no preemption/swap
 needed; that is the ROADMAP follow-on).
 
+Sharing semantics (prefix caching): every block carries a refcount.
+Full, immutable prompt blocks are registered in a ``PrefixCache``
+keyed by ``(parent block, content hash of the block's tokens)``; a new
+request whose prompt starts with a cached block chain aliases those
+pool blocks at refcount+1 instead of re-prefilling them.  Shared
+blocks are never written — the runtime copy-on-writes a private block
+before any decode write would land in one.  When the last reference
+to a *registered* block is freed, the block is not returned to the
+free list but parked in an LRU retained pool, so warm prefixes survive
+across requests; the allocator reclaims retained blocks (oldest first,
+unregistering their cache entries) only when a ``take`` outruns the
+free list.
+
 Block 0 is reserved as the scratch block: inactive decode slots keep
 all-zero block tables, so their dead-lane writes land there instead of
 corrupting live blocks.
@@ -21,7 +35,12 @@ corrupting live blocks.
 from __future__ import annotations
 
 import collections
-from typing import Deque, List, Sequence
+import hashlib
+from typing import (
+    Callable, Deque, Dict, List, Optional, Sequence, Tuple,
+)
+
+import numpy as np
 
 
 def blocks_for(n_tokens: int, block_size: int) -> int:
@@ -33,13 +52,23 @@ class OutOfBlocks(RuntimeError):
     """Raised when an alloc/reserve exceeds the unreserved free pool."""
 
 
+class BlockError(RuntimeError):
+    """Refcount invariant violation: double free, alias of a free
+    block, or a take that hands out a still-referenced block."""
+
+
 class BlockAllocator:
-    """Free-list allocator over ``n_blocks`` pool blocks.
+    """Refcounted free-list allocator over ``n_blocks`` pool blocks.
 
     ``n_scratch`` leading blocks (default 1: block 0) are never handed
     out.  ``reserve``/``release`` move the admission-time worst-case
-    bound; ``take`` converts reservation into concrete block ids;
-    ``free`` returns a finished slot's blocks to the pool.
+    bound; ``take`` converts reservation into concrete block ids (each
+    at refcount 1); ``share`` aliases live blocks (refcount+1, the
+    prefix-cache hit path); ``free`` drops one reference per id —
+    freeing an unreferenced block is a hard error (real double-free
+    detection), and a block whose refcount hits 0 returns to the free
+    list unless it is *pinned* (registered in a prefix cache), in
+    which case it parks in the LRU retained pool until reclaimed.
     """
 
     def __init__(self, n_blocks: int, block_size: int,
@@ -54,21 +83,42 @@ class BlockAllocator:
         self.capacity = n_blocks - n_scratch
         self._free: Deque[int] = collections.deque(
             range(n_scratch, n_blocks))
+        self._ref = np.zeros(n_blocks, np.int32)
+        # pinned = registered in a prefix cache: route to the retained
+        # pool on last free, notify ``on_reclaim`` when reclaimed
+        self._pinned: set = set()
+        # LRU of pinned blocks with refcount 0 (insertion order = age)
+        self._retained: "collections.OrderedDict[int, None]" = \
+            collections.OrderedDict()
         self.reserved = 0
         self.peak_used = 0
+        # called with a block id when a retained block is reclaimed by
+        # ``take`` — the prefix cache drops its entry there
+        self.on_reclaim: Optional[Callable[[int], None]] = None
 
     # ------------------------------------------------------------ queries --
     @property
     def n_free(self) -> int:
+        """Blocks holding no content at all (not retained)."""
         return len(self._free)
 
     @property
+    def n_retained(self) -> int:
+        """Cached-but-unreferenced blocks, reclaimable under pressure."""
+        return len(self._retained)
+
+    @property
     def n_used(self) -> int:
-        return self.capacity - len(self._free)
+        """Blocks with at least one live reference."""
+        return self.capacity - len(self._free) - len(self._retained)
+
+    def ref(self, bid: int) -> int:
+        return int(self._ref[bid])
 
     def available(self) -> int:
-        """Blocks neither allocated nor promised to an admitted slot."""
-        return len(self._free) - self.reserved
+        """Blocks neither referenced nor promised to an admitted slot
+        (retained blocks count: they are reclaimable on demand)."""
+        return len(self._free) + len(self._retained) - self.reserved
 
     def can_reserve(self, n: int) -> bool:
         return self.available() >= n
@@ -87,19 +137,255 @@ class BlockAllocator:
         self.reserved -= n
 
     def take(self, n: int) -> List[int]:
-        """Convert ``n`` reserved blocks into concrete pool block ids."""
+        """Convert ``n`` reserved blocks into concrete pool block ids,
+        each at refcount 1.  Pops the free list first; under pressure
+        it reclaims retained blocks oldest-first, unregistering their
+        prefix-cache entries via ``on_reclaim``."""
         assert n <= self.reserved, \
             f"take({n}) without reservation (reserved={self.reserved})"
-        assert n <= len(self._free), \
+        assert n <= len(self._free) + len(self._retained), \
             "reservation accounting broken: reserved blocks must be free"
-        ids = [self._free.popleft() for _ in range(n)]
+        ids = []
+        for _ in range(n):
+            if self._free:
+                bid = self._free.popleft()
+            else:
+                bid, _ = self._retained.popitem(last=False)  # LRU
+                self._pinned.discard(bid)
+                if self.on_reclaim is not None:
+                    self.on_reclaim(bid)
+            if self._ref[bid] != 0:
+                raise BlockError(
+                    f"take: block {bid} still has refcount "
+                    f"{self._ref[bid]}")
+            self._ref[bid] = 1
+            ids.append(bid)
         self.reserved -= n
         self.peak_used = max(self.peak_used, self.n_used)
         return ids
 
-    def free(self, ids: Sequence[int]) -> None:
+    def share(self, ids: Sequence[int]) -> None:
+        """Alias live blocks: refcount+1 each.  Aliasing a block with
+        no references is a hard error — the prefix-cache hit path must
+        use ``acquire`` so retained blocks are revived instead."""
         for b in ids:
-            assert self.n_scratch <= b < self.n_blocks, \
-                f"free of invalid block id {b}"
-        self._free.extend(ids)
-        assert len(self._free) <= self.capacity, "double free"
+            if self._ref[b] < 1:
+                raise BlockError(
+                    f"share of unreferenced block {b} (refcount "
+                    f"{self._ref[b]})")
+            self._ref[b] += 1
+
+    def acquire(self, ids: Sequence[int]) -> None:
+        """Take one reference on each block for a prefix-cache hit:
+        live blocks are shared (refcount+1); retained blocks (cached
+        content, refcount 0) are revived out of the LRU pool."""
+        for b in ids:
+            if self._ref[b] >= 1:
+                self._ref[b] += 1
+            elif b in self._retained:
+                del self._retained[b]
+                self._ref[b] = 1
+            else:
+                raise BlockError(
+                    f"acquire of free block {b}: prefix cache points "
+                    "at reclaimed content")
+        self.peak_used = max(self.peak_used, self.n_used)
+
+    def n_would_revive(self, ids: Sequence[int]) -> int:
+        """How many of ``ids`` would come out of the retained pool on
+        ``acquire`` — admission must budget these against
+        ``available()`` before reserving."""
+        return sum(1 for b in ids if self._ref[b] == 0)
+
+    def free(self, ids: Sequence[int]) -> None:
+        """Drop one reference per id.  Refcount 0 -> free list, or the
+        retained LRU pool when pinned (prefix-cached content)."""
+        for b in ids:
+            if not (self.n_scratch <= b < self.n_blocks):
+                raise BlockError(f"free of invalid block id {b}")
+            if self._ref[b] < 1:
+                raise BlockError(
+                    f"double free of block {b} (refcount 0)")
+            self._ref[b] -= 1
+            if self._ref[b] == 0:
+                if b in self._pinned:
+                    self._retained[b] = None   # most-recently used end
+                    self._retained.move_to_end(b)
+                else:
+                    self._free.append(b)
+        assert len(self._free) + len(self._retained) <= self.capacity, \
+            "free-list overflow: refcount accounting broken"
+
+    # -------------------------------------------------------------- pinning -
+    def pin(self, bid: int) -> None:
+        """Mark ``bid`` as prefix-cached: its content outlives its last
+        reference (retained LRU) until reclaimed or unpinned."""
+        self._pinned.add(bid)
+
+    def unpin(self, bid: int) -> None:
+        """Drop the cache pin; an already-retained block moves straight
+        back to the free list."""
+        self._pinned.discard(bid)
+        if bid in self._retained:
+            del self._retained[bid]
+            self._free.append(bid)
+
+
+# =========================================================================
+# Hash-indexed prefix cache over full, immutable prompt blocks
+# =========================================================================
+_ROOT = -1   # parent id of a prompt's first block
+
+
+def _digest(tokens: np.ndarray) -> bytes:
+    """Content hash of one block's tokens (stable across processes)."""
+    return hashlib.blake2b(
+        np.ascontiguousarray(tokens, np.int32).tobytes(),
+        digest_size=16).digest()
+
+
+class PrefixCache:
+    """Maps ``(parent block, content hash)`` -> pool block holding that
+    block's KV, chained so a lookup walks the longest cached
+    block-aligned prefix of a prompt.
+
+    Entries verify the full token bytes on lookup (hash collisions
+    cannot alias wrong content).  Registration pins the block in the
+    allocator; the allocator calls back ``_on_reclaim`` when it evicts
+    a retained block under pressure, and the runtime calls
+    ``unregister_block`` before writing a registered block in place
+    (ring wrap on a refcount-1 block)."""
+
+    def __init__(self, allocator: BlockAllocator):
+        self.alloc = allocator
+        self.block_size = allocator.block_size
+        allocator.on_reclaim = self._on_reclaim
+        # (parent, digest) -> [(token_bytes, bid), ...]  (collision list)
+        self._table: Dict[Tuple[int, bytes],
+                          List[Tuple[bytes, int]]] = {}
+        self._key_of: Dict[int, Tuple[int, bytes, bytes]] = {}
+        # parent bid -> registered child bids: entries are keyed by
+        # parent BLOCK ID, so dropping a parent must cascade to its
+        # children — a recycled parent id re-registered for different
+        # content would otherwise resurrect stale chains whose KV was
+        # computed under another prefix
+        self._children: Dict[int, List[int]] = {}
+        self.hits = 0          # blocks served from cache
+        self.misses = 0        # full blocks that had to be prefilled
+        self.reclaimed = 0     # retained blocks evicted under pressure
+
+    def __len__(self) -> int:
+        return len(self._key_of)
+
+    # -------------------------------------------------------------- lookup -
+    def match(self, prompt: np.ndarray) -> List[int]:
+        """Longest chain of cached blocks covering a block-aligned
+        prefix of ``prompt`` — capped so at least ONE prompt token is
+        always left to prefill (its logits seed generation).  Pure
+        lookup: hit/miss counters are bumped by ``count_admitted`` only
+        when an admission actually commits to a (possibly trimmed)
+        match, so a backpressured queue head re-matched every tick
+        cannot inflate telemetry."""
+        bs = self.block_size
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        max_blocks = (len(prompt) - 1) // bs
+        out: List[int] = []
+        parent = _ROOT
+        for i in range(max_blocks):
+            chunk = prompt[i * bs:(i + 1) * bs]
+            bid = self._lookup(parent, chunk)
+            if bid is None:
+                break
+            out.append(bid)
+            parent = bid
+        return out
+
+    def count_admitted(self, prompt: np.ndarray, n_matched: int) -> None:
+        """Record hit/miss telemetry for one admitted request:
+        ``n_matched`` blocks were aliased, the rest of the prompt's
+        matchable blocks had to be prefilled."""
+        max_blocks = (len(np.asarray(prompt).reshape(-1)) - 1) \
+            // self.block_size
+        self.hits += n_matched
+        self.misses += max_blocks - n_matched
+
+    def _lookup(self, parent: int, chunk: np.ndarray) -> Optional[int]:
+        entries = self._table.get((parent, _digest(chunk)))
+        if not entries:
+            return None
+        raw = np.ascontiguousarray(chunk, np.int32).tobytes()
+        for token_bytes, bid in entries:
+            if token_bytes == raw:   # collision-proof: verify content
+                return bid
+        return None
+
+    # -------------------------------------------------------- registration -
+    def register(self, prompt: np.ndarray, block_ids: Sequence[int],
+                 n_matched: int) -> None:
+        """Register the full prompt blocks of a freshly admitted
+        request.  ``block_ids`` is the slot's complete block list
+        (matched prefix + fresh suffix); blocks ``n_matched ..
+        len(prompt)//bs - 1`` are full, immutable and newly written.
+        A block whose key is already mapped (identical prompt admitted
+        in the same wave) stays unregistered — the existing entry
+        wins."""
+        bs = self.block_size
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        n_full = len(prompt) // bs
+        parent = block_ids[n_matched - 1] if n_matched > 0 else _ROOT
+        for i in range(n_matched, n_full):
+            chunk = prompt[i * bs:(i + 1) * bs]
+            bid = block_ids[i]
+            key = (parent, _digest(chunk))
+            raw = np.ascontiguousarray(chunk, np.int32).tobytes()
+            entries = self._table.setdefault(key, [])
+            existing = next((b for tb, b in entries if tb == raw), None)
+            if existing is None and bid not in self._key_of:
+                entries.append((raw, bid))
+                self._key_of[bid] = (key[0], key[1], raw)
+                if parent != _ROOT:
+                    self._children.setdefault(parent, []).append(bid)
+                self.alloc.pin(bid)
+            # chain through the canonical holder of this content so a
+            # same-wave duplicate keeps registering its deeper blocks
+            # under reachable parents
+            parent = existing if existing is not None else bid
+
+    # ------------------------------------------------------- invalidation --
+    def _drop_entry(self, bid: int) -> None:
+        """Remove ``bid``'s table entry AND its whole subtree: child
+        entries are keyed by this block's id, and a recycled id
+        re-registered for different content would resurrect them as
+        stale chains (byte verification cannot catch that — the child
+        content matches, its KV context does not)."""
+        info = self._key_of.pop(bid, None)
+        if info is None:
+            return
+        parent, digest, _raw = info
+        entries = self._table.get((parent, digest))
+        if entries:
+            entries[:] = [(tb, b) for tb, b in entries if b != bid]
+            if not entries:
+                del self._table[(parent, digest)]
+        if parent != _ROOT:
+            kids = self._children.get(parent)
+            if kids and bid in kids:
+                kids.remove(bid)
+        for child in self._children.pop(bid, []):
+            self._drop_entry(child)
+            self.alloc.unpin(child)   # no longer cache-reachable
+
+    def unregister_block(self, bid: int) -> None:
+        """Drop ``bid``'s cache entry and its allocator pin (about to
+        be written in place by its sole owner)."""
+        self._drop_entry(bid)
+        self.alloc.unpin(bid)
+
+    def _on_reclaim(self, bid: int) -> None:
+        # the allocator already unpinned/popped the block under
+        # pressure; just drop the table entry
+        self.reclaimed += 1
+        self._drop_entry(bid)
+
+    def is_registered(self, bid: int) -> bool:
+        return bid in self._key_of

@@ -263,7 +263,8 @@ class LiveReplica:
                  serve_slots: int = 4, serve_prompt_len: int = 16,
                  max_gen_tokens: int = 8, serve_paged: bool = False,
                  serve_block_size: int = 16,
-                 serve_n_blocks: Optional[int] = None):
+                 serve_n_blocks: Optional[int] = None,
+                 serve_prefix_cache: bool = False):
         from repro.runtime.serving_loop import ContinuousBatcher
         self.replica_id = replica_id
         self.model_id = model_id
@@ -276,10 +277,12 @@ class LiveReplica:
         self.train_batch = 0
         self.serve_prompt_len = serve_prompt_len
         self.max_gen_tokens = max_gen_tokens
-        self._queue: Deque[Tuple[float, List[Request]]] = collections.deque()
-        # submitted-but-unfinished groups:
-        # (submit_t, [Request], {gen_id: GenRequest}, t_start)
-        self._inflight: List[Tuple[float, List[Request],
+        # (submit_t on the caller's clock, submit wall stamp, [Request])
+        self._queue: Deque[Tuple[float, float, List[Request]]] = \
+            collections.deque()
+        # submitted-but-unfinished groups: (submit_t, submit_wall,
+        # [Request], {gen_id: GenRequest}, ingest wall stamp)
+        self._inflight: List[Tuple[float, float, List[Request],
                                    Dict[int, Any], float]] = []
         self._gen_counter = 0
         self._busy_frac = 0.0
@@ -289,7 +292,7 @@ class LiveReplica:
             max_seq=serve_prompt_len + max_gen_tokens,
             prompt_pad=serve_prompt_len, opt_state=opt_state,
             paged=serve_paged, block_size=serve_block_size,
-            n_blocks=serve_n_blocks)
+            n_blocks=serve_n_blocks, prefix_cache=serve_prefix_cache)
         from repro.runtime.serving_loop import _engine_jits
         self._jit_loss = _engine_jits(engine)["loss"]
 
@@ -315,7 +318,7 @@ class LiveReplica:
 
     # ------------------------------------------------------------- serving -
     def submit_batch(self, requests: Sequence[Request], now: float) -> None:
-        self._queue.append((now, list(requests)))
+        self._queue.append((now, _time.perf_counter(), list(requests)))
 
     def _ingest(self, now: float) -> None:
         """Turn queued control-plane Requests into generation requests on
@@ -324,7 +327,7 @@ class LiveReplica:
         budget)."""
         from repro.runtime.serving_loop import GenRequest
         while self._queue:
-            submit_t, batch = self._queue.popleft()
+            submit_t, submit_wall, batch = self._queue.popleft()
             prompts = np.asarray(
                 self.data_fn(len(batch))["tokens"])[:, :self.serve_prompt_len]
             group: Dict[int, Any] = {}
@@ -336,30 +339,38 @@ class LiveReplica:
                 self._gen_counter += 1
                 self.batcher.submit(g)
                 group[g.request_id] = g
-            self._inflight.append((submit_t, batch, group,
+            self._inflight.append((submit_t, submit_wall, batch, group,
                                    _time.perf_counter()))
 
     def _emit_finished(self, now: float) -> None:
         still = []
         q = None
-        for submit_t, batch, group, t0 in self._inflight:
+        for submit_t, submit_wall, batch, group, t0 in self._inflight:
             if not all(g.done for g in group.values()):
-                still.append((submit_t, batch, group, t0))
+                still.append((submit_t, submit_wall, batch, group, t0))
                 continue
             if q is None:
                 q = self.quality_score(now)
-            # latency up to the LAST request's finish stamp, not up to
-            # whenever the control plane got around to emitting
+            # every latency is a WALL-CLOCK duration measured on one
+            # clock: queue wait = submit -> ingest, serving = ingest ->
+            # the LAST request's finish stamp (not whenever the control
+            # plane got around to emitting), total = their sum.
             lat = max(g.finished_wall for g in group.values()) - t0
+            queue_wait = max(t0 - submit_wall, 0.0)
             tokens = sum(len(g.tokens) for g in group.values())
+            # timestamps stay on the CALLER's clock (``now`` may be
+            # simulated time): completion is observed at ``now``.  The
+            # old ``now + lat`` stamped a timestamp off BOTH clocks —
+            # SLO attainment then compared a hybrid against sim
+            # deadlines.
             for r in batch:
-                r.completed_at = now + lat
+                r.completed_at = now
                 r.quality = q
             self.on_result(BatchResult(
                 replica_id=self.replica_id, batch_size=len(batch),
-                infer_latency=lat, total_latency=now + lat - submit_t,
-                queue_latency=max(now - submit_t, 0.0),
-                finished_at=now + lat, quality=q, tokens=tokens,
+                infer_latency=lat, total_latency=queue_wait + lat,
+                queue_latency=queue_wait,
+                finished_at=now, quality=q, tokens=tokens,
                 train_batch=self.train_batch), batch[0].stream_id)
         self._inflight = still
 
@@ -372,8 +383,8 @@ class LiveReplica:
             self._emit_finished(now)
 
     def queue_length(self, now: float) -> int:
-        return sum(len(b) for _, b in self._queue) \
-            + sum(len(b) for _, b, g, _t in self._inflight
+        return sum(len(b) for _, _w, b in self._queue) \
+            + sum(len(b) for _, _w, b, g, _t in self._inflight
                   if not all(x.done for x in g.values()))
 
     def utilization(self, now: float) -> float:

@@ -18,6 +18,18 @@ lives in one of two cache layouts:
               is rejected (queue backpressure, preemption-free) when the
               pool can't cover a request's worst case.
 
+Paged mode can additionally share prompt prefixes copy-on-write
+(``prefix_cache=True``): full, immutable prompt blocks are registered
+in a hash-indexed ``PrefixCache`` (runtime/paging.py); a request whose
+prompt starts with a cached block chain aliases those pool blocks at
+refcount+1, prefills ONLY the uncached suffix
+(``model.prefill_ragged_suffix`` attends the suffix over prefix K/V
+gathered straight from the pool), and copy-on-writes a private block
+before any decode write would land in a shared one (sliding-window
+ring wraps).  Evicted-but-cached blocks park in an LRU retained pool
+and are reclaimed on allocator pressure, so warm prefixes survive
+across requests; cache memory then scales with *distinct* live tokens.
+
 The runtime tick is unchanged by the layout:
 
   admission   free slots take queued requests; the whole wave prefills
@@ -66,7 +78,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.runtime.paging import BlockAllocator, blocks_for
+from repro.runtime.paging import BlockAllocator, PrefixCache, blocks_for
 
 
 @functools.lru_cache(maxsize=16)
@@ -88,6 +100,8 @@ def _engine_jits(engine) -> Dict[str, Callable]:
                                donate_argnums=(0,)),
         "write_blocks": jax.jit(model.write_prefill_blocks,
                                 donate_argnums=(0,)),
+        "prefill_suffix": jax.jit(model.prefill_ragged_suffix),
+        "copy_blocks": jax.jit(model.copy_blocks, donate_argnums=(0,)),
         "combined": jax.jit(engine.combined_step, donate_argnums=(2, 4),
                             static_argnames=("attn_backend",)),
         "combined_paged": jax.jit(
@@ -123,7 +137,10 @@ class GenRequest:
 class ServeStats:
     admitted: int = 0
     finished: int = 0
+    # prompt tokens actually COMPUTED by a prefill program (with prefix
+    # sharing on, cached prefixes are skipped and counted separately)
     prefill_tokens: int = 0
+    cached_prefix_tokens: int = 0
     generated_tokens: int = 0
     decode_steps: int = 0
     train_steps: int = 0
@@ -147,6 +164,7 @@ class ContinuousBatcher:
                  opt_state: Any = None, eos_id: Optional[int] = None,
                  paged: bool = False, block_size: int = 16,
                  n_blocks: Optional[int] = None,
+                 prefix_cache: bool = False,
                  attn_backend: Optional[str] = None):
         cfg = engine.model.cfg
         if n_slots < 1:
@@ -209,6 +227,20 @@ class ContinuousBatcher:
                     "admission would deadlock")
             self.n_blocks = n_blocks
             self.allocator = BlockAllocator(n_blocks, block_size)
+            # copy-on-write prefix sharing: identical block-aligned
+            # prompt prefixes alias pool blocks at refcount+1 and skip
+            # their prefill compute (see module docstring)
+            if prefix_cache:
+                from repro.models.transformer import use_dense_prefill
+                if not use_dense_prefill(cfg, self.prompt_pad):
+                    raise NotImplementedError(
+                        f"{cfg.name}: prefix sharing needs the dense "
+                        "prefill path — suffix prefill mirrors its "
+                        "softmax formulation bit-for-bit, while "
+                        "blockwise/unrolled prefill accumulates online "
+                        "and would break cache-on/off greedy identity")
+            self.prefix_cache = PrefixCache(self.allocator) \
+                if prefix_cache else None
             self.caches = self.model.init_paged_caches(n_blocks,
                                                        block_size)
             # all-zero rows park inactive slots on scratch block 0
@@ -224,6 +256,11 @@ class ContinuousBatcher:
             self._dev_tables: Optional[jax.Array] = None
             self._dev_tables_width = 0
         else:
+            if prefix_cache:
+                raise ValueError(
+                    "prefix_cache requires paged=True (sharing rides "
+                    "on pool block aliasing)")
+            self.prefix_cache = None
             self.caches = self.model.init_caches(n_slots, max_seq)
         self.queue: Deque[GenRequest] = collections.deque()
         self.slot_req: List[Optional[GenRequest]] = [None] * n_slots
@@ -240,6 +277,8 @@ class ContinuousBatcher:
         self._jit_write = jits["write"]
         self._jit_write_slots = jits["write_slots"]
         self._jit_write_blocks = jits["write_blocks"]
+        self._jit_prefill_suffix = jits["prefill_suffix"]
+        self._jit_copy_blocks = jits["copy_blocks"]
         self._jit_combined = jits["combined"]
         self._jit_combined_paged = jits["combined_paged"]
         self._jit_train = jits["train"]
@@ -265,18 +304,26 @@ class ContinuousBatcher:
     def _worst_blocks(self, req: GenRequest) -> int:
         """Worst-case block count over the request's lifetime: prompt
         plus ``max_new_tokens - 1`` decode writes (the last sampled
-        token is never fed back), capped by the ring length."""
+        token is never fed back), capped by the ring length.  Under
+        prefix sharing, full-attention requests reserve only the
+        non-matched remainder (aliased blocks are already-used pool
+        capacity); sliding-window requests reserve the full worst case
+        because a ring wrap may copy-on-write every aliased block."""
         tokens = min(len(req.prompt) + req.max_new_tokens - 1,
                      self.ring_len)
         return blocks_for(tokens, self.block_size)
 
-    def _prefill_wave(self, reqs: List[GenRequest]):
+    def _prefill_wave(self, reqs: List[GenRequest],
+                      plans: Optional[List] = None):
         """Prefill an admission wave; returns (first_tokens [W] np,
         [(prefill_caches, src_row)]).  Attention stacks: ONE ragged
         (right-padded) prefill program for the whole wave and ONE
         batched argmax sync for the wave's first tokens.  SSM/hybrid:
         state threads through pads, so exact-length per-request prefill
-        (one compile per distinct prompt length)."""
+        (one compile per distinct prompt length).  With prefix-cache
+        hits in the wave (``plans`` rows carry matched block chains),
+        ONE suffix program computes only each row's uncached tokens,
+        attending over the cached prefix K/V gathered from the pool."""
         if self.cfg.has_ssm:
             outs = [self._jit_prefill_exact(
                 self.params, self.lora,
@@ -285,6 +332,33 @@ class ContinuousBatcher:
                                for logits, _ in outs], np.int32)
             return firsts, [(pre, 0) for _, pre in outs]
         lens = np.array([len(r.prompt) for r in reqs], np.int32)
+        matched = [m for m, _ in plans] if plans else [[] for _ in reqs]
+        if any(matched):
+            bs = self.block_size
+            pre_lens = np.array([len(m) * bs for m in matched], np.int32)
+            suf_lens = lens - pre_lens
+            # suffix width bucketed to block multiples, prefix width to
+            # a power of two over the wave max (extra columns are
+            # scratch-padded and masked): a handful of jit variants,
+            # not one per distinct matched-chain length
+            suf_pad = bs * blocks_for(int(suf_lens.max()), bs)
+            npre = max(len(m) for m in matched)
+            npre = min(1 << (npre - 1).bit_length(),
+                       blocks_for(self.prompt_pad, bs))
+            padded = np.zeros((len(reqs), suf_pad), np.int32)
+            # scratch block 0 pads unmatched rows; their lanes are
+            # masked by pre_lens inside the program
+            pre_tables = np.zeros((len(reqs), npre), np.int32)
+            for j, r in enumerate(reqs):
+                padded[j, :suf_lens[j]] = r.prompt[pre_lens[j]:]
+                pre_tables[j, :len(matched[j])] = matched[j]
+            logits, pre = self._jit_prefill_suffix(
+                self.params, self.lora, {"tokens": jnp.asarray(padded)},
+                jnp.asarray(suf_lens), jnp.asarray(pre_lens),
+                self.caches, jnp.asarray(pre_tables))
+            firsts = np.asarray(jnp.argmax(logits[:, -1], axis=-1),
+                                np.int32)
+            return firsts, [(pre, j) for j in range(len(reqs))]
         padded = np.zeros((len(reqs), self.prompt_pad), np.int32)
         for j, r in enumerate(reqs):
             padded[j, :lens[j]] = r.prompt
@@ -297,62 +371,118 @@ class ContinuousBatcher:
     def admit(self, now: float = 0.0) -> List[GenRequest]:
         """Fill free slots from the queue; returns requests that finished
         at admission (max_new_tokens == 1 / instant EOS).  Paged mode
-        admits FCFS only while the allocator can reserve the head
+        admits FCFS only while the allocator can cover the head
         request's worst case — otherwise the queue waits for an
-        eviction (preemption-free backpressure)."""
+        eviction (preemption-free backpressure).  With the prefix cache
+        on, the head request's longest cached block-aligned prefix is
+        aliased at refcount+1 (reviving retained blocks as needed),
+        only the uncached suffix is prefilled, and the request's
+        newly written full prompt blocks are registered for the next
+        admission."""
         finished: List[GenRequest] = []
         free = [i for i in range(self.n_slots)
                 if self.slot_req[i] is None]
         reqs: List[GenRequest] = []
+        # per admitted request: (matched block chain, blocks reserved)
+        plans: List = []
         while len(reqs) < len(free) and self.queue:
             if self.paged:
-                worst = self._worst_blocks(self.queue[0])
-                if not self.allocator.can_reserve(worst):
+                req = self.queue[0]
+                matched = self.prefix_cache.match(req.prompt) \
+                    if self.prefix_cache is not None else []
+                worst = self._worst_blocks(req)
+
+                # sliding windows wrap decode writes back into prompt
+                # blocks, so every aliased block may need a COW block;
+                # full attention never writes an aliased block
+                def need_for(m):
+                    return worst if self.cfg.sliding_window > 0 \
+                        else worst - len(m)
+
+                # a match can be too expensive to honor: reviving
+                # retained blocks costs pool capacity ON TOP of the
+                # worst-case reservation under sliding windows.  Trim
+                # the aliased prefix until it fits — a cold admission
+                # (no match) always fits one worst-case request, so
+                # warm hits can never deadlock an idle pool.
+                while matched and self.allocator.available() \
+                        < need_for(matched) \
+                        + self.allocator.n_would_revive(matched):
+                    matched.pop()
+                need = need_for(matched)
+                if self.allocator.available() \
+                        < need + self.allocator.n_would_revive(matched):
                     break
-                self.allocator.reserve(worst)
+                self.allocator.acquire(matched)
+                self.allocator.reserve(need)
+                if self.prefix_cache is not None:
+                    self.prefix_cache.count_admitted(req.prompt,
+                                                     len(matched))
+                plans.append((matched, need))
             reqs.append(self.queue.popleft())
         if not reqs:
             return finished
-        firsts, entries = self._prefill_wave(reqs)
+        firsts, entries = self._prefill_wave(
+            reqs, plans if self.paged else None)
         # one batched scatter per wave on the ragged-attention paths;
         # rows flagged with an out-of-range id are dropped (requests
         # that finished at admission)
         batched = not self.cfg.has_ssm
         wave_pre = entries[0][0] if batched else None
         if self.paged:
-            nbp = blocks_for(self.prompt_pad, self.block_size)
+            # wave table width follows the prefill width: full prompts
+            # on a cold wave, just the suffix when prefixes were cached
+            nbp = blocks_for(wave_pre["kv"][0].shape[2], self.block_size)
             wave_tables = np.full((len(reqs), nbp), self.n_blocks,
                                   np.int32)
         elif batched:
             wave_slots = np.full(len(reqs), self.n_slots, np.int32)
         admitted_rows = 0
-        for slot, req, first, (pre_caches, src) in zip(
-                free, reqs, firsts, entries):
+        for k, (slot, req, first, (pre_caches, src)) in enumerate(zip(
+                free, reqs, firsts, entries)):
             first = int(first)
+            matched, reserved = plans[k] if self.paged else ([], 0)
+            n_cached = len(matched) * (self.block_size if self.paged
+                                       else 0)
             req.tokens.append(first)
             req.prefill_at = now
             self.stats.admitted += 1
-            self.stats.prefill_tokens += len(req.prompt)
+            self.stats.prefill_tokens += len(req.prompt) - n_cached
+            self.stats.cached_prefix_tokens += n_cached
             self.stats.generated_tokens += 1
             if len(req.tokens) >= req.max_new_tokens \
                     or first == self.eos_id:
                 # done at admission: never occupies the slot, so skip
-                # the cache write entirely
+                # the cache write entirely and drop the aliased prefix
                 req.finished_at = now
                 req.finished_wall = time.perf_counter()
                 self.stats.finished += 1
                 if self.paged:
-                    self.allocator.release(self._worst_blocks(req))
+                    self.allocator.release(reserved)
+                    if matched:
+                        self.allocator.free(matched)
                 finished.append(req)
                 continue
             if self.paged:
-                need = blocks_for(len(req.prompt), self.block_size)
+                need = blocks_for(len(req.prompt) - n_cached,
+                                  self.block_size)
                 ids = self.allocator.take(need)
-                self.slot_blocks[slot] = ids
-                self.slot_reserved[slot] = self._worst_blocks(req) - need
+                self.slot_blocks[slot] = list(matched) + ids
+                self.slot_reserved[slot] = reserved - need
                 self.block_tables[slot, :] = 0
-                self.block_tables[slot, :need] = ids
+                self.block_tables[slot, :len(matched) + need] = \
+                    self.slot_blocks[slot]
                 wave_tables[src, :need] = ids
+                # register the freshly written full prompt blocks —
+                # except for a request whose decode will ring-wrap back
+                # into them: those blocks are doomed to be overwritten
+                # mid-flight, and an owner forced to COW its own
+                # registered blocks would outrun its reservation
+                wraps = len(req.prompt) + req.max_new_tokens - 1 \
+                    > self.ring_len
+                if self.prefix_cache is not None and not wraps:
+                    self.prefix_cache.register(
+                        req.prompt, self.slot_blocks[slot], len(matched))
                 self._dev_tables = None
             elif batched:
                 wave_slots[src] = slot
@@ -373,9 +503,16 @@ class ContinuousBatcher:
 
     # --------------------------------------------------------------- decode -
     def _grow_tables(self, active: List[int]) -> None:
-        """Allocate the block a slot's next write lands in, if its table
-        doesn't cover it yet — the 'grow one block at a time' step,
-        always against the slot's admission-time reservation."""
+        """Make the block each slot's next write lands in writable:
+        allocate it if the table doesn't cover it yet (the 'grow one
+        block at a time' step, always against the slot's admission-time
+        reservation); under prefix sharing, a covered-but-shared block
+        (refcount > 1 — a ring wrap re-entering an aliased prompt
+        block) is copy-on-written to a private block first, and a
+        registered refcount-1 block is unregistered from the prefix
+        cache so its cached entry never goes stale in place."""
+        cow_src: List[int] = []
+        cow_dst: List[int] = []
         for i in active:
             wr = int(self.slot_pos[i]) % self.ring_len
             bidx = wr // self.block_size
@@ -387,6 +524,30 @@ class ContinuousBatcher:
                 self.slot_blocks[i].append(bid)
                 self.block_tables[i, bidx] = bid
                 self._dev_tables = None
+            elif self.prefix_cache is not None:
+                bid = self.slot_blocks[i][bidx]
+                if self.allocator.ref(bid) > 1:
+                    assert self.slot_reserved[i] > 0, \
+                        f"slot {i}: copy-on-write beyond reservation"
+                    (nb,) = self.allocator.take(1)
+                    self.slot_reserved[i] -= 1
+                    cow_src.append(bid)
+                    cow_dst.append(nb)
+                    self.allocator.free([bid])   # drop our alias
+                    self.slot_blocks[i][bidx] = nb
+                    self.block_tables[i, bidx] = nb
+                    self._dev_tables = None
+                elif self.prefix_cache.is_registered(bid):
+                    self.prefix_cache.unregister_block(bid)
+        if cow_src:
+            # one batched device copy per tick; pad to a small bucket
+            # of widths so the jit cache stays bounded (0 -> 0 copies
+            # the scratch block onto itself: harmless)
+            width = 1 << (len(cow_src) - 1).bit_length()
+            pad = width - len(cow_src)
+            src = np.asarray(cow_src + [0] * pad, np.int32)
+            dst = np.asarray(cow_dst + [0] * pad, np.int32)
+            self.caches = self._jit_copy_blocks(self.caches, src, dst)
 
     def _table_width(self, active: List[int]) -> int:
         """Bucketed live-table width: the decode program only streams

@@ -169,3 +169,39 @@ def test_macro_overload_reset_clears_stale_queue_samples():
     # phantom re-promotion off the old window
     d.macro_cycle(cfg.t_fit)
     assert d.overload_promotions == 1
+
+
+def test_in_flight_limit_is_at_most():
+    """'At most in_flight_limit outstanding' (§2.3 double buffering):
+    with the default limit of 1, one outstanding batch must already
+    block the next fire — the old ``>`` stacked a third batch behind
+    two."""
+    d, replicas, _ = make_dispatcher(n=1)
+    replicas["r0"].outstanding = 1
+    for i in range(8):
+        d.submit(_req(i))
+    d._fire_due_subflows(0.0)
+    assert replicas["r0"].batches == [], \
+        "limit 1 with 1 outstanding must not fire"
+    replicas["r0"].outstanding = 0
+    sf = d.subflows["r0"]
+    sf.next_fire = 0.0
+    d._fire_due_subflows(0.1)
+    assert len(replicas["r0"].batches) == 1
+
+
+def test_unsaturation_ignores_empty_queue_fires():
+    """Eq. 17: a fire against an EMPTY stream queue says nothing about
+    replica capacity — recording (target, 0) would inflate u_i and
+    skew micro-cycle priorities toward idle streams."""
+    d, replicas, _ = make_dispatcher(n=1)
+    sf = d._ensure_subflow("r0", 0.0)
+    sf.batch_size = 4
+    d._fire_due_subflows(0.0)          # no demand at all
+    assert len(sf.history) == 0
+    assert sf.unsaturation() == 0.0
+    d.submit(_req(0, t=0.2))
+    sf.next_fire = 0.0
+    d._fire_due_subflows(0.2)          # real demand, partial fill
+    assert list(sf.history) == [(4, 1)]
+    assert sf.unsaturation() == pytest.approx(0.75)

@@ -83,3 +83,15 @@ def test_serving_combined_trains_while_serving():
     # test_engine_combined; here require finiteness + no blow-up
     assert all(l == l for l in out["train_losses"])
     assert out["train_losses"][-1] < out["train_losses"][0] + 0.5
+
+
+def test_serving_prefix_cache_flag():
+    """--prefix-cache end-to-end: the paged driver runs with sharing on
+    and reports cache telemetry (synthetic prompts are distinct, so the
+    run exercises the cold-path: registration without hits)."""
+    out = run_serving("qwen1.5-0.5b", n_requests=6, prompt_len=8,
+                      gen_tokens=4, batch_size=2, paged=True,
+                      block_size=4, prefix_cache=True, verbose=False)
+    assert out["tokens_generated"] == 24
+    assert "cached_prefix_tokens" in out and "prefix_cache_hits" in out
+    assert out["prefill_tokens"] + out["cached_prefix_tokens"] == 48

@@ -1,0 +1,347 @@
+"""Copy-on-write prefix sharing over the paged KV pool: allocator
+refcount/double-free/alias invariants, greedy equivalence with the
+cache on vs off (full attention AND sliding-window ring-wrap COW),
+LRU retention + allocator-pressure reclaim, hash-collision safety and
+partial-block boundaries, and the match cap that always leaves one
+prompt token to prefill."""
+import jax
+import numpy as np
+import pytest
+
+from conftest import reference_greedy as _reference_greedy
+from conftest import sample_prompts as _prompts
+from repro.configs.registry import get_config
+from repro.core.engine import make_engine
+from repro.runtime import paging
+from repro.runtime.paging import BlockAllocator, BlockError
+from repro.runtime.serving_loop import ContinuousBatcher, GenRequest
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("qwen1.5-0.5b").scaled()
+    engine = make_engine(cfg, lr=3e-3)
+    model = engine.model
+    params = model.init(jax.random.key(0))
+    lora = jax.tree.map(lambda x: x + 0.01,
+                        model.init_lora(jax.random.key(1)))
+    return cfg, engine, model, params, lora
+
+
+def _family_requests(prompts, gens):
+    return [GenRequest(request_id=i, prompt=p.copy(), max_new_tokens=g)
+            for i, (p, g) in enumerate(zip(prompts, gens))]
+
+
+def _run_pair(engine, params, lora, build_reqs, **kw):
+    """Run the same trace with the prefix cache off and on; returns
+    (reqs_off, reqs_on, batcher_on)."""
+    off = build_reqs()
+    ContinuousBatcher(engine, params, lora, paged=True, **kw).run(off)
+    on = build_reqs()
+    b = ContinuousBatcher(engine, params, lora, paged=True,
+                          prefix_cache=True, **kw)
+    b.run(on)
+    return off, on, b
+
+
+# ----------------------------------------------------- allocator units -----
+def test_double_free_detected_immediately():
+    a = BlockAllocator(n_blocks=8, block_size=4)
+    a.reserve(3)
+    ids = a.take(3)
+    a.free(ids[:1])
+    with pytest.raises(BlockError, match="double free"):
+        a.free(ids[:1])           # fails NOW, not at pool overflow
+    a.free(ids[1:])
+    assert a.n_free == 7 and a.n_used == 0
+
+
+def test_alias_of_free_block_detected():
+    a = BlockAllocator(n_blocks=8, block_size=4)
+    a.reserve(1)
+    (bid,) = a.take(1)
+    a.share([bid])                # live alias ok
+    assert a.ref(bid) == 2
+    a.free([bid])
+    a.free([bid])
+    with pytest.raises(BlockError, match="share of unreferenced"):
+        a.share([bid])
+    with pytest.raises(BlockError, match="acquire of free"):
+        a.acquire([bid])
+
+
+def test_retained_pool_and_revive():
+    a = BlockAllocator(n_blocks=8, block_size=4)
+    a.reserve(2)
+    ids = a.take(2)
+    a.pin(ids[0])
+    a.free(ids)
+    # pinned block parks in the retained pool, unpinned returns to free
+    assert a.n_retained == 1 and a.n_free == 6 and a.n_used == 0
+    assert a.available() == 7     # retained still reclaimable capacity
+    a.acquire([ids[0]])           # cache hit revives it
+    assert a.ref(ids[0]) == 1 and a.n_retained == 0
+    a.free([ids[0]])
+    a.unpin(ids[0])               # unregistration frees it outright
+    assert a.n_retained == 0 and a.n_free == 7
+
+
+def test_take_reclaims_retained_lru_and_notifies():
+    a = BlockAllocator(n_blocks=5, block_size=4)   # capacity 4
+    reclaimed = []
+    a.on_reclaim = reclaimed.append
+    a.reserve(4)
+    ids = a.take(4)
+    for b in ids:
+        a.pin(b)
+    a.free(ids)                    # all retained, free list empty
+    assert a.n_free == 0 and a.n_retained == 4
+    a.reserve(2)
+    got = a.take(2)                # must reclaim the two OLDEST
+    assert got == ids[:2] and reclaimed == ids[:2]
+    assert a.n_retained == 2
+
+
+# ------------------------------------------------- full-attention path -----
+def test_prefix_cache_matches_uncached_and_reference(setup):
+    """Repeated-prefix trace: cache on must produce bit-identical greedy
+    tokens to cache off and the one-at-a-time reference, with clean
+    refcount drain and warm blocks retained."""
+    cfg, engine, model, params, lora = setup
+    (shared,) = _prompts(cfg, 1, [24])            # 3 full blocks of 8
+    tails = _prompts(cfg, 5, [4, 7, 2, 8, 5], seed=11)
+    prompts = [np.concatenate([shared, t]) for t in tails]
+    gens = [5, 3, 6, 2, 4]
+
+    off, on, b = _run_pair(
+        engine, params, lora,
+        lambda: _family_requests(prompts, gens),
+        n_slots=2, max_seq=48, prompt_pad=32, block_size=8)
+    for i in range(len(prompts)):
+        ref = _reference_greedy(model, params, lora, prompts[i], gens[i])
+        assert on[i].tokens == ref, f"shared diverges on req {i}"
+        assert off[i].tokens == ref, f"paged diverges on req {i}"
+    # refcount invariants after admit/evict churn: no live refs, no
+    # leaked reservations, warm prefix blocks retained for reuse
+    assert b.allocator.n_used == 0 and b.allocator.reserved == 0
+    assert b.allocator.n_retained > 0
+    assert b.allocator.n_free + b.allocator.n_retained \
+        == b.allocator.capacity
+    assert b.prefix_cache.hits > 0
+    assert b.stats.cached_prefix_tokens > 0
+    assert b.stats.prefill_tokens < sum(len(p) for p in prompts)
+
+
+def test_match_cap_leaves_one_suffix_token(setup):
+    """A fully block-aligned, fully cached prompt must still prefill at
+    least one token — its logits seed generation."""
+    cfg, engine, model, params, lora = setup
+    (p16,) = _prompts(cfg, 1, [16])               # exactly 2 blocks of 8
+    reqs = [GenRequest(request_id=i, prompt=p16.copy(), max_new_tokens=4)
+            for i in range(2)]
+    b = ContinuousBatcher(engine, params, lora, n_slots=1, max_seq=24,
+                          prompt_pad=16, paged=True, block_size=8,
+                          prefix_cache=True)
+    for r in reqs:
+        b.submit(r)
+    while not b.idle():
+        b.step()
+    assert reqs[0].tokens == reqs[1].tokens
+    ref = _reference_greedy(model, params, lora, p16, 4)
+    assert reqs[0].tokens == ref
+    # second request matched only ONE of the two full blocks
+    assert b.prefix_cache.hits == 1
+    assert b.stats.cached_prefix_tokens == 8
+    matcher = b.prefix_cache.match(p16)
+    assert len(matcher) == 1      # cap: (16-1)//8 == 1
+
+
+def test_partial_block_boundary_and_hash_collision(setup, monkeypatch):
+    """Prefixes that end mid-block share only their full blocks, and a
+    degenerate (constant) content hash must not alias wrong content —
+    lookups verify the full token bytes."""
+    cfg, engine, model, params, lora = setup
+    monkeypatch.setattr(paging, "_digest", lambda tokens: b"collide")
+    (shared,) = _prompts(cfg, 1, [10])            # 2 full blocks of 4 + 2
+    tails = _prompts(cfg, 3, [3, 5, 2], seed=7)
+    prompts = [np.concatenate([shared, t]) for t in tails]
+    gens = [4, 3, 5]
+    off, on, b = _run_pair(
+        engine, params, lora,
+        lambda: _family_requests(prompts, gens),
+        n_slots=1, max_seq=24, prompt_pad=16, block_size=4)
+    for i in range(len(prompts)):
+        assert on[i].tokens == off[i].tokens, f"req {i} diverged"
+    # the shared 10-token prefix contributes exactly 2 full blocks per
+    # warm request, even though every chunk hashes identically
+    assert b.stats.cached_prefix_tokens == 2 * 8
+    assert b.prefix_cache.hits == 4
+
+
+# ------------------------------------------------------- reclaim path ------
+def test_allocator_pressure_reclaims_retained(setup):
+    """With a pool too small to retain every prefix, distinct prompts
+    force LRU reclaim of cached blocks — admission must never stall and
+    outputs stay correct."""
+    cfg, engine, model, params, lora = setup
+    prompts = _prompts(cfg, 6, [12, 12, 12, 12, 12, 12], seed=5)
+    gens = [3] * 6
+    # capacity 6: each request worst-cases 4 blocks (12+2 tokens, bs 4),
+    # so retained prefixes MUST be reclaimed to admit the next request
+    off, on, b = _run_pair(
+        engine, params, lora,
+        lambda: _family_requests(prompts, gens),
+        n_slots=1, max_seq=16, prompt_pad=12, block_size=4, n_blocks=7)
+    for i in range(6):
+        assert on[i].tokens == off[i].tokens, f"req {i} diverged"
+    assert b.prefix_cache.reclaimed > 0
+    assert b.allocator.n_used == 0 and b.allocator.reserved == 0
+    # cache table never points at reclaimed blocks: every registered
+    # block is still retained or live
+    for bid in list(b.prefix_cache._key_of):
+        assert b.allocator.ref(bid) > 0 or bid in b.allocator._retained
+
+
+# ------------------------------------------------- sliding-window path -----
+def test_sliding_window_sharing_with_cow(setup):
+    """Windowed archs ring-wrap decode writes back into prompt blocks:
+    a sharer whose wrap re-enters an aliased block must copy-on-write a
+    private block, bit-identically to the unshared runtime."""
+    cfg = get_config("qwen1.5-0.5b").scaled(sliding_window=16)
+    engine = make_engine(cfg, lr=3e-3)
+    model = engine.model
+    params = model.init(jax.random.key(0))
+    lora = jax.tree.map(lambda x: x + 0.01,
+                        model.init_lora(jax.random.key(1)))
+    (shared,) = _prompts(cfg, 1, [12])            # 3 full blocks of 4
+    tails = _prompts(cfg, 2, [2, 2], seed=3)
+
+    def run(pc):
+        b = ContinuousBatcher(engine, params, lora, n_slots=2,
+                              max_seq=40, prompt_pad=16, paged=True,
+                              block_size=4, n_blocks=13,
+                              prefix_cache=pc)
+        cows = []
+        if pc:
+            orig = b._jit_copy_blocks
+            b._jit_copy_blocks = \
+                lambda c, s, d: (cows.append(1), orig(c, s, d))[1]
+        # seed: short generation (never wraps) registers the prefix
+        seed = GenRequest(request_id=0, prompt=shared.copy(),
+                          max_new_tokens=4)
+        b.submit(seed)
+        while not b.idle():
+            b.step()
+        # two concurrent sharers decode past the window: their ring
+        # wrap re-enters the aliased prefix blocks
+        sharers = [GenRequest(request_id=1 + i,
+                              prompt=np.concatenate([shared, tails[i]]),
+                              max_new_tokens=10) for i in range(2)]
+        for r in sharers:
+            b.submit(r)
+        while not b.idle():
+            b.step()
+        return b, [seed] + sharers, cows
+
+    b_on, on, cows = run(True)
+    b_off, off, _ = run(False)
+    for i in range(3):
+        assert on[i].tokens == off[i].tokens, f"req {i} diverged"
+    assert b_on.prefix_cache.hits > 0, "sharers must alias the prefix"
+    assert cows, "ring wrap over a shared block must copy-on-write"
+    assert b_on.allocator.n_used == 0 and b_on.allocator.reserved == 0
+
+
+def test_wrapping_request_blocks_not_registered(setup):
+    """A request whose decode will wrap the ring never registers its
+    prompt blocks (they are doomed to be overwritten mid-flight, and an
+    owner COWing its own blocks would outrun its reservation)."""
+    cfg = get_config("qwen1.5-0.5b").scaled(sliding_window=8)
+    engine = make_engine(cfg, lr=3e-3)
+    model = engine.model
+    params = model.init(jax.random.key(0))
+    lora = model.init_lora(jax.random.key(1))
+    (p,) = _prompts(cfg, 1, [8])
+    b = ContinuousBatcher(engine, params, lora, n_slots=1, max_seq=24,
+                          prompt_pad=8, paged=True, block_size=4,
+                          prefix_cache=True)
+    b.submit(GenRequest(request_id=0, prompt=p.copy(),
+                        max_new_tokens=12))       # wraps the 8-ring
+    while not b.idle():
+        b.step()
+    assert len(b.prefix_cache) == 0
+    assert b.allocator.n_retained == 0
+
+
+# ------------------------------------------------------- cache gating ------
+def test_prefix_cache_requires_paged(setup):
+    cfg, engine, model, params, lora = setup
+    with pytest.raises(ValueError, match="prefix_cache requires paged"):
+        ContinuousBatcher(engine, params, lora, n_slots=1,
+                          prefix_cache=True)
+
+
+def test_windowed_hit_on_tiny_pool_never_deadlocks(setup):
+    """Reviving retained blocks costs capacity ON TOP of a windowed
+    request's full worst-case reservation: on a pool sized for exactly
+    one worst-case request, a warm hit must trim its match and admit
+    cold rather than backpressure an idle pool forever."""
+    cfg = get_config("qwen1.5-0.5b").scaled(sliding_window=16)
+    engine = make_engine(cfg, lr=3e-3)
+    model = engine.model
+    params = model.init(jax.random.key(0))
+    lora = model.init_lora(jax.random.key(1))
+    (shared,) = _prompts(cfg, 1, [8])
+    (tail,) = _prompts(cfg, 1, [4], seed=9)
+
+    def build_reqs():
+        return [
+            GenRequest(request_id=0, prompt=shared.copy(),
+                       max_new_tokens=4),          # registers 2 blocks
+            GenRequest(request_id=1,
+                       prompt=np.concatenate([shared, tail]),
+                       max_new_tokens=8),          # worst case = 4 = pool
+        ]
+
+    # capacity 4 == one worst-case request: matched revive (2) + worst
+    # (4) exceeds the pool, so the hit must be trimmed away
+    off, on, b = _run_pair(
+        engine, params, lora, build_reqs,
+        n_slots=1, max_seq=24, prompt_pad=16, block_size=4, n_blocks=5)
+    for i in range(2):
+        assert on[i].tokens == off[i].tokens, f"req {i} diverged"
+    assert b.stats.finished == 2
+    assert b.allocator.n_used == 0 and b.allocator.reserved == 0
+
+
+def test_recycled_parent_id_cannot_resurrect_stale_chain():
+    """Entries are keyed by parent BLOCK ID: dropping a parent must
+    cascade to its children, or a reclaimed-and-re-registered parent id
+    would resurrect a chain whose KV was computed under a DIFFERENT
+    prefix (byte verification cannot catch it — the child's content
+    matches, its attention context does not)."""
+    from repro.runtime.paging import PrefixCache
+    a = BlockAllocator(n_blocks=5, block_size=4)   # capacity 4
+    pc = PrefixCache(a)
+    A = np.arange(4, dtype=np.int32)
+    B = np.arange(4, dtype=np.int32) + 100
+    D = np.arange(4, dtype=np.int32) + 200
+    # register chain X(A) -> C(B) and evict it into the retained pool
+    a.reserve(3)
+    x, c, extra = a.take(3)
+    pc.register(np.concatenate([A, B, [7]]), [x, c, extra], 0)
+    assert pc.is_registered(x) and pc.is_registered(c)
+    a.free([x, c, extra])
+    assert a.n_retained == 2
+    # pressure reclaims X (oldest) — C's (X, digest(B)) entry must die
+    # with it, and C must stop being retained (unreachable content)
+    a.reserve(4)
+    got = a.take(4)
+    assert x in got
+    assert not pc.is_registered(c)
+    # X comes back holding DIFFERENT content D; a [D, B, ...] prompt
+    # must match only the D block, never the stale B child
+    pc.register(np.concatenate([D, B, [9]]), got[:3], 0)
+    assert pc.match(np.concatenate([D, B, [9]]))[:1] == [got[0]]
+    assert pc.match(np.concatenate([A, B, [7]])) == []

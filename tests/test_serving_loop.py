@@ -213,4 +213,11 @@ def test_live_replica_serves_and_cotrains(setup):
     assert res.tokens == 12                      # 3 reqs x 4 real tokens
     assert res.infer_latency > 0
     assert all(r.completed_at is not None for r in reqs)
+    # clock consistency: completion timestamps live on the CALLER's
+    # clock (pump was driven with now=1.0) — never wall-clock durations
+    # added to sim time — and latencies compose as durations
+    assert all(r.completed_at == 1.0 for r in reqs)
+    assert res.finished_at == 1.0
+    assert res.total_latency == pytest.approx(
+        res.queue_latency + res.infer_latency)
     assert rep.queue_length(2.0) == 0
