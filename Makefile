@@ -1,6 +1,6 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test collect bench serve
+.PHONY: test collect bench bench-smoke serve
 
 collect:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest --collect-only -q
@@ -10,6 +10,12 @@ test: collect
 
 bench:
 	PYTHONPATH=$(PYTHONPATH):. python benchmarks/run.py
+
+bench-smoke:
+	PYTHONPATH=$(PYTHONPATH):. python benchmarks/paged_kv.py --smoke
+	PYTHONPATH=$(PYTHONPATH):. python benchmarks/prefix_cache.py --smoke
+	PYTHONPATH=$(PYTHONPATH):. python benchmarks/continuous_batching.py --smoke
+	PYTHONPATH=$(PYTHONPATH):. python benchmarks/multi_replica.py --smoke
 
 serve:
 	PYTHONPATH=$(PYTHONPATH) python -m repro.launch.serve --arch qwen1.5-0.5b

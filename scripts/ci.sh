@@ -18,3 +18,4 @@ echo "== perf smoke =="
 python benchmarks/paged_kv.py --smoke
 python benchmarks/prefix_cache.py --smoke
 python benchmarks/continuous_batching.py --smoke
+python benchmarks/multi_replica.py --smoke

@@ -7,14 +7,41 @@ loop around live JAX replicas (examples/).
 """
 from __future__ import annotations
 
+import collections.abc
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
 
 from repro.core.dispatcher import DispatcherConfig, SubflowDispatcher
 from repro.core.interfaces import BatchResult, ReplicaHandle, Request
 from repro.core.latency_model import BivariateLatencyModel
 from repro.core.launcher import FineTuneTaskLauncher, LauncherConfig
 from repro.core.states import ClusterStateManager, ReplicaState, StatePolicy
+
+
+class StreamReplicaView(collections.abc.Mapping):
+    """Live, read-only view of the cluster registry filtered to one
+    stream's model.  Dispatchers hold THIS instead of a dict snapshot,
+    so ``add_replica`` / ``remove_replica`` join/leave every existing
+    stream dispatcher immediately — the old one-time ``dict(...)``
+    snapshot meant late-added replicas never received traffic and
+    removed ones lingered in ``d.replicas``."""
+
+    def __init__(self, registry: Dict[str, ReplicaHandle], model_id: str):
+        self._registry = registry
+        self._model_id = model_id
+
+    def __getitem__(self, rid: str) -> ReplicaHandle:
+        h = self._registry[rid]
+        if h.model_id != self._model_id:
+            raise KeyError(rid)
+        return h
+
+    def __iter__(self) -> Iterator[str]:
+        return (rid for rid, h in self._registry.items()
+                if h.model_id == self._model_id)
+
+    def __len__(self) -> int:
+        return sum(1 for _ in self)
 
 
 @dataclasses.dataclass
@@ -58,8 +85,11 @@ class ClusterController:
         self.states.register(handle.replica_id, state)
 
     def remove_replica(self, replica_id: str, now: float) -> None:
-        """Elastic scale-down / failure: drop the replica everywhere.
-        In-session members are handled by the session's cohort check."""
+        """Elastic scale-down / failure: drop the replica everywhere and
+        requeue its accepted-but-unfinished requests on the surviving
+        pool (failover — no request is lost).  In-session members are
+        handled by the session's cohort check."""
+        handle = self.replicas.get(replica_id)
         active = self.launcher.session_for(replica_id)
         if active is not None:
             if replica_id in active.session.members:
@@ -67,6 +97,17 @@ class ClusterController:
             active.coordinator.drop_replica(replica_id)
         self.states.remove(replica_id)
         self.replicas.pop(replica_id, None)
+        # failover AFTER the registry drop (requeued requests must only
+        # ever be re-placed on survivors) but BEFORE the dispatcher
+        # cleanup: the drain emits BatchResults for already-finished
+        # generations, which would otherwise resurrect latency-model
+        # entries for the dead replica
+        if handle is not None and hasattr(handle, "drain_pending"):
+            by_stream: Dict[str, List[Request]] = {}
+            for req in handle.drain_pending(now):
+                by_stream.setdefault(req.stream_id, []).append(req)
+            for sid, reqs in by_stream.items():
+                self.dispatcher_for(sid).requeue(reqs)
         for d in self.dispatchers.values():
             d.subflows.pop(replica_id, None)
             d.latency_models.pop(replica_id, None)
@@ -84,12 +125,11 @@ class ClusterController:
             self.dispatchers[stream_id] = d
         return d
 
-    def _stream_replicas(self, stream_id: str) -> Dict[str, ReplicaHandle]:
-        """Serviceable replicas: those with the stream's model deployed.
+    def _stream_replicas(self, stream_id: str) -> StreamReplicaView:
+        """Serviceable replicas: those with the stream's model deployed —
+        as a LIVE view over the registry, shared with the dispatcher.
         stream_id convention: "<model_id>" or "<model_id>/<slo-class>"."""
-        model_id = stream_id.split("/")[0]
-        return {rid: h for rid, h in self.replicas.items()
-                if h.model_id == model_id}
+        return StreamReplicaView(self.replicas, stream_id.split("/")[0])
 
     def submit_request(self, req: Request) -> None:
         self.dispatcher_for(req.stream_id).submit(req)

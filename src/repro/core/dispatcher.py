@@ -16,7 +16,17 @@ t(b*) = τ', b* = λ·τ').  Two-phase control:
   micro-cycle (T_adjust): per-subflow quality-aware reallocation using
                           unsaturation u_i (Eq. 17) and priority
                           Q_i·(1+u_i) (Eq. 18–19), with smoothing
-                          bounds.
+                          bounds, plus queued-request rebalancing:
+                          admission-queue work reclaimed from
+                          overloaded replicas when a peer is starved.
+
+Placement-aware firing: due subflows drain the stream queue in replica
+*headroom* order (``ReplicaHandle.pressure`` — free pool blocks, free
+slots, queue depth; least-loaded fallback), each fire is clamped to the
+replica's slot-wave ``admit_capacity``, and a request whose prompt
+matches a replica's registered prefix-cache chains
+(``prefix_affinity``) is routed there so its prefill becomes a cache
+hit.
 
 Deviation note: the paper's smoothing range [min(0.5b,2), max(1.5b,b_max)]
 has a vacuous upper bound whenever b_max > 1.5b; we use
@@ -30,7 +40,9 @@ import dataclasses
 import math
 from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
-from repro.core.interfaces import BatchResult, ReplicaHandle, Request
+from repro.core.interfaces import (
+    BatchResult, ReplicaHandle, ReplicaPressure, Request,
+)
 from repro.core.latency_model import BivariateLatencyModel, LinearLatencyModel
 from repro.core.states import ReplicaState
 
@@ -98,10 +110,21 @@ class SubflowDispatcher:
         self.dispatched = 0
         self.dropped = 0
         self.overload_promotions = 0
+        self.affinity_routed = 0       # requests placed by prefix affinity
+        self.rebalanced = 0            # requests reclaimed + requeued
 
     # ---------------------------------------------------------- ingestion --
     def submit(self, req: Request) -> None:
         self.queue.append(req)
+
+    def requeue(self, requests: Sequence[Request]) -> None:
+        """Return requests to the FRONT of the stream queue, preserving
+        their order — failover re-queue and micro-cycle rebalancing hand
+        back the oldest waiting work, which must not lose its place."""
+        for r in reversed(list(requests)):
+            r.dispatched = False
+            r.dispatch_time = None
+            self.queue.appendleft(r)
 
     def queue_depth(self) -> int:
         return len(self.queue)
@@ -166,7 +189,67 @@ class SubflowDispatcher:
                 self._ensure_subflow(promoted, now)
 
     # -------------------------------------------------------- subflow firing
+    def _pressure_of(self, rid: str, now: float
+                     ) -> Optional[ReplicaPressure]:
+        handle = self.replicas[rid]
+        return handle.pressure(now) if hasattr(handle, "pressure") \
+            else None
+
+    def _headroom(self, rid: str, now: float,
+                  pressure: Optional[ReplicaPressure]) -> float:
+        """Placement score for routing order: runtime pressure when the
+        replica exports it (free pool blocks / slots / queue depth),
+        least-loaded fallback for handles without pressure signals."""
+        if pressure is not None:
+            return pressure.headroom()
+        return 1.0 / (1.0 + self.replicas[rid].queue_length(now))
+
+    def _select_batch(self, rid: str, target: int, now: float,
+                      pred: float) -> List[Request]:
+        """Pull up to ``target`` feasible requests from the stream queue
+        for ``rid``.  Placement-aware: a request whose prompt matches
+        the replica's registered prefix-cache chains jumps the scan
+        window (its prefill becomes a cache hit *on this replica*);
+        everything else stays FCFS.  Scanned requests that cannot meet
+        their deadline are shed (Eq. 13c)."""
+        if not self.queue:
+            return []
+        handle = self.replicas[rid]
+        q = list(self.queue)
+        order: Sequence[int] = range(len(q))
+        hit_set: set = set()
+        if hasattr(handle, "prefix_affinity"):
+            lookahead = min(len(q), max(4 * target, 16))
+            hits = [i for i in range(lookahead)
+                    if q[i].prompt is not None
+                    and handle.prefix_affinity(q[i].prompt) > 0]
+            if hits:
+                hit_set = set(hits)
+                order = hits + [i for i in range(len(q))
+                                if i not in hit_set]
+        batch: List[Request] = []
+        taken: set = set()
+        for i in order:
+            if len(batch) >= target:
+                break
+            r = q[i]
+            if r.deadline < now + pred:
+                self.dropped += 1
+                taken.add(i)
+                continue
+            r.dispatched = True
+            r.dispatch_time = now
+            batch.append(r)
+            taken.add(i)
+            if i in hit_set:
+                self.affinity_routed += 1
+        if taken:
+            self.queue = collections.deque(
+                q[i] for i in range(len(q)) if i not in taken)
+        return batch
+
     def _fire_due_subflows(self, now: float) -> None:
+        due: List[str] = []
         for rid in self._active_replicas():
             sf = self._ensure_subflow(rid, now)
             if now < sf.next_fire:
@@ -184,23 +267,34 @@ class SubflowDispatcher:
                 # 1 the old ``>`` stacked a third batch behind two
                 sf.next_fire = now + min(sf.interval, 0.05)
                 continue
+            due.append(rid)
+        # placement-aware routing: due replicas drain the stream queue
+        # in headroom order — pool/slot headroom first, least-loaded as
+        # the fallback — so the queue head lands where admission will
+        # not backpressure it
+        pressures = {rid: self._pressure_of(rid, now) for rid in due}
+        if len(due) > 1:
+            due.sort(key=lambda r: -self._headroom(r, now, pressures[r]))
+        for rid in due:
+            sf = self.subflows[rid]
             target = max(self.cfg.min_batch,
                          min(sf.batch_size, sf.b_max))
+            p = pressures[rid]
+            if p is not None and p.admit_capacity is not None:
+                # a live replica's fire is capped at its slot-wave
+                # headroom: never hand one replica more than it can
+                # start on while peers sit idle
+                if p.admit_capacity < 1:
+                    sf.next_fire = now + min(sf.interval, 0.05)
+                    continue
+                target = min(target, p.admit_capacity)
             # feasibility shedding (Eq. 13c): a request whose deadline
             # cannot be met by this batch contributes nothing — drop it
             # rather than burn capacity serving it late.
             m = self.latency_models[rid]
             pred = m.predict(target) if m.fitted else 0.0
             had_demand = bool(self.queue)
-            batch: List[Request] = []
-            while self.queue and len(batch) < target:
-                r = self.queue.popleft()
-                if r.deadline < now + pred:
-                    self.dropped += 1
-                    continue
-                r.dispatched = True
-                r.dispatch_time = now
-                batch.append(r)
+            batch = self._select_batch(rid, target, now, pred)
             if had_demand:
                 # Eq. 17's u_i measures the replica's unsaturation, not
                 # the stream's: an empty queue at fire time says nothing
@@ -211,7 +305,6 @@ class SubflowDispatcher:
                 self.replicas[rid].submit_batch(batch, now)
                 self.dispatched += len(batch)
             # pace at the replica's processing envelope: I = α·b_actual+β
-            m = self.latency_models[rid]
             b_eff = max(len(batch), 1)
             interval = m.predict(b_eff) if m.fitted \
                 else self.cfg.default_interval
@@ -297,3 +390,32 @@ class SubflowDispatcher:
             lo = max(self.cfg.min_batch, int(0.5 * prev))
             hi = max(lo, min(int(math.ceil(1.5 * prev)) + 1, sf.b_max))
             sf.batch_size = int(min(max(raw, lo), hi))
+        self._rebalance_queued(active, flows, now)
+
+    def _rebalance_queued(self, active: List[str], flows: List[Subflow],
+                          now: float) -> None:
+        """Micro-cycle request rebalancing: when any active replica is
+        starved (empty admission queue, free slots) while another holds
+        more queued work than its next batch can absorb, the excess is
+        reclaimed back to the stream queue — the next fires re-place it
+        by headroom, so a routing mistake never strands requests behind
+        one slow replica."""
+        if len(active) < 2:
+            return
+        pressures = {rid: self._pressure_of(rid, now) for rid in active}
+        starved = any(p is not None and p.pending == 0
+                      and p.slot_headroom > 0.0
+                      for p in pressures.values())
+        if not starved:
+            return
+        for rid, sf in zip(active, flows):
+            p = pressures[rid]
+            h = self.replicas[rid]
+            if p is None or not hasattr(h, "reclaim_queued"):
+                continue
+            excess = p.pending - sf.batch_size
+            if excess > 0:
+                back = h.reclaim_queued(excess, now)
+                if back:
+                    self.requeue(back)
+                    self.rebalanced += len(back)

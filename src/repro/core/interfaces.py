@@ -23,6 +23,20 @@ class Request:
     dispatch_time: Optional[float] = None   # when a subflow picked it up
     completed_at: Optional[float] = None
     quality: float = 0.0        # response quality when served (1/CE)
+    # live serving: concrete prompt token ids ([P] int32).  None on the
+    # simulator path (analytic latencies never look at content); live
+    # replicas draw from their data distribution when absent.  The
+    # dispatcher also reads it for prefix-cache affinity routing.
+    prompt: Optional[Any] = None
+    # sampling configuration, threaded through to the decode tick
+    # (temperature <= 0 is exact greedy — the default)
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: Optional[int] = None
+    # filled by live replicas on completion: the generated token ids
+    # (the multi-replica equivalence gates compare these bit-for-bit)
+    output_tokens: Optional[List[int]] = None
 
     @property
     def slo_met(self) -> bool:
@@ -64,6 +78,51 @@ class TrainRoundStats:
             / max(self.steps, 1)
 
 
+@dataclasses.dataclass
+class ReplicaPressure:
+    """Runtime pressure a replica exports for placement-aware routing.
+
+    ``SimReplica`` fills the slot/queue fields from its event queue;
+    ``LiveReplica`` reads them off the continuous batcher + block
+    allocator (free pool blocks, reservations, prefix-cache occupancy).
+    A contiguous (non-paged) replica reports ``pool_blocks == 0`` and
+    full block headroom — admission there is gated by slots only.
+    """
+    queue_len: int = 0          # accepted but unfinished requests
+    pending: int = 0            # admission-queue requests (not ingested)
+    active_slots: int = 0
+    total_slots: int = 0
+    free_blocks: int = 0        # unreserved + unreferenced pool blocks
+    reserved_blocks: int = 0    # admission-time worst-case reservations
+    pool_blocks: int = 0        # allocator capacity (0 = contiguous)
+    cached_blocks: int = 0      # prefix-cache retained/registered blocks
+    # max requests one dispatcher fire should hand over right now
+    # (None = unbounded; live replicas report their slot-wave headroom
+    # so one fire never swallows a whole trace while peers sit idle)
+    admit_capacity: Optional[int] = None
+
+    @property
+    def slot_headroom(self) -> float:
+        if self.total_slots <= 0:
+            return 0.0
+        return (self.total_slots - self.active_slots) / self.total_slots
+
+    @property
+    def block_headroom(self) -> float:
+        if self.pool_blocks <= 0:
+            return 1.0              # contiguous: blocks never gate
+        return self.free_blocks / self.pool_blocks
+
+    def headroom(self) -> float:
+        """Scalar placement score: how much more work this replica can
+        absorb right now.  Pool headroom dominates (an exhausted pool
+        backpressures admission outright), slots break ties, and a deep
+        per-replica queue discounts both.  ``queue_len`` already counts
+        admission-queue requests, so ``pending`` is not re-added."""
+        h = min(self.block_headroom, 1.0) * (0.5 + 0.5 * self.slot_headroom)
+        return h / (1.0 + self.queue_len / max(self.total_slots, 1))
+
+
 @runtime_checkable
 class ReplicaHandle(Protocol):
     """What the CoLLM control plane needs from a replica."""
@@ -78,9 +137,37 @@ class ReplicaHandle(Protocol):
 
     def queue_length(self, now: float) -> int: ...
 
+    def outstanding_batches(self, now: float) -> int:
+        """Submitted-but-unfinished batches (the dispatcher's in-flight
+        backpressure unit — §2.3 double buffering)."""
+        ...
+
     def utilization(self, now: float) -> float:
         """Busy fraction over the last monitoring interval (the TPU/JAX
         stand-in for nvidia-smi SM utilization — DESIGN.md §2)."""
+        ...
+
+    # ---- placement signals -------------------------------------------------
+    def pressure(self, now: float) -> ReplicaPressure:
+        """Runtime pressure snapshot for placement-aware routing."""
+        ...
+
+    def prefix_affinity(self, prompt: Any) -> int:
+        """Prompt tokens this replica could serve from its prefix cache
+        (0 when it has no cache or no match) — the dispatcher routes
+        matching requests here to convert prefill into cache hits."""
+        ...
+
+    # ---- elasticity / failover ---------------------------------------------
+    def reclaim_queued(self, max_n: int, now: float) -> List[Request]:
+        """Hand back up to ``max_n`` admission-queue requests that have
+        not started executing (micro-cycle rebalancing)."""
+        ...
+
+    def drain_pending(self, now: float) -> List[Request]:
+        """Failover: stop serving, free all runtime resources, and
+        return every accepted-but-unfinished request so the control
+        plane can requeue it on a survivor."""
         ...
 
     # ---- fine-tuning -------------------------------------------------------

@@ -5,6 +5,17 @@ admitted mid-flight, and ``--combined`` co-runs LoRA fine-tuning via the
 fused ``combined_step`` on every decode tick — the paper's
 model-sharing mechanism live.
 
+``--replicas N`` (N > 1) serves the same trace through the
+multi-replica fabric instead: one ``ClusterController`` routes
+dispatcher subflows across N ``ContinuousBatcher``-backed live
+replicas with placement-aware admission (pool headroom + prefix-cache
+affinity) and per-replica admission queues; the summary aggregates
+per-replica and cluster-total ``ServeStats``.
+
+Sampling: ``--temperature`` (> 0 enables stochastic decoding; 0 =
+greedy, the default), filtered by ``--top-k`` / ``--top-p``, seeded
+per request from ``--seed`` so runs are reproducible.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
       --requests 16 --prompt-len 32 --gen 16
@@ -13,6 +24,8 @@ Usage:
                      # tables; memory scales with live tokens)
   ... --paged --prefix-cache   # share identical prompt prefixes
                      # copy-on-write over the paged pool
+  ... --replicas 2   # dispatcher-routed pool of live replicas
+  ... --temperature 0.8 --top-k 40 --top-p 0.95   # sampled decoding
 """
 from __future__ import annotations
 
@@ -33,6 +46,8 @@ def run_serving(arch: str, *, smoke: bool = True, n_requests: int = 16,
                 train_batch: int = 4, seed: int = 0,
                 paged: bool = False, block_size: int = 16,
                 n_blocks: int = 0, prefix_cache: bool = False,
+                temperature: float = 0.0, top_k: int = 0,
+                top_p: float = 1.0,
                 verbose: bool = True) -> dict:
     """Serve ``n_requests`` prompts on a ``batch_size``-slot continuous
     batcher; returns throughput + (combined mode) train losses."""
@@ -55,7 +70,9 @@ def run_serving(arch: str, *, smoke: bool = True, n_requests: int = 16,
         n_blocks=n_blocks or None, prefix_cache=prefix_cache)
     prompts = data.sample_tokens(n_requests)[:, :prompt_len]
     requests = [GenRequest(request_id=i, prompt=prompts[i],
-                           max_new_tokens=gen_tokens)
+                           max_new_tokens=gen_tokens,
+                           temperature=temperature, top_k=top_k,
+                           top_p=top_p, seed=seed + i)
                 for i in range(n_requests)]
 
     def train_fn():
@@ -87,12 +104,59 @@ def run_serving(arch: str, *, smoke: bool = True, n_requests: int = 16,
         print(f"served {stats.finished}/{n_requests} requests, "
               f"{stats.generated_tokens} tokens in {stats.decode_steps} "
               f"decode steps, {out['throughput_tok_s']:.1f} tok/s"
+              + (f" (sampled, T={temperature:g})" if temperature > 0
+                 else "")
               + (f"; {stats.cached_prefix_tokens} prompt tokens served "
                  "from the prefix cache" if prefix_cache else "")
               + (f"; co-trained {stats.train_steps} fused steps "
                  f"(loss {batcher.train_losses[0]:.3f} -> "
                  f"{batcher.train_losses[-1]:.3f})"
                  if batcher.train_losses else ""))
+    return out
+
+
+def run_multi_replica_serving(
+        arch: str, *, n_replicas: int = 2, smoke: bool = True,
+        n_requests: int = 16, prompt_len: int = 32, gen_tokens: int = 16,
+        batch_size: int = 4, seed: int = 0, paged: bool = False,
+        block_size: int = 16, n_blocks: int = 0,
+        prefix_cache: bool = False, temperature: float = 0.0,
+        top_k: int = 0, top_p: float = 1.0,
+        verbose: bool = True) -> dict:
+    """Serve ``n_requests`` prompts through the dispatcher-routed
+    multi-replica fabric; returns the aggregate cluster summary."""
+    from repro.core.interfaces import Request
+    from repro.runtime.fabric import build_fabric
+
+    fabric, cfg = build_fabric(
+        arch, n_replicas, smoke=smoke, n_slots=batch_size,
+        prompt_len=prompt_len, gen_tokens=gen_tokens, paged=paged,
+        block_size=block_size, n_blocks=n_blocks or None,
+        prefix_cache=prefix_cache, seed=seed)
+    data = SyntheticDataset("alpaca", vocab_size=cfg.vocab_size,
+                            seq_len=prompt_len, seed=seed)
+    prompts = data.sample_tokens(n_requests)[:, :prompt_len]
+    stream = cfg.name
+    requests = [Request(request_id=i, stream_id=stream, arrival=0.0,
+                        deadline=1e9, tokens=gen_tokens,
+                        prompt=prompts[i].astype(np.int32),
+                        temperature=temperature, top_k=top_k,
+                        top_p=top_p, seed=seed + i)
+                for i in range(n_requests)]
+    out = fabric.run(requests)
+    out["completed"] = sum(1 for r in requests
+                           if r.completed_at is not None)
+    if verbose:
+        c = out["cluster"]
+        print(f"fabric served {out['completed']}/{n_requests} requests "
+              f"on {c['n_replicas']} replicas: "
+              f"{c['generated_tokens']} tokens, "
+              f"aggregate {c['throughput_sum_tok_s']:.1f} tok/s "
+              f"({c['throughput_wall_tok_s']:.1f} on the shared device)")
+        for rid, row in out["replicas"].items():
+            print(f"  {rid}: {row['finished']} finished, "
+                  f"{row['generated_tokens']} tokens, "
+                  f"{row['throughput_tok_s']:.1f} tok/s")
     return out
 
 
@@ -103,6 +167,9 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="live replicas; > 1 routes the trace through "
+                         "the dispatcher-backed multi-replica fabric")
     ap.add_argument("--combined", action="store_true")
     ap.add_argument("--paged", action="store_true")
     ap.add_argument("--block-size", type=int, default=16)
@@ -111,15 +178,37 @@ def main() -> None:
     ap.add_argument("--prefix-cache", action="store_true",
                     help="share identical prompt prefixes copy-on-write "
                          "over the paged pool (requires --paged)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy, the default)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="keep only the k highest logits (0 = all)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass (1.0 = no filter)")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.prefix_cache and not args.paged:
         ap.error("--prefix-cache requires --paged (sharing rides on "
                  "pool block aliasing)")
+    if args.replicas > 1:
+        if args.combined:
+            ap.error("--combined with --replicas > 1 is not wired yet: "
+                     "drive fine-tuning through the cluster launcher")
+        run_multi_replica_serving(
+            args.arch, n_replicas=args.replicas,
+            n_requests=args.requests, prompt_len=args.prompt_len,
+            gen_tokens=args.gen, batch_size=args.batch,
+            paged=args.paged, block_size=args.block_size,
+            n_blocks=args.n_blocks, prefix_cache=args.prefix_cache,
+            temperature=args.temperature, top_k=args.top_k,
+            top_p=args.top_p, seed=args.seed)
+        return
     run_serving(args.arch, n_requests=args.requests,
                 prompt_len=args.prompt_len, gen_tokens=args.gen,
                 batch_size=args.batch, combined=args.combined,
                 paged=args.paged, block_size=args.block_size,
-                n_blocks=args.n_blocks, prefix_cache=args.prefix_cache)
+                n_blocks=args.n_blocks, prefix_cache=args.prefix_cache,
+                temperature=args.temperature, top_k=args.top_k,
+                top_p=args.top_p, seed=args.seed)
 
 
 if __name__ == "__main__":

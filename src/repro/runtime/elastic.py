@@ -49,16 +49,12 @@ class ElasticServingPool:
         self.left = 0
 
     def join(self, handle, now: float) -> None:
+        # dispatcher replica sets are live views over the cluster
+        # registry, so existing stream dispatchers pick the newcomer up
+        # on their next tick — nothing to patch
         self.cluster.add_replica(handle)
         self.joined += 1
-        # existing dispatchers learn about the new replica lazily: their
-        # replica dicts are views built from the cluster registry
-        for stream_id, d in self.cluster.dispatchers.items():
-            if handle.model_id == stream_id.split("/")[0]:
-                d.replicas[handle.replica_id] = handle
 
     def leave(self, replica_id: str, now: float) -> None:
         self.cluster.remove_replica(replica_id, now)
         self.left += 1
-        for d in self.cluster.dispatchers.values():
-            d.replicas.pop(replica_id, None)

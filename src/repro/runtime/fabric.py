@@ -1,0 +1,204 @@
+"""Multi-replica live serving fabric: one ``ClusterController`` routing
+dispatcher subflows across a pool of ``ContinuousBatcher``-backed
+``LiveReplica``s — the paper's shared-cluster system over the real JAX
+runtime instead of ``SimReplica`` surfaces.
+
+The fabric owns the wall-clock control loop:
+
+  tick        ``ClusterController.tick(now)`` runs the two-timescale
+              dispatcher (macro: latency-model refits + b_max budgets,
+              micro: Eq. 18-19 priority reallocation + queued-request
+              rebalancing) and, with fine-tuning enabled, the launcher/
+              coordinator replanning of per-replica train/infer splits;
+  pump        every live replica advances ONE runtime tick
+              (``pump_once``: gated ingest → decode step → emit), so
+              replicas interleave on a shared device instead of one
+              ``pump`` monopolizing it;
+  placement   the dispatcher fires subflows in *headroom* order (free
+              pool blocks / free slots / queue depth via
+              ``ReplicaHandle.pressure``) and routes requests whose
+              prompts match a replica's registered prefix-cache chains
+              to that replica (``prefix_affinity``);
+  failover    ``fail_replica`` tears a replica down mid-flight
+              (``drain_pending``: all pool blocks freed) and requeues
+              its unfinished requests on the survivors — no request is
+              lost, and greedy outputs are unchanged because survivors
+              regenerate from the prompt.
+
+``build_fabric`` is the one-call constructor used by
+``launch/serve.py --replicas N`` and ``benchmarks/multi_replica.py``:
+every replica shares the same frozen base params (the paper's
+model-sharing premise) but owns its adapter, optimizer state, and KV
+cache pool.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.cluster import ClusterConfig, ClusterController
+from repro.core.interfaces import BatchResult, Request
+from repro.runtime.metrics import aggregate_serve_stats
+from repro.runtime.replica import LiveReplica
+
+
+@dataclasses.dataclass
+class FabricConfig:
+    """Throughput-oriented defaults for live multi-replica serving."""
+    slo: float = 120.0              # generous: live smoke runs are slow
+    in_flight_limit: int = 2        # keep each replica double-buffered
+    monitor_interval: float = 0.05
+    t_fit: float = 2.0
+    t_adjust: float = 0.5
+    bootstrap_b_max: int = 8
+    enable_finetuning: bool = False
+
+
+class ServingFabric:
+    """Dispatcher-routed pool of live replicas with placement-aware
+    admission, micro-cycle rebalancing, and mid-flight failover."""
+
+    def __init__(self, cfg: Optional[FabricConfig] = None):
+        self.cfg = cfg or FabricConfig()
+        ccfg = ClusterConfig(slo=self.cfg.slo,
+                             monitor_interval=self.cfg.monitor_interval,
+                             enable_finetuning=self.cfg.enable_finetuning)
+        ccfg.dispatcher.in_flight_limit = self.cfg.in_flight_limit
+        ccfg.dispatcher.t_fit = self.cfg.t_fit
+        ccfg.dispatcher.t_adjust = self.cfg.t_adjust
+        ccfg.dispatcher.bootstrap_b_max = self.cfg.bootstrap_b_max
+        self.cluster = ClusterController(ccfg)
+        self.replicas: Dict[str, LiveReplica] = {}
+        # failed/removed replicas' serving counters: their pre-kill work
+        # must stay in the cluster totals
+        self.retired_stats: Dict[str, Any] = {}
+        self.results: List[BatchResult] = []
+
+    # ------------------------------------------------------------ registry -
+    def on_result(self, result: BatchResult, stream_id: str) -> None:
+        """Completion callback wired into every replica at build time."""
+        self.results.append(result)
+        self.cluster.on_batch_result(result, stream_id)
+
+    def add_replica(self, rep: LiveReplica) -> None:
+        self.replicas[rep.replica_id] = rep
+        self.cluster.add_replica(rep)
+
+    def fail_replica(self, replica_id: str, now: float) -> LiveReplica:
+        """Mid-flight failure: the controller drains the dead replica
+        (all pool blocks freed) and requeues its unfinished requests on
+        the survivors.  Returns the removed handle for post-mortems."""
+        rep = self.replicas.pop(replica_id)
+        self.cluster.remove_replica(replica_id, now)
+        self.retired_stats[replica_id] = rep.batcher.stats
+        return rep
+
+    # ------------------------------------------------------------ serving --
+    def submit(self, req: Request) -> None:
+        self.cluster.submit_request(req)
+
+    def run(self, requests: Sequence[Request], *,
+            timeout: float = 600.0,
+            failures: Sequence[Tuple[float, str]] = ()) -> Dict:
+        """Drive the fabric until every request completes (or re-queues
+        are impossible).  ``requests`` are submitted when the wall clock
+        passes their ``arrival``; ``failures`` is a list of
+        ``(time, replica_id)`` kill events injected mid-run.  Returns
+        the aggregate serving summary (see ``aggregate_serve_stats``)
+        plus dispatcher/routing telemetry."""
+        todo = sorted(requests, key=lambda r: r.arrival)
+        kills = sorted(failures)
+        next_req = 0
+        t0 = time.perf_counter()
+        while True:
+            now = time.perf_counter() - t0
+            while next_req < len(todo) and todo[next_req].arrival <= now:
+                self.submit(todo[next_req])
+                next_req = next_req + 1
+            while kills and kills[0][0] <= now:
+                _, rid = kills.pop(0)
+                if rid in self.replicas:
+                    self.fail_replica(rid, now)
+            self.cluster.tick(now)
+            busy = False
+            for rep in list(self.replicas.values()):
+                busy = rep.pump_once(now) or busy
+            if next_req >= len(todo) and not kills and not busy \
+                    and all(r.completed_at is not None for r in todo):
+                break
+            if not self.replicas:
+                # every replica failed: requeued requests have nowhere
+                # to go — report the stranding instead of spinning out
+                # the timeout
+                break
+            if now > timeout:
+                break
+            if not busy:
+                # idle until the next arrival / subflow fire instead of
+                # hot-spinning the control loop
+                time.sleep(0.002)
+        out = self.summary()
+        out["incomplete_requests"] = sum(
+            1 for r in todo if r.completed_at is None)
+        return out
+
+    # ---------------------------------------------------------- telemetry --
+    def summary(self) -> Dict:
+        out = aggregate_serve_stats(
+            {**self.retired_stats,
+             **{rid: rep.batcher.stats
+                for rid, rep in self.replicas.items()}})
+        out["dispatchers"] = {
+            sid: {"dispatched": d.dispatched, "dropped": d.dropped,
+                  "affinity_routed": d.affinity_routed,
+                  "rebalanced": d.rebalanced,
+                  "overload_promotions": d.overload_promotions}
+            for sid, d in self.cluster.dispatchers.items()}
+        return out
+
+
+def build_fabric(arch: str, n_replicas: int, *, smoke: bool = True,
+                 n_slots: int = 4, prompt_len: int = 32,
+                 gen_tokens: int = 16, paged: bool = False,
+                 block_size: int = 16, n_blocks: Optional[int] = None,
+                 prefix_cache: bool = False, seed: int = 0,
+                 cfg: Optional[FabricConfig] = None,
+                 ) -> Tuple[ServingFabric, Any]:
+    """Build a fabric of ``n_replicas`` live replicas over ONE shared
+    set of frozen base params (each replica owns its adapter, optimizer
+    state, and cache pool).  Returns ``(fabric, model_cfg)``."""
+    import jax
+
+    from repro.configs.registry import get_config
+    from repro.core.engine import make_engine
+    from repro.data.synthetic import SyntheticDataset
+
+    mcfg = get_config(arch)
+    if smoke:
+        mcfg = mcfg.scaled()
+    assert mcfg.has_decode, f"{arch} is encoder-only; no decode serving"
+    engine = make_engine(mcfg, lr=3e-3)
+    model = engine.model
+    params = model.init(jax.random.key(seed))
+    data = SyntheticDataset("alpaca", vocab_size=mcfg.vocab_size,
+                            seq_len=max(prompt_len, 16), seed=seed)
+
+    def data_fn(b: int) -> Dict[str, Any]:
+        import jax.numpy as jnp
+        return {k: jnp.asarray(v) for k, v in data.batch(b).items()}
+
+    fabric = ServingFabric(cfg)
+    for i in range(n_replicas):
+        lora = model.init_lora(jax.random.key(seed + 1))
+        opt_state = engine.optimizer.init(lora)
+        fabric.add_replica(LiveReplica(
+            f"r{i}", mcfg.name, engine, params, lora, opt_state,
+            on_result=fabric.on_result, data_fn=data_fn,
+            serve_slots=n_slots, serve_prompt_len=prompt_len,
+            max_gen_tokens=gen_tokens, serve_paged=paged,
+            serve_block_size=block_size, serve_n_blocks=n_blocks,
+            serve_prefix_cache=prefix_cache))
+    return fabric, mcfg

@@ -80,3 +80,46 @@ class MetricsCollector:
     def overhead_fraction(self) -> float:
         total = self.overhead_time + self.infer_time + self.train_time
         return self.overhead_time / max(total, 1e-9)
+
+
+# =========================================================================
+# Cluster-wide serving-stats aggregation (multi-replica fabric)
+# =========================================================================
+_SERVE_COUNTERS = ("admitted", "finished", "prefill_tokens",
+                   "cached_prefix_tokens", "generated_tokens",
+                   "decode_steps", "train_steps")
+
+
+def aggregate_serve_stats(per_replica: Dict[str, "object"]) -> Dict:
+    """Fold per-replica ``ServeStats`` into one coherent cluster summary.
+
+    Returns ``{"replicas": {rid: {...}}, "cluster": {...}}`` where the
+    cluster row sums every token/step counter and reports throughput two
+    ways: ``throughput_sum_tok_s`` — the sum of per-replica rates (the
+    pool's aggregate rate with each replica on its own accelerator, the
+    deployment model) — and ``throughput_wall_tok_s`` — total tokens
+    over the SUMMED per-replica busy time (replicas time-slice one
+    device, so its sustained rate divides by total busy seconds, not
+    the longest replica's).  Duck-typed over the ServeStats fields so
+    the metrics module stays JAX-free."""
+    replicas: Dict[str, Dict[str, float]] = {}
+    cluster: Dict[str, float] = {f: 0 for f in _SERVE_COUNTERS}
+    rates: List[float] = []
+    walls: List[float] = []
+    for rid in sorted(per_replica):
+        s = per_replica[rid]
+        row = {f: getattr(s, f) for f in _SERVE_COUNTERS}
+        row["wall_time"] = float(s.wall_time)
+        row["throughput_tok_s"] = float(s.throughput())
+        replicas[rid] = row
+        for f in _SERVE_COUNTERS:
+            cluster[f] += row[f]
+        rates.append(row["throughput_tok_s"])
+        walls.append(row["wall_time"])
+    cluster["n_replicas"] = len(replicas)
+    cluster["wall_time_busy"] = float(sum(walls))
+    cluster["wall_time_max"] = float(max(walls, default=0.0))
+    cluster["throughput_sum_tok_s"] = float(sum(rates))
+    cluster["throughput_wall_tok_s"] = \
+        cluster["generated_tokens"] / max(cluster["wall_time_busy"], 1e-9)
+    return {"replicas": replicas, "cluster": cluster}

@@ -17,7 +17,7 @@ from typing import Any, Callable, Deque, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.interfaces import (
-    BatchResult, ReplicaHandle, Request, TrainRoundStats,
+    BatchResult, ReplicaHandle, ReplicaPressure, Request, TrainRoundStats,
 )
 
 
@@ -203,6 +203,31 @@ class SimReplica:
             util += 0.75  # co-running fine-tuning soaks spare compute
         return float(min(util, 1.0))
 
+    # ------------------------------------------------- placement signals ---
+    def pressure(self, now: float) -> ReplicaPressure:
+        """Analytic stand-in for the live runtime's pressure export: one
+        execution unit, queue depth as the load signal, no block pool."""
+        self._prune_outstanding(now)
+        return ReplicaPressure(
+            queue_len=self.queue_length(now),
+            pending=sum(len(b) for _, b in self.pending),
+            active_slots=1 if self.busy_until > now else 0,
+            total_slots=1)
+
+    def prefix_affinity(self, prompt: Any) -> int:
+        return 0    # analytic latencies never look at prompt content
+
+    def reclaim_queued(self, max_n: int, now: float) -> List[Request]:
+        # ``_drain`` schedules every submitted batch synchronously, so
+        # there is never unstarted work to hand back
+        return []
+
+    def drain_pending(self, now: float) -> List[Request]:
+        # nothing to hand back: ``_drain`` schedules every submitted
+        # batch synchronously, and scheduled sim events run to
+        # completion (like a batch already on the accelerator)
+        return []
+
     # ------------------------------------------------------------ training -
     def set_adapter(self, adapter: Any, version: int) -> None:
         self.adapter = adapter
@@ -321,21 +346,37 @@ class LiveReplica:
         self._queue.append((now, _time.perf_counter(), list(requests)))
 
     def _ingest(self, now: float) -> None:
-        """Turn queued control-plane Requests into generation requests on
-        the continuous batcher (prompts drawn from the replica's data
-        distribution; requested output length capped to the smoke
-        budget)."""
+        """Move admissible groups from the replica's admission queue to
+        the continuous batcher.  Ingestion is HEADROOM-GATED: groups
+        stay in the admission queue while the batcher already holds a
+        full slot wave of queued work, so the micro-cycle can still
+        reclaim them for rebalancing (work inside the batcher queue is
+        committed to this replica).  Prompts come from the control-plane
+        Request when it carries one (multi-replica routing needs
+        identical prompts on every replica), the replica's data
+        distribution otherwise."""
         from repro.runtime.serving_loop import GenRequest
-        while self._queue:
+        while self._queue \
+                and len(self.batcher.queue) < self.batcher.n_slots:
             submit_t, submit_wall, batch = self._queue.popleft()
-            prompts = np.asarray(
-                self.data_fn(len(batch))["tokens"])[:, :self.serve_prompt_len]
+            drawn = None
+            if any(r.prompt is None for r in batch):
+                drawn = np.asarray(self.data_fn(
+                    len(batch))["tokens"])[:, :self.serve_prompt_len]
             group: Dict[int, Any] = {}
-            for r, prompt in zip(batch, prompts):
+            for j, r in enumerate(batch):
+                prompt = np.asarray(
+                    r.prompt, np.int32)[:self.serve_prompt_len] \
+                    if r.prompt is not None else drawn[j]
                 g = GenRequest(
                     request_id=self._gen_counter, prompt=prompt,
                     max_new_tokens=min(r.tokens, self.max_gen_tokens),
-                    arrival=now)
+                    arrival=now, temperature=r.temperature,
+                    top_k=r.top_k, top_p=r.top_p,
+                    # seed from the CONTROL-plane id, never the
+                    # per-replica gen counter: sampled streams must not
+                    # depend on placement or failover re-queues
+                    seed=r.seed if r.seed is not None else r.request_id)
                 self._gen_counter += 1
                 self.batcher.submit(g)
                 group[g.request_id] = g
@@ -363,9 +404,10 @@ class LiveReplica:
             # old ``now + lat`` stamped a timestamp off BOTH clocks —
             # SLO attainment then compared a hybrid against sim
             # deadlines.
-            for r in batch:
+            for r, g in zip(batch, group.values()):
                 r.completed_at = now
                 r.quality = q
+                r.output_tokens = list(g.tokens)
             self.on_result(BatchResult(
                 replica_id=self.replica_id, batch_size=len(batch),
                 infer_latency=lat, total_latency=queue_wait + lat,
@@ -381,14 +423,137 @@ class LiveReplica:
         while not self.batcher.idle():
             self.batcher.step(now=now)
             self._emit_finished(now)
+            self._ingest(now)
+
+    def pump_once(self, now: float) -> bool:
+        """ONE runtime tick: ingest admissible groups, advance every
+        active slot one token, emit finished groups.  The multi-replica
+        fabric round-robins this so replicas interleave instead of one
+        ``pump`` monopolizing the device.  Returns True while the
+        replica still holds unfinished work."""
+        self._ingest(now)
+        if not self.batcher.idle():
+            t0 = _time.perf_counter()
+            self.batcher.step(now=now)
+            # per-replica busy time: this replica's share of the device
+            # (per-replica throughput = its tokens / its stepping time)
+            self.batcher.stats.wall_time += _time.perf_counter() - t0
+            self._emit_finished(now)
+        self._busy_frac = len(self.batcher.active_slots()) \
+            / self.batcher.n_slots
+        return bool(self._queue or self._inflight
+                    or not self.batcher.idle())
 
     def queue_length(self, now: float) -> int:
         return sum(len(b) for _, _w, b in self._queue) \
             + sum(len(b) for _, _w, b, g, _t in self._inflight
                   if not all(x.done for x in g.values()))
 
+    def outstanding_batches(self, now: float) -> int:
+        """Submitted-but-unfinished groups — the dispatcher's in-flight
+        backpressure unit."""
+        return len(self._queue) \
+            + sum(1 for _, _w, b, g, _t in self._inflight
+                  if not all(x.done for x in g.values()))
+
     def utilization(self, now: float) -> float:
         return self._busy_frac
+
+    # ------------------------------------------------- placement signals ---
+    def pressure(self, now: float) -> ReplicaPressure:
+        """Real runtime pressure off the batcher + block allocator:
+        free/reserved pool blocks, active slots, admission-queue depth,
+        prefix-cache occupancy — the dispatcher's routing inputs."""
+        b = self.batcher
+        # pending = RECLAIMABLE work only (admission queue, not yet
+        # ingested); requests already in the batcher queue are committed
+        # to this replica and show up in queue_len alone
+        pending = sum(len(g) for _, _w, g in self._queue)
+        committed = pending + len(b.queue)
+        active = len(b.active_slots())
+        p = ReplicaPressure(
+            queue_len=self.queue_length(now),
+            pending=pending,
+            active_slots=active,
+            total_slots=b.n_slots,
+            # one wave decoding + one wave queued behind it
+            admit_capacity=max(2 * b.n_slots - active - committed, 0))
+        if b.paged:
+            p.free_blocks = max(b.allocator.available(), 0)
+            p.reserved_blocks = b.allocator.reserved
+            p.pool_blocks = b.allocator.capacity
+            if b.prefix_cache is not None:
+                p.cached_blocks = len(b.prefix_cache)
+        return p
+
+    def prefix_affinity(self, prompt: Any) -> int:
+        """Prompt tokens this replica's prefix cache would serve without
+        prefill — the dispatcher routes matching requests here."""
+        pc = self.batcher.prefix_cache
+        if pc is None or prompt is None or len(pc) == 0:
+            # empty-cache early-out: the dispatcher probes affinity per
+            # scanned queue entry on every fire — skip the hashing
+            # until something is actually registered
+            return 0
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        return len(pc.match(prompt[:self.serve_prompt_len])) \
+            * self.batcher.block_size
+
+    # ------------------------------------------------ elastic / failover ---
+    def reclaim_queued(self, max_n: int, now: float) -> List[Request]:
+        """Hand back up to ``max_n`` requests from the admission queue
+        (newest groups first — they have waited the least here), whole
+        groups only; work already inside the batcher is committed."""
+        groups: List[List[Request]] = []
+        taken = 0
+        while self._queue and taken + len(self._queue[-1][2]) <= max_n:
+            _, _w, batch = self._queue.pop()
+            groups.append(batch)
+            taken += len(batch)
+        return [r for g in reversed(groups) for r in g]
+
+    def drain_pending(self, now: float) -> List[Request]:
+        """Failover teardown: emit every ALREADY-FINISHED generation
+        (including finished members of partially-done groups — those
+        results were produced; re-serving them would double-count), then
+        stop serving and hand back every unfinished request (admission
+        queue + in-flight groups) for re-placement on a survivor.
+        Partial generations are discarded; the batcher frees all pool
+        blocks."""
+        self._emit_finished(now)
+        out: List[Request] = []
+        q = None
+        for submit_t, submit_wall, batch, group, t0 in self._inflight:
+            gens = list(group.values())
+            done = [(r, g) for r, g in zip(batch, gens) if g.done]
+            out.extend(r for r, g in zip(batch, gens) if not g.done)
+            if not done:
+                continue
+            if q is None:
+                q = self.quality_score(now)
+            lat = max(g.finished_wall for _, g in done) - t0
+            queue_wait = max(t0 - submit_wall, 0.0)
+            tokens = 0
+            for r, g in done:
+                r.completed_at = now
+                r.quality = q
+                r.output_tokens = list(g.tokens)
+                tokens += len(g.tokens)
+            self.on_result(BatchResult(
+                replica_id=self.replica_id, batch_size=len(done),
+                infer_latency=lat, total_latency=queue_wait + lat,
+                queue_latency=queue_wait, finished_at=now, quality=q,
+                tokens=tokens, train_batch=self.train_batch),
+                batch[0].stream_id)
+        self._inflight.clear()
+        for _s, _w, batch in self._queue:
+            out.extend(batch)
+        self._queue.clear()
+        self.batcher.drain_all()
+        self._busy_frac = 0.0
+        for r in out:
+            r.completed_at = None
+        return out
 
     # ------------------------------------------------------------ training -
     def set_adapter(self, adapter: Any, version: int) -> None:
@@ -411,9 +576,16 @@ class LiveReplica:
             self.batcher.step(train_batch=self.data_fn(train_batch),
                               now=now)
             # emit groups the moment they complete so their latency
-            # reflects serving time, not the rest of the round
+            # reflects serving time, not the rest of the round; keep
+            # feeding the batcher from the admission queue as slots free
             self._emit_finished(now)
-        dt = (_time.perf_counter() - t0) / max(steps, 1)
+            self._ingest(now)
+        elapsed = _time.perf_counter() - t0
+        # the fused round generates serving tokens too — accrue its busy
+        # time so throughput (= tokens / wall_time) stays honest for
+        # COMBINED replicas driven outside pump_once
+        self.batcher.stats.wall_time += elapsed
+        dt = elapsed / max(steps, 1)
         self._busy_frac = 0.9
         losses = self.batcher.train_losses[n_before:]
         before = losses[0] if losses else float("nan")

@@ -115,11 +115,20 @@ def _engine_jits(engine) -> Dict[str, Callable]:
 
 @dataclasses.dataclass
 class GenRequest:
-    """One generation request: prompt in, greedy tokens out."""
+    """One generation request: prompt in, sampled tokens out (greedy by
+    default — ``temperature <= 0``)."""
     request_id: int
     prompt: np.ndarray                  # [P] int32 token ids
     max_new_tokens: int = 16
     arrival: float = 0.0
+    # sampling: temperature <= 0 is exact greedy (the argmax fast path,
+    # no host logits transfer); top_k/top_p filter before the softmax;
+    # ``seed`` makes the sampled stream reproducible per request
+    # (defaults to request_id so identical traces replay identically)
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: Optional[int] = None
     # filled by the runtime
     tokens: List[int] = dataclasses.field(default_factory=list)
     prefill_at: Optional[float] = None
@@ -127,10 +136,46 @@ class GenRequest:
     # wall-clock (perf_counter) finish stamp — ``finished_at`` carries
     # whatever clock the caller's ``now`` uses, which may be sim time
     finished_wall: Optional[float] = None
+    rng: Any = None                     # per-request sampling stream
 
     @property
     def done(self) -> bool:
         return self.finished_at is not None
+
+    @property
+    def samples(self) -> bool:
+        return self.temperature > 0.0
+
+
+def sample_token(logits: np.ndarray, *, temperature: float = 0.0,
+                 top_k: int = 0, top_p: float = 1.0,
+                 rng: Optional[np.random.Generator] = None) -> int:
+    """Sample one token id from a ``[V]`` logits row.
+
+    ``temperature <= 0`` (or no rng) is exact greedy argmax.  Otherwise:
+    scale by temperature, keep the ``top_k`` highest logits (0 = all),
+    then the nucleus — the smallest probability mass >= ``top_p`` —
+    and draw from the renormalized distribution.  float64 softmax so
+    the host-side distribution is deterministic across platforms."""
+    if temperature <= 0.0 or rng is None:
+        return int(np.argmax(logits))
+    row = np.asarray(logits, np.float64) / temperature
+    if 0 < top_k < row.size:
+        kth = np.partition(row, -top_k)[-top_k]
+        row = np.where(row < kth, -np.inf, row)
+    row -= row.max()
+    probs = np.exp(row)
+    probs /= probs.sum()
+    if top_p < 1.0:
+        order = np.argsort(-probs, kind="stable")
+        csum = np.cumsum(probs[order])
+        # smallest prefix whose mass reaches top_p (always >= 1 token)
+        cut = int(np.searchsorted(csum, top_p)) + 1
+        mask = np.zeros_like(probs, bool)
+        mask[order[:cut]] = True
+        probs = np.where(mask, probs, 0.0)
+        probs /= probs.sum()
+    return int(rng.choice(probs.size, p=probs))
 
 
 @dataclasses.dataclass
@@ -330,7 +375,8 @@ class ContinuousBatcher:
                 {"tokens": jnp.asarray(r.prompt[None])}) for r in reqs]
             firsts = np.array([int(jnp.argmax(logits[0, -1]))
                                for logits, _ in outs], np.int32)
-            return firsts, [(pre, 0) for _, pre in outs]
+            last = [logits[0, -1] for logits, _ in outs]
+            return firsts, [(pre, 0) for _, pre in outs], last
         lens = np.array([len(r.prompt) for r in reqs], np.int32)
         matched = [m for m, _ in plans] if plans else [[] for _ in reqs]
         if any(matched):
@@ -358,7 +404,8 @@ class ContinuousBatcher:
                 self.caches, jnp.asarray(pre_tables))
             firsts = np.asarray(jnp.argmax(logits[:, -1], axis=-1),
                                 np.int32)
-            return firsts, [(pre, j) for j in range(len(reqs))]
+            return firsts, [(pre, j) for j in range(len(reqs))], \
+                logits[:, -1]
         padded = np.zeros((len(reqs), self.prompt_pad), np.int32)
         for j, r in enumerate(reqs):
             padded[j, :lens[j]] = r.prompt
@@ -366,7 +413,7 @@ class ContinuousBatcher:
             self.params, self.lora, {"tokens": jnp.asarray(padded)},
             jnp.asarray(lens))
         firsts = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
-        return firsts, [(pre, j) for j in range(len(reqs))]
+        return firsts, [(pre, j) for j in range(len(reqs))], logits[:, -1]
 
     def admit(self, now: float = 0.0) -> List[GenRequest]:
         """Fill free slots from the queue; returns requests that finished
@@ -422,7 +469,7 @@ class ContinuousBatcher:
             reqs.append(self.queue.popleft())
         if not reqs:
             return finished
-        firsts, entries = self._prefill_wave(
+        firsts, entries, last_logits = self._prefill_wave(
             reqs, plans if self.paged else None)
         # one batched scatter per wave on the ragged-attention paths;
         # rows flagged with an out-of-range id are dropped (requests
@@ -441,6 +488,15 @@ class ContinuousBatcher:
         for k, (slot, req, first, (pre_caches, src)) in enumerate(zip(
                 free, reqs, firsts, entries)):
             first = int(first)
+            if req.samples:
+                # the wave's k-th logits row belongs to the k-th request
+                # on every prefill path (SSM stacks per request)
+                req.rng = np.random.default_rng(
+                    req.seed if req.seed is not None else req.request_id)
+                first = sample_token(
+                    np.asarray(last_logits[k]),
+                    temperature=req.temperature, top_k=req.top_k,
+                    top_p=req.top_p, rng=req.rng)
             matched, reserved = plans[k] if self.paged else ([], 0)
             n_cached = len(matched) * (self.block_size if self.paged
                                        else 0)
@@ -610,6 +666,19 @@ class ContinuousBatcher:
                 attn_backend=self.attn_backend)
         self.stats.decode_steps += 1
         nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+        if any(self.slot_req[i].samples for i in active):
+            # ONE batched host fetch of the last-position logits for the
+            # whole tick; greedy-only ticks keep the transfer-free
+            # device argmax path
+            nxt = nxt.copy()    # device-backed arrays are read-only
+            host_rows = np.asarray(logits[:, -1])
+            for i in active:
+                req = self.slot_req[i]
+                if req.samples:
+                    nxt[i] = sample_token(
+                        host_rows[i],
+                        temperature=req.temperature, top_k=req.top_k,
+                        top_p=req.top_p, rng=req.rng)
         for i in active:
             req = self.slot_req[i]
             req.tokens.append(int(nxt[i]))
@@ -640,6 +709,24 @@ class ContinuousBatcher:
             self.slot_reserved[i] = 0
             self.block_tables[i, :] = 0   # back to scratch block 0
             self._dev_tables = None
+
+    def drain_all(self) -> List[GenRequest]:
+        """Failover teardown: evict every active slot, clear the queue,
+        and return all unfinished requests (their partial tokens are
+        discarded — a survivor regenerates from the prompt).  In paged
+        mode every slot's blocks and reservations return to the
+        allocator, so ``allocator.n_used`` drops to 0."""
+        out: List[GenRequest] = list(self.queue)
+        self.queue.clear()
+        for i in self.active_slots():
+            req = self.slot_req[i]
+            self._evict(i)
+            out.append(req)
+        for r in out:
+            r.tokens.clear()
+            r.prefill_at = None
+            r.rng = None
+        return out
 
     def _plain_train(self, train_batch) -> None:
         self.lora, self.opt_state, metrics = self._jit_train(

@@ -1,9 +1,10 @@
 """Subflow dispatcher (§6): pacing, backpressure, feasibility shedding,
-micro-cycle priority allocation, overload promotion."""
+micro-cycle priority allocation, overload promotion, and placement-aware
+routing (headroom order, prefix affinity, queued-request rebalance)."""
 import pytest
 
 from repro.core.dispatcher import DispatcherConfig, Subflow, SubflowDispatcher
-from repro.core.interfaces import BatchResult, Request
+from repro.core.interfaces import BatchResult, ReplicaPressure, Request
 from repro.core.states import ReplicaState
 
 
@@ -26,6 +27,36 @@ class FakeReplica:
 
     def quality_score(self, now):
         return self.quality
+
+
+class FakeLiveReplica(FakeReplica):
+    """Fake exporting the live-runtime placement surface."""
+
+    def __init__(self, rid, free_blocks=8, pool_blocks=8,
+                 affinity_tokens=0):
+        super().__init__(rid)
+        self.free_blocks = free_blocks
+        self.pool_blocks = pool_blocks
+        self.affinity_tokens = affinity_tokens
+        self.pending_reqs = []
+        self.reclaim_calls = []
+
+    def pressure(self, now):
+        return ReplicaPressure(
+            queue_len=self.outstanding,
+            pending=len(self.pending_reqs),
+            active_slots=0, total_slots=4,
+            free_blocks=self.free_blocks,
+            pool_blocks=self.pool_blocks)
+
+    def prefix_affinity(self, prompt):
+        return self.affinity_tokens if prompt is not None else 0
+
+    def reclaim_queued(self, max_n, now):
+        self.reclaim_calls.append(max_n)
+        out = self.pending_reqs[-max_n:]
+        self.pending_reqs = self.pending_reqs[:-max_n]
+        return out
 
 
 def make_dispatcher(n=2, **cfg_kw):
@@ -188,6 +219,79 @@ def test_in_flight_limit_is_at_most():
     sf.next_fire = 0.0
     d._fire_due_subflows(0.1)
     assert len(replicas["r0"].batches) == 1
+
+
+def _live_dispatcher(replicas):
+    return SubflowDispatcher(
+        "m", DispatcherConfig(), replicas,
+        state_of=lambda rid: ReplicaState.SERVING,
+        promote_idle=lambda now: None)
+
+
+def test_placement_prefers_pool_headroom():
+    """Due subflows drain the queue in headroom order: the replica with
+    free pool blocks gets the head request; an exhausted pool ranks
+    last (admission there would just backpressure)."""
+    full = FakeLiveReplica("full", free_blocks=0, pool_blocks=8)
+    free = FakeLiveReplica("free", free_blocks=8, pool_blocks=8)
+    d = _live_dispatcher({"full": full, "free": free})
+    for rid in ("full", "free"):
+        sf = d._ensure_subflow(rid, 0.0)
+        sf.batch_size = sf.b_max = 4
+    d.submit(_req(0))
+    d._fire_due_subflows(0.0)
+    assert [len(b) for _, b in free.batches] == [1]
+    assert full.batches == []
+
+
+def test_placement_prefix_affinity_routing():
+    """A request whose prompt matches a replica's prefix cache routes
+    there even when FCFS order would have sent it elsewhere."""
+    warm = FakeLiveReplica("warm", affinity_tokens=16)
+    cold = FakeLiveReplica("cold", free_blocks=16, pool_blocks=16)
+    d = _live_dispatcher({"cold": cold, "warm": warm})
+    for rid in ("cold", "warm"):
+        sf = d._ensure_subflow(rid, 0.0)
+        sf.batch_size = sf.b_max = 1
+    plain = _req(0)
+    hot = _req(1)
+    hot.prompt = [1, 2, 3]      # matches warm's cache (fake: any prompt)
+    d.submit(plain)
+    d.submit(hot)
+    d._fire_due_subflows(0.0)
+    # cold (more headroom) fires first but takes the PLAIN head request;
+    # the prompt-matching one jumps to the warm replica
+    assert [r.request_id for _, b in warm.batches for r in b] == [1]
+    assert [r.request_id for _, b in cold.batches for r in b] == [0]
+    assert d.affinity_routed == 1
+
+
+def test_micro_cycle_rebalances_queued_requests():
+    """A starved replica (empty admission queue, free slots) pulls
+    excess queued work back to the stream queue for re-placement."""
+    busy = FakeLiveReplica("busy")
+    idle = FakeLiveReplica("idle")
+    d = _live_dispatcher({"busy": busy, "idle": idle})
+    for rid in ("busy", "idle"):
+        sf = d._ensure_subflow(rid, 0.0)
+        sf.batch_size = 2
+        sf.history.append((2, 2))
+    busy.pending_reqs = [_req(i) for i in range(6)]
+    d.micro_cycle(0.0)
+    assert d.rebalanced > 0
+    assert d.queue_depth() == d.rebalanced
+    assert len(busy.pending_reqs) == 6 - d.rebalanced
+
+
+def test_requeue_preserves_order_at_front():
+    d, _, _ = make_dispatcher(n=1)
+    d.submit(_req(10))
+    back = [_req(0), _req(1)]
+    for r in back:
+        r.dispatched = True
+    d.requeue(back)
+    assert [r.request_id for r in d.queue] == [0, 1, 10]
+    assert all(not r.dispatched for r in back)
 
 
 def test_unsaturation_ignores_empty_queue_fires():

@@ -1,0 +1,216 @@
+"""Multi-replica live serving fabric: dispatcher-routed pool of
+continuous batchers — placement routing, greedy equivalence with the
+single-replica runtime, mid-flight failover, sampled decoding through
+the control plane, and cluster ServeStats aggregation."""
+import time
+
+import numpy as np
+import pytest
+
+from conftest import reference_greedy, sample_prompts
+from repro.core.interfaces import Request
+from repro.runtime.fabric import FabricConfig, ServingFabric, build_fabric
+from repro.runtime.metrics import aggregate_serve_stats
+from repro.runtime.serving_loop import ServeStats
+
+ARCH = "qwen1.5-0.5b"
+PROMPT_PAD, MAX_GEN, SLOTS = 10, 6, 2
+
+
+@pytest.fixture()
+def fabric2():
+    fab, cfg = build_fabric(ARCH, 2, n_slots=SLOTS,
+                            prompt_len=PROMPT_PAD, gen_tokens=MAX_GEN,
+                            paged=True, block_size=4)
+    return fab, cfg
+
+
+def _reqs(cfg, lens, gens, stream, **kw):
+    prompts = sample_prompts(cfg, len(lens), lens)
+    return [Request(request_id=i, stream_id=stream, arrival=0.0,
+                    deadline=1e9, tokens=gens[i],
+                    prompt=prompts[i], **kw)
+            for i in range(len(lens))], prompts
+
+
+def _drive(fab, reqs, *, fail_at_step=None, fail_rid=None,
+           max_iters=3000):
+    """Deterministic control loop (no wall-clock pacing in asserts):
+    tick the controller + pump every replica until all requests
+    complete, optionally killing one replica after N iterations."""
+    for r in reqs:
+        fab.submit(r)
+    t0 = time.perf_counter()
+    dead = None
+    for it in range(max_iters):
+        now = time.perf_counter() - t0
+        if fail_at_step is not None and it == fail_at_step:
+            dead = fab.fail_replica(fail_rid, now)
+        fab.cluster.tick(now)
+        busy = False
+        for rep in list(fab.replicas.values()):
+            busy = rep.pump_once(now) or busy
+        if not busy and all(r.completed_at is not None for r in reqs):
+            return dead
+        if not busy:
+            time.sleep(0.002)   # wait out subflow pacing, don't spin
+    raise AssertionError(
+        f"fabric did not drain: "
+        f"{sum(r.completed_at is None for r in reqs)} incomplete")
+
+
+def test_two_replicas_serve_identically_to_reference(fabric2):
+    fab, cfg = fabric2
+    lens = [6, 9, 4, 8, 7, 5]
+    gens = [4, 2, 5, 3, 4, 2]
+    reqs, prompts = _reqs(cfg, lens, gens, cfg.name)
+    _drive(fab, reqs)
+    rep = next(iter(fab.replicas.values()))
+    model, params, lora = rep.engine.model, rep.params, rep.lora
+    served = {rid: s["finished"] for rid, s in
+              aggregate_serve_stats(
+                  {r: h.batcher.stats
+                   for r, h in fab.replicas.items()})["replicas"].items()}
+    assert sum(served.values()) == len(reqs)
+    # the pool actually spread the work (placement, not one hot replica)
+    assert all(v > 0 for v in served.values()), served
+    for i, r in enumerate(reqs):
+        ref = reference_greedy(model, params, lora, prompts[i], gens[i])
+        assert r.output_tokens == ref, f"req {i} diverged on the fabric"
+
+
+def test_failover_requeues_to_survivor(fabric2):
+    fab, cfg = fabric2
+    lens = [6, 8, 5, 7, 6, 9, 4, 8]
+    gens = [5, 4, 5, 3, 4, 5, 6, 3]
+    reqs, prompts = _reqs(cfg, lens, gens, cfg.name)
+    # kill r1 after a few ticks: some requests are mid-decode there
+    dead = _drive(fab, reqs, fail_at_step=4, fail_rid="r1")
+    assert dead is not None and "r1" not in fab.replicas
+    # 100% completion on the survivor, with full token budgets
+    assert all(r.completed_at is not None for r in reqs)
+    assert all(len(r.output_tokens) == gens[i]
+               for i, r in enumerate(reqs))
+    # greedy accounting identical to the reference despite the requeue
+    rep = fab.replicas["r0"]
+    for i, r in enumerate(reqs):
+        ref = reference_greedy(rep.engine.model, rep.params, rep.lora,
+                               prompts[i], gens[i])
+        assert r.output_tokens == ref, f"req {i} diverged after failover"
+    # the dead replica's pool is fully freed: no leaked blocks or
+    # reservations, every slot evicted
+    alloc = dead.batcher.allocator
+    assert alloc.n_used == 0 and alloc.reserved == 0
+    assert dead.batcher.active_slots() == []
+    assert dead.queue_length(1e9) == 0
+    # cluster accounting is coherent: every request finished exactly
+    # once — on r1 before the kill, or on the survivor after requeue
+    stats = aggregate_serve_stats({rid: h.batcher.stats for rid, h in
+                                   list(fab.replicas.items())
+                                   + [("r1", dead)]})
+    assert stats["cluster"]["finished"] == len(reqs)
+
+
+def test_fabric_sampled_decoding_deterministic(fabric2):
+    """Sampling params thread through Request -> GenRequest -> decode
+    tick; a fixed per-request seed reproduces the same tokens."""
+    fab, cfg = fabric2
+    lens = [6, 7, 5, 8]
+    gens = [4, 4, 4, 4]
+    reqs, prompts = _reqs(cfg, lens, gens, cfg.name,
+                          temperature=1.2, top_k=8, seed=123)
+    for i, r in enumerate(reqs):
+        r.seed = 100 + i
+    _drive(fab, reqs)
+    fab2, _ = build_fabric(ARCH, 2, n_slots=SLOTS,
+                           prompt_len=PROMPT_PAD, gen_tokens=MAX_GEN,
+                           paged=True, block_size=4)
+    reqs2 = [Request(request_id=i, stream_id=cfg.name, arrival=0.0,
+                     deadline=1e9, tokens=gens[i], prompt=prompts[i],
+                     temperature=1.2, top_k=8, seed=100 + i)
+             for i in range(len(lens))]
+    _drive(fab2, reqs2)
+    for a, b in zip(reqs, reqs2):
+        assert a.output_tokens == b.output_tokens
+        assert len(a.output_tokens) == a.tokens
+
+
+def test_two_timescale_loop_over_live_replicas():
+    """The macro timescale runs over LIVE replicas: the launcher opens
+    an FL session across idle live replicas, each runs REAL fused train
+    rounds through its batcher, the coordinator aggregates + replans
+    per-replica train/infer splits, and the dispatcher's macro cycle
+    consumes the plan for COMBINED pacing — while serving requests
+    still complete."""
+    from repro.core.states import ReplicaState
+
+    fab, cfg = build_fabric(
+        ARCH, 3, n_slots=SLOTS, prompt_len=PROMPT_PAD,
+        gen_tokens=MAX_GEN,
+        cfg=FabricConfig(enable_finetuning=True))
+    coord_cfg = fab.cluster.cfg.launcher.coordinator
+    coord_cfg.bootstrap_steps = 2
+    coord_cfg.steps_per_round = 2
+    fab.cluster.cfg.launcher.decision_interval = 0.05
+    for rid in list(fab.replicas):
+        fab.cluster.states.transition(rid, ReplicaState.IDLE, 0.0)
+    lens = [6, 7, 5, 8]
+    gens = [3, 3, 3, 3]
+    reqs, _ = _reqs(cfg, lens, gens, cfg.name)
+    for r in reqs:
+        fab.submit(r)
+    t0 = time.perf_counter()
+    launcher = fab.cluster.launcher
+    for _ in range(1500):
+        now = time.perf_counter() - t0
+        fab.cluster.tick(now)
+        for rep in list(fab.replicas.values()):
+            rep.pump_once(now)
+        if launcher.completed_rounds >= 1 \
+                and all(r.completed_at is not None for r in reqs):
+            break
+        time.sleep(0.002)
+    assert launcher.completed_rounds >= 1, "no live FL round completed"
+    # real fused/plain train steps ran on the live batchers
+    assert sum(rep.batcher.stats.train_steps
+               for rep in fab.replicas.values()) >= 6   # 2 steps x 3
+    assert fab.cluster.launcher.adapter_versions.get(cfg.name, 0) >= 1
+    # the coordinator exports a per-replica plan the dispatcher's macro
+    # cycle consumes for COMBINED replicas
+    d = fab.cluster.dispatcher_for(cfg.name)
+    combined = [rid for rid in fab.replicas
+                if fab.cluster.states.state_of(rid)
+                is ReplicaState.COMBINED]
+    for rid in combined:
+        plan = fab.cluster._combined_plan(rid)
+        assert plan is not None
+        b_star, bivar = plan
+        assert b_star >= 1
+    # serving survived the co-running fine-tuning
+    assert all(r.completed_at is not None for r in reqs)
+    assert all(len(r.output_tokens) == gens[i]
+               for i, r in enumerate(reqs))
+
+
+def test_aggregate_serve_stats_totals():
+    a = ServeStats(admitted=5, finished=5, prefill_tokens=40,
+                   cached_prefix_tokens=8, generated_tokens=50,
+                   decode_steps=12, train_steps=2, wall_time=2.0)
+    b = ServeStats(admitted=3, finished=3, prefill_tokens=30,
+                   cached_prefix_tokens=0, generated_tokens=30,
+                   decode_steps=10, train_steps=0, wall_time=1.0)
+    out = aggregate_serve_stats({"r0": a, "r1": b})
+    c = out["cluster"]
+    assert c["n_replicas"] == 2
+    assert c["generated_tokens"] == 80
+    assert c["prefill_tokens"] == 70
+    assert c["cached_prefix_tokens"] == 8
+    assert c["decode_steps"] == 22 and c["train_steps"] == 2
+    assert c["wall_time_busy"] == pytest.approx(3.0)
+    assert c["wall_time_max"] == pytest.approx(2.0)
+    assert c["throughput_sum_tok_s"] == pytest.approx(
+        50 / 2.0 + 30 / 1.0)
+    # shared-device rate divides by SUMMED busy time (time-sliced device)
+    assert c["throughput_wall_tok_s"] == pytest.approx(80 / 3.0)
+    assert out["replicas"]["r0"]["throughput_tok_s"] \
+        == pytest.approx(25.0)

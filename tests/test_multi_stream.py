@@ -40,6 +40,53 @@ def test_streams_route_to_matching_model_pools():
     assert set(cluster.dispatchers["m2"].replicas) == {"b0", "b1"}
 
 
+def test_registry_add_after_dispatcher_exists_receives_traffic():
+    """Regression: ``dispatcher_for`` used to hand each dispatcher a
+    one-time dict snapshot of the registry, so a replica added AFTER the
+    dispatcher existed never received traffic.  The replica view is live
+    now: add-then-submit must route to the newcomer."""
+    sim = Simulator()
+    cluster = ClusterController(ClusterConfig())
+    cluster.add_replica(SimReplica("a0", "m1", sim,
+                                   cluster.on_batch_result, seed=0))
+    d = cluster.dispatcher_for("m1")          # dispatcher exists first
+    assert set(d.replicas) == {"a0"}
+    late = SimReplica("a1", "m1", sim, cluster.on_batch_result, seed=1)
+    cluster.add_replica(late)
+    assert set(d.replicas) == {"a0", "a1"}    # live view, no snapshot
+    for i in range(40):
+        cluster.submit_request(Request(i, "m1", 0.0, 10.0))
+    sim.schedule_every(0.05, cluster.tick, until=5.0)
+    sim.run(5.0)
+    assert late.served_requests > 0, \
+        "late-added replica never received traffic (stale registry)"
+    assert "a1" in d.subflows
+
+
+def test_registry_remove_then_tick_stops_routing():
+    """Removed replicas must leave every dispatcher structure — the old
+    code only popped subflows/latency_models, so ``d.replicas`` kept a
+    dead handle and kept routing to it."""
+    sim = Simulator()
+    cluster = ClusterController(ClusterConfig())
+    reps = [SimReplica(f"a{i}", "m1", sim, cluster.on_batch_result,
+                       seed=i) for i in range(2)]
+    for r in reps:
+        cluster.add_replica(r)
+    d = cluster.dispatcher_for("m1")
+    cluster.tick(0.0)                          # subflows exist for both
+    cluster.remove_replica("a0", 0.1)
+    assert set(d.replicas) == {"a1"}
+    assert "a0" not in d.subflows and "a0" not in d.latency_models
+    served_before = reps[0].served_requests
+    for i in range(20):
+        cluster.submit_request(Request(i, "m1", 0.2, 10.0))
+    sim.schedule_every(0.05, cluster.tick, until=4.0)
+    sim.run(4.0)
+    assert reps[0].served_requests == served_before
+    assert reps[1].served_requests > 0
+
+
 def test_idle_pools_are_per_model():
     """FL cohorts must not mix models (§4.2: 'same model')."""
     from repro.core.states import ReplicaState

@@ -1,0 +1,82 @@
+"""Token sampling (temperature / top-k / top-p / per-request seed):
+pure distribution math plus the greedy-default contract."""
+import numpy as np
+import pytest
+
+from repro.runtime.serving_loop import GenRequest, sample_token
+
+
+def _logits(v=32, seed=0):
+    return np.random.default_rng(seed).normal(size=v).astype(np.float32)
+
+
+def test_zero_temperature_is_exact_greedy():
+    row = _logits()
+    rng = np.random.default_rng(1)
+    assert sample_token(row, temperature=0.0, rng=rng) \
+        == int(np.argmax(row))
+
+
+def test_no_rng_is_greedy():
+    row = _logits()
+    assert sample_token(row, temperature=1.0, rng=None) \
+        == int(np.argmax(row))
+
+
+def test_top_k_one_is_greedy():
+    row = _logits()
+    for seed in range(5):
+        assert sample_token(row, temperature=1.5, top_k=1,
+                            rng=np.random.default_rng(seed)) \
+            == int(np.argmax(row))
+
+
+def test_tiny_top_p_is_greedy():
+    row = _logits()
+    for seed in range(5):
+        assert sample_token(row, temperature=1.5, top_p=1e-9,
+                            rng=np.random.default_rng(seed)) \
+            == int(np.argmax(row))
+
+
+def test_top_k_restricts_support():
+    row = _logits(v=64)
+    top4 = set(np.argsort(-row)[:4])
+    draws = {sample_token(row, temperature=2.0, top_k=4,
+                          rng=np.random.default_rng(s))
+             for s in range(64)}
+    assert draws <= top4 and len(draws) > 1
+
+
+def test_top_p_restricts_support():
+    # one dominant token + near-uniform tail: nucleus at 0.5 keeps the
+    # dominant token only
+    row = np.full(16, 0.0, np.float32)
+    row[3] = 10.0
+    for s in range(8):
+        assert sample_token(row, temperature=1.0, top_p=0.5,
+                            rng=np.random.default_rng(s)) == 3
+
+
+def test_same_seed_same_stream():
+    row = _logits(v=128, seed=2)
+    a = [sample_token(row, temperature=1.0,
+                      rng=np.random.default_rng(42)) for _ in range(4)]
+    b = [sample_token(row, temperature=1.0,
+                      rng=np.random.default_rng(42)) for _ in range(4)]
+    assert a == b
+
+
+def test_temperature_spreads_distribution():
+    row = _logits(v=256, seed=3)
+    cold = {sample_token(row, temperature=0.25,
+                         rng=np.random.default_rng(s)) for s in range(48)}
+    hot = {sample_token(row, temperature=4.0,
+                        rng=np.random.default_rng(s)) for s in range(48)}
+    assert len(hot) > len(cold)
+
+
+def test_genrequest_defaults_are_greedy():
+    r = GenRequest(request_id=0, prompt=np.zeros(4, np.int32))
+    assert not r.samples
+    assert r.temperature == 0.0 and r.top_k == 0 and r.top_p == 1.0
