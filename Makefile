@@ -16,6 +16,7 @@ bench-smoke:
 	PYTHONPATH=$(PYTHONPATH):. python benchmarks/prefix_cache.py --smoke
 	PYTHONPATH=$(PYTHONPATH):. python benchmarks/continuous_batching.py --smoke
 	PYTHONPATH=$(PYTHONPATH):. python benchmarks/multi_replica.py --smoke
+	PYTHONPATH=$(PYTHONPATH):. python benchmarks/combined_fabric.py --smoke
 
 serve:
 	PYTHONPATH=$(PYTHONPATH) python -m repro.launch.serve --arch qwen1.5-0.5b

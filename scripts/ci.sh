@@ -19,3 +19,4 @@ python benchmarks/paged_kv.py --smoke
 python benchmarks/prefix_cache.py --smoke
 python benchmarks/continuous_batching.py --smoke
 python benchmarks/multi_replica.py --smoke
+python benchmarks/combined_fabric.py --smoke

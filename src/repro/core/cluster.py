@@ -152,6 +152,12 @@ class ClusterController:
                     victim = active.session.members[0]
                     active.session.members.remove(victim)
                     active.coordinator.drop_replica(victim)
+                    handle = self.replicas.get(victim)
+                    if handle is not None \
+                            and hasattr(handle, "abort_round"):
+                        # mid-round release: the victim sheds its shadow
+                        # state and serves the last published adapter
+                        handle.abort_round(now)
                     if not active.session.alive:
                         self.launcher._dissolve(active, now)
                     self.states.transition(victim, ReplicaState.SERVING, now)

@@ -15,6 +15,7 @@ so queues drain and the models get sample support (§5.2).
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.goodput import EfficiencyParams, goodput, optimize
@@ -70,13 +71,20 @@ class InferenceTrainingCoordinator:
 
     # ------------------------------------------------------------ telemetry -
     def observe_train(self, stats: TrainRoundStats) -> None:
+        """Fold one member's completed round into its latency model +
+        efficiency params.  Incremental sessions can complete degenerate
+        (0 steps after a mid-round shed, NaN losses when no tick ran) —
+        those must not poison the Eq. 9 fit or Eq. 8's l_t."""
         m = self.t_train.get(stats.replica_id)
-        if m is None:
+        if m is None or stats.steps <= 0:
             return
         m.observe(stats.train_batch, stats.infer_batch, stats.avg_step_time)
         e = self.eff[stats.replica_id]
-        e.noise_scale = stats.noise_scale
-        e.loss_reduction = stats.loss_reduction
+        if math.isfinite(stats.noise_scale):
+            e.noise_scale = stats.noise_scale
+        if math.isfinite(stats.loss_before) \
+                and math.isfinite(stats.loss_after):
+            e.loss_reduction = stats.loss_reduction
 
     def observe_infer(self, result: BatchResult) -> None:
         m = self.t_infer.get(result.replica_id)

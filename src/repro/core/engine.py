@@ -97,34 +97,46 @@ class Engine:
     # ------------------------------------------------- the paper's fusion --
     def combined_step(self, params, lora, opt_state: AdamWState,
                       train_batch, caches, token, pos, *,
-                      attn_backend: Optional[str] = None
+                      serve_lora: Any = None,
+                      attn_backend: Optional[str] = None,
+                      grad_accum: int = 1
                       ) -> Tuple[Any, AdamWState, jax.Array, Any,
                                  Dict[str, jax.Array]]:
         """One fused program: LoRA train step + decode batch, sharing the
         HBM-resident base weights.  XLA schedules both DAGs; the returned
         logits come from the *pre-update* adapter (within-step snapshot
         isolation — matching the paper's subprocess snapshot semantics).
+
+        ``serve_lora`` splits the adapters: decode reads it (the
+        *published* snapshot) while the optimizer trains ``lora`` (the
+        *shadow* tree) — shadow-adapter double buffering, so a whole
+        round of training never perturbs in-flight generation.  Omitted,
+        decode uses the training adapter (the pre-PR-5 behaviour).
         """
         logits, new_caches = self.model.decode_step(
-            params, lora, caches, token, pos, attn_backend=attn_backend)
+            params, lora if serve_lora is None else serve_lora,
+            caches, token, pos, attn_backend=attn_backend)
         new_lora, new_opt, metrics = self.train_step(
-            params, lora, opt_state, train_batch)
+            params, lora, opt_state, train_batch, grad_accum=grad_accum)
         return new_lora, new_opt, logits, new_caches, metrics
 
     def combined_step_paged(self, params, lora, opt_state: AdamWState,
                             train_batch, caches, token, pos, block_tables,
                             *, ring_len: int = 0,
-                            attn_backend: Optional[str] = None
+                            serve_lora: Any = None,
+                            attn_backend: Optional[str] = None,
+                            grad_accum: int = 1
                             ) -> Tuple[Any, AdamWState, jax.Array, Any,
                                        Dict[str, jax.Array]]:
         """``combined_step`` over the paged KV pool: LoRA train step +
         block-table decode tick fused into one program (same pre-update
-        snapshot semantics)."""
+        snapshot semantics and ``serve_lora`` shadow split)."""
         logits, new_caches = self.model.decode_step_paged(
-            params, lora, caches, token, pos, block_tables,
+            params, lora if serve_lora is None else serve_lora,
+            caches, token, pos, block_tables,
             ring_len=ring_len, attn_backend=attn_backend)
         new_lora, new_opt, metrics = self.train_step(
-            params, lora, opt_state, train_batch)
+            params, lora, opt_state, train_batch, grad_accum=grad_accum)
         return new_lora, new_opt, logits, new_caches, metrics
 
     def combined_prefill_step(self, params, lora, opt_state: AdamWState,

@@ -171,14 +171,52 @@ class ReplicaHandle(Protocol):
         ...
 
     # ---- fine-tuning -------------------------------------------------------
-    def set_adapter(self, adapter: Any, version: int) -> None: ...
+    def set_adapter(self, adapter: Any, version: int) -> None:
+        """Publish ``adapter`` as the SERVED snapshot immediately (round
+        boundaries / deployment only) and discard any staged shadow."""
+        ...
 
     def get_adapter(self) -> Any: ...
 
     def train_round(self, train_batch: int, infer_batch: int, steps: int,
                     now: float) -> TrainRoundStats:
-        """Run one local FL round in COMBINED mode (concurrent with
-        serving — the fused combined_step on live replicas)."""
+        """Run one local FL round in COMBINED mode to completion — the
+        blocking convenience over the incremental session surface below
+        (begin → driven ticks → finish → publish)."""
+        ...
+
+    # ---- incremental train sessions ----------------------------------------
+    # The non-blocking round surface: the Launcher begins a round, the
+    # fabric/simulator advances it (live replicas train one fused
+    # combined_step per pump_once tick, interleaved with serving), and
+    # the Launcher POLLS progress instead of blocking on train_round —
+    # no round ever monopolizes the device.
+    def begin_round(self, train_batch: int, infer_batch: int, steps: int,
+                    now: float) -> None:
+        """Start one local FL round as an incremental session.  Live
+        replicas stage a SHADOW copy of the published adapter for the
+        optimizer to train; serving keeps reading the published snapshot
+        untouched for the whole round."""
+        ...
+
+    def round_progress(self, now: float) -> float:
+        """Fraction of the active round completed in [0, 1]; 1.0 when no
+        session is active."""
+        ...
+
+    def finish_round(self, now: float) -> TrainRoundStats:
+        """Close the completed session and return its measured stats
+        (Coordinator inputs: T_train, losses, noise scale p_t)."""
+        ...
+
+    def publish_adapter(self) -> int:
+        """Atomically swap the trained shadow into the published slot
+        (round boundaries only); returns the served adapter version."""
+        ...
+
+    def abort_round(self, now: float) -> None:
+        """§8.2 suspension: discard the session + shadow state; the
+        served adapter stays at the last published version."""
         ...
 
     # ---- quality -----------------------------------------------------------

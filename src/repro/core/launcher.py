@@ -3,14 +3,24 @@
 Watches IDLE replicas; when ≥ ``min_cohort`` IDLE replicas serve the same
 model it opens a FederatedSession (server = highest quality score),
 transitions members to COMBINED and creates an Inference-Training
-Coordinator for the session.  Rounds run asynchronously against the
-cluster clock: member training time is billed by the replica (the
-simulator advances its busy timeline; live replicas actually step), and
-aggregation fires when the slowest member finishes (stragglers are
-early-stopped by §4.3 or shed by the cohort-size check).
+Coordinator for the session.
+
+Rounds are NON-BLOCKING: ``_start_round`` begins an incremental train
+session on every member (``ReplicaHandle.begin_round`` — live replicas
+advance one fused combined_step per fabric tick, the simulator bills its
+analytic timeline) and ``_maybe_finish_round`` POLLS session progress on
+every launcher tick instead of calling ``train_round`` synchronously.
+Members complete asynchronously: each finished member's stats feed the
+Coordinator and its trained shadow is published locally
+(``publish_adapter`` — its own round boundary); aggregation fires when
+the SLOWEST member finishes and pushes the merged adapter to every
+member (stragglers are early-stopped by §4.3 or shed by the cohort-size
+check).
 
 Load surges suspend sessions (§8.2: "CoLLM temporarily halts fine-tuning
-to prioritize inference") via ``suspend_for_model``.
+to prioritize inference") via ``suspend_for_model``; suspended members
+discard their shadow state (``abort_round``) and keep serving the last
+PUBLISHED adapter.
 """
 from __future__ import annotations
 
@@ -22,7 +32,7 @@ from repro.core.coordinator import (
     CoordinatorConfig, InferenceTrainingCoordinator,
 )
 from repro.core.federated import FederatedSession, FLRoundResult
-from repro.core.interfaces import ReplicaHandle, TrainRoundStats
+from repro.core.interfaces import ReplicaHandle
 from repro.core.states import ClusterStateManager, ReplicaState
 
 
@@ -41,8 +51,10 @@ class LauncherConfig:
 class ActiveSession:
     session: FederatedSession
     coordinator: InferenceTrainingCoordinator
-    round_done_at: float
+    round_started_at: float
     pending: List[FLRoundResult] = dataclasses.field(default_factory=list)
+    # members whose incremental session has not completed this round
+    in_flight: List[str] = dataclasses.field(default_factory=list)
 
 
 class FineTuneTaskLauncher:
@@ -65,6 +77,10 @@ class FineTuneTaskLauncher:
         self.sessions: Dict[str, ActiveSession] = {}
         self.adapter_versions: Dict[str, int] = {}
         self.completed_rounds = 0
+        # aggregation log: model_id / round / version / avg member loss
+        # per completed round — quality-progression telemetry for the
+        # fabric summary and benchmarks
+        self.round_history: List[Dict[str, Any]] = []
         self._next_decision = 0.0
 
     # ------------------------------------------------------------ helpers --
@@ -104,7 +120,7 @@ class FineTuneTaskLauncher:
             coord = InferenceTrainingCoordinator(
                 f"fl-{next(self._ids)}", idle, self.cfg.slo,
                 self.cfg.coordinator)
-            active = ActiveSession(session, coord, round_done_at=now)
+            active = ActiveSession(session, coord, round_started_at=now)
             self.sessions[coord.session_id] = active
             for rid in idle:
                 self.states.transition(rid, ReplicaState.COMBINED, now)
@@ -116,23 +132,53 @@ class FineTuneTaskLauncher:
 
     # --------------------------------------------------------------- rounds -
     def _start_round(self, active: ActiveSession, now: float) -> None:
+        """Begin an incremental session on every member — no member
+        blocks the caller; the fabric/simulator advances them and
+        ``_maybe_finish_round`` polls."""
         sess, coord = active.session, active.coordinator
         version = self.adapter_versions.get(sess.model_id, 0)
         active.pending = []
-        done = now
-        for rid in list(sess.members):
+        active.in_flight = list(sess.members)
+        active.round_started_at = now
+        for rid in active.in_flight:
             handle = self.replicas[rid]
             handle.set_adapter(sess.global_adapter, version)
             plan = coord.plan_for(rid)
-            stats = handle.train_round(plan.train_batch, plan.infer_batch,
-                                       coord.steps_per_round, now)
+            handle.begin_round(plan.train_batch, plan.infer_batch,
+                               coord.steps_per_round, now)
+
+    def _maybe_finish_round(self, active: ActiveSession,
+                            now: float) -> None:
+        """Poll member sessions: collect stats and publish each member's
+        trained shadow AS IT COMPLETES (rounds stay asynchronous across
+        replicas); aggregate once the slowest member is done."""
+        sess, coord = active.session, active.coordinator
+        for rid in list(active.in_flight):
+            if rid not in sess.members or rid not in self.replicas:
+                # shed mid-round (failure / overload release): its
+                # result never lands; the cohort aggregates without it
+                active.in_flight.remove(rid)
+                continue
+            handle = self.replicas[rid]
+            if handle.round_progress(now) < 1.0:
+                continue
+            stats = handle.finish_round(now)
             coord.observe_train(stats)
+            # member round boundary: serve the local update until the
+            # merged global arrives (continuous adaptation, §3)
+            handle.publish_adapter()
+            active.in_flight.remove(rid)
             active.pending.append(FLRoundResult(
                 replica_id=rid, adapter=handle.get_adapter(),
                 local_loss=stats.loss_after, samples=stats.samples,
                 train_time=stats.steps * stats.avg_step_time))
-            done = max(done, now + stats.steps * stats.avg_step_time)
-        active.round_done_at = done
+        if active.in_flight:
+            return
+        if not active.pending:
+            # every member left mid-round — nothing to aggregate
+            self._dissolve(active, now)
+            return
+        self._finish_round(active, now)
 
     def _finish_round(self, active: ActiveSession, now: float) -> None:
         sess, coord = active.session, active.coordinator
@@ -144,7 +190,17 @@ class FineTuneTaskLauncher:
         # model sharing: COMBINED members serve with the fresh adapter
         # immediately (the paper's continuous-adaptation mechanism)
         for rid in list(sess.members):
-            self.replicas[rid].set_adapter(new_global, version)
+            if rid in self.replicas:
+                self.replicas[rid].set_adapter(new_global, version)
+        # reuse the session's own row so the round label matches
+        # FederatedSession.history (aggregate() has already advanced
+        # sess.round past the round it just closed)
+        self.round_history.append({
+            "model_id": sess.model_id,
+            "round": sess.history[-1]["round"],
+            "version": version,
+            "avg_loss": sess.history[-1]["avg_loss"],
+            "members": len(active.pending), "finished_at": now})
         stopped = sess.early_stops(active.pending)
         for rid in stopped:
             coord.drop_replica(rid)
@@ -157,8 +213,16 @@ class FineTuneTaskLauncher:
         self._start_round(active, now)
 
     def _dissolve(self, active: ActiveSession, now: float) -> None:
+        """End a session (early-stop cascade, cohort collapse, or §8.2
+        suspension).  Members still mid-round discard their shadow state
+        — serving stays on the last published adapter."""
         for rid in list(active.session.members):
+            handle = self.replicas.get(rid)
+            if handle is not None and rid in active.in_flight \
+                    and hasattr(handle, "abort_round"):
+                handle.abort_round(now)
             self.states.transition(rid, ReplicaState.SERVING, now)
+        active.in_flight = []
         self.sessions.pop(active.coordinator.session_id, None)
 
     def suspend_for_model(self, model_id: str, now: float) -> int:
@@ -175,8 +239,8 @@ class FineTuneTaskLauncher:
     def on_tick(self, now: float) -> None:
         for sid in list(self.sessions):
             active = self.sessions.get(sid)
-            if active and now >= active.round_done_at and active.pending:
-                self._finish_round(active, now)
+            if active is not None:
+                self._maybe_finish_round(active, now)
         if now >= self._next_decision:
             self.maybe_launch(now)
             self._next_decision = now + self.cfg.decision_interval

@@ -12,6 +12,17 @@ replicas with placement-aware admission (pool headroom + prefix-cache
 affinity) and per-replica admission queues; the summary aggregates
 per-replica and cluster-total ``ServeStats``.
 
+``--combined --replicas N`` is the paper's headline co-execution live:
+the launcher cohorts the replicas into an FL PEFT session over the
+SAME fabric — each replica advances an incremental train session one
+fused ``combined_step`` per fabric tick (training its SHADOW adapter
+while decode reads the published snapshot), the coordinator replans
+per-replica train/infer splits between rounds, and aggregation
+publishes the merged adapter to every member at round boundaries only.
+``--rounds`` sets how many FL rounds to drive, ``--steps-per-round``
+their length; within a round, greedy serving output is bit-identical
+to serve-only.
+
 Sampling: ``--temperature`` (> 0 enables stochastic decoding; 0 =
 greedy, the default), filtered by ``--top-k`` / ``--top-p``, seeded
 per request from ``--seed`` so runs are reproducible.
@@ -25,6 +36,8 @@ Usage:
   ... --paged --prefix-cache   # share identical prompt prefixes
                      # copy-on-write over the paged pool
   ... --replicas 2   # dispatcher-routed pool of live replicas
+  ... --replicas 2 --combined --rounds 2   # FL fine-tuning co-executed
+                     # over the live fabric (shadow-adapter publishing)
   ... --temperature 0.8 --top-k 40 --top-p 0.95   # sampled decoding
 """
 from __future__ import annotations
@@ -160,6 +173,68 @@ def run_multi_replica_serving(
     return out
 
 
+def run_combined_fabric_serving(
+        arch: str, *, n_replicas: int = 2, smoke: bool = True,
+        n_requests: int = 16, prompt_len: int = 32, gen_tokens: int = 16,
+        batch_size: int = 4, seed: int = 0, paged: bool = False,
+        block_size: int = 16, n_blocks: int = 0,
+        prefix_cache: bool = False, train_batch: int = 4,
+        rounds: int = 2, steps_per_round: int = 4, train_pool: int = 8,
+        temperature: float = 0.0, top_k: int = 0, top_p: float = 1.0,
+        timeout: float = 300.0, verbose: bool = True) -> dict:
+    """Live co-execution: serve the trace through the multi-replica
+    fabric WHILE the launcher drives incremental FL train sessions over
+    the same replicas.  ``train_pool`` fixes the fine-tuning corpus to
+    that many batches cycled epoch-style (finite finetuning set; loss
+    falls visibly across rounds), 0 streams fresh batches.  Returns the
+    aggregate cluster summary plus the launcher's per-round
+    loss/version history."""
+    from repro.core.interfaces import Request
+    from repro.runtime.fabric import FabricConfig, build_fabric
+
+    fcfg = FabricConfig(
+        enable_finetuning=True, train_batch=train_batch,
+        bootstrap_steps=steps_per_round, steps_per_round=steps_per_round,
+        min_cohort=min(2, n_replicas))
+    fabric, cfg = build_fabric(
+        arch, n_replicas, smoke=smoke, n_slots=batch_size,
+        prompt_len=prompt_len, gen_tokens=gen_tokens, paged=paged,
+        block_size=block_size, n_blocks=n_blocks or None,
+        prefix_cache=prefix_cache, seed=seed, train_pool=train_pool,
+        cfg=fcfg)
+    data = SyntheticDataset("alpaca", vocab_size=cfg.vocab_size,
+                            seq_len=prompt_len, seed=seed)
+    prompts = data.sample_tokens(n_requests)[:, :prompt_len]
+    stream = cfg.name
+    requests = [Request(request_id=i, stream_id=stream, arrival=0.0,
+                        deadline=1e9, tokens=gen_tokens,
+                        prompt=prompts[i].astype(np.int32),
+                        temperature=temperature, top_k=top_k,
+                        top_p=top_p, seed=seed + i)
+                for i in range(n_requests)]
+    out = fabric.run(requests, min_rounds=rounds, timeout=timeout)
+    out["completed"] = sum(1 for r in requests
+                           if r.completed_at is not None)
+    if verbose:
+        c = out["cluster"]
+        print(f"combined fabric served {out['completed']}/{n_requests} "
+              f"requests on {c['n_replicas']} replicas while completing "
+              f"{out['fl_rounds']} FL rounds: {c['generated_tokens']} "
+              f"tokens, aggregate {c['throughput_sum_tok_s']:.1f} tok/s, "
+              f"{c['train_steps']} fused train steps")
+        for r in out["rounds"]:
+            print(f"  round {r['round']}: avg member loss "
+                  f"{r['avg_loss']:.4f} -> published v{r['version']} "
+                  f"({r['members']} members)")
+        for rid, row in out["replicas"].items():
+            tl = row["train_loss"]
+            print(f"  {rid}: v{row['adapter_version']}, "
+                  f"{row['finished']} finished, "
+                  f"{row['throughput_tok_s']:.1f} tok/s"
+                  + (f", train CE {tl:.4f}" if tl is not None else ""))
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, default="qwen1.5-0.5b")
@@ -178,6 +253,14 @@ def main() -> None:
     ap.add_argument("--prefix-cache", action="store_true",
                     help="share identical prompt prefixes copy-on-write "
                          "over the paged pool (requires --paged)")
+    ap.add_argument("--rounds", type=int, default=2,
+                    help="FL rounds to drive in --combined --replicas "
+                         "mode (best effort, bounded by the timeout)")
+    ap.add_argument("--steps-per-round", type=int, default=4,
+                    help="fused train steps per FL round in --combined "
+                         "--replicas mode")
+    ap.add_argument("--train-batch", type=int, default=4,
+                    help="co-running train batch (combined modes)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature (0 = greedy, the default)")
     ap.add_argument("--top-k", type=int, default=0,
@@ -191,8 +274,19 @@ def main() -> None:
                  "pool block aliasing)")
     if args.replicas > 1:
         if args.combined:
-            ap.error("--combined with --replicas > 1 is not wired yet: "
-                     "drive fine-tuning through the cluster launcher")
+            # the full co-execution path: launcher-driven incremental
+            # train sessions over the live fabric
+            run_combined_fabric_serving(
+                args.arch, n_replicas=args.replicas,
+                n_requests=args.requests, prompt_len=args.prompt_len,
+                gen_tokens=args.gen, batch_size=args.batch,
+                paged=args.paged, block_size=args.block_size,
+                n_blocks=args.n_blocks, prefix_cache=args.prefix_cache,
+                train_batch=args.train_batch, rounds=args.rounds,
+                steps_per_round=args.steps_per_round,
+                temperature=args.temperature, top_k=args.top_k,
+                top_p=args.top_p, seed=args.seed)
+            return
         run_multi_replica_serving(
             args.arch, n_replicas=args.replicas,
             n_requests=args.requests, prompt_len=args.prompt_len,
@@ -205,6 +299,7 @@ def main() -> None:
     run_serving(args.arch, n_requests=args.requests,
                 prompt_len=args.prompt_len, gen_tokens=args.gen,
                 batch_size=args.batch, combined=args.combined,
+                train_batch=args.train_batch,
                 paged=args.paged, block_size=args.block_size,
                 n_blocks=args.n_blocks, prefix_cache=args.prefix_cache,
                 temperature=args.temperature, top_k=args.top_k,

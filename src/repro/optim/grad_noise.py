@@ -51,3 +51,9 @@ class NoiseScaleEMA:
             self.value = self.decay * self.value \
                 + (1 - self.decay) * float(estimate)
         return self.value
+
+    @property
+    def initialized(self) -> bool:
+        """True once at least one measurement has landed — consumers
+        fall back to a prior until then."""
+        return self._initialized

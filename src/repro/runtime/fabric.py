@@ -13,7 +13,10 @@ The fabric owns the wall-clock control loop:
   pump        every live replica advances ONE runtime tick
               (``pump_once``: gated ingest → decode step → emit), so
               replicas interleave on a shared device instead of one
-              ``pump`` monopolizing it;
+              ``pump`` monopolizing it; a replica with an active train
+              session fuses ITS tick with one shadow-adapter
+              ``combined_step`` (incremental rounds — no blocking
+              ``train_round`` call ever stalls the pool);
   placement   the dispatcher fires subflows in *headroom* order (free
               pool blocks / free slots / queue depth via
               ``ReplicaHandle.pressure``) and routes requests whose
@@ -55,11 +58,26 @@ class FabricConfig:
     t_adjust: float = 0.5
     bootstrap_b_max: int = 8
     enable_finetuning: bool = False
+    # live COMBINED sessions (enable_finetuning=True): cohort + round
+    # pacing sized for wall-clock smoke fabrics — the simulator's
+    # 50-step / 5-second-decision defaults would starve a live loop
+    min_cohort: int = 2
+    decision_interval: float = 0.25
+    bootstrap_steps: int = 4
+    steps_per_round: int = 4
+    train_batch: int = 4            # B0 bootstrap train batch
+    max_rounds: int = 1000
 
 
 class ServingFabric:
     """Dispatcher-routed pool of live replicas with placement-aware
-    admission, micro-cycle rebalancing, and mid-flight failover."""
+    admission, micro-cycle rebalancing, and mid-flight failover.  With
+    ``enable_finetuning=True`` the fabric tick also drives the
+    Launcher/Coordinator two-timescale loop over the SAME replicas:
+    incremental COMBINED train sessions advance one fused step per
+    ``pump_once`` tick, and round aggregation publishes merged adapters
+    at round boundaries only (shadow-adapter double buffering keeps
+    in-round serving bit-identical to serve-only)."""
 
     def __init__(self, cfg: Optional[FabricConfig] = None):
         self.cfg = cfg or FabricConfig()
@@ -70,6 +88,16 @@ class ServingFabric:
         ccfg.dispatcher.t_fit = self.cfg.t_fit
         ccfg.dispatcher.t_adjust = self.cfg.t_adjust
         ccfg.dispatcher.bootstrap_b_max = self.cfg.bootstrap_b_max
+        if self.cfg.enable_finetuning:
+            ccfg.launcher.min_cohort = self.cfg.min_cohort
+            ccfg.launcher.decision_interval = self.cfg.decision_interval
+            ccfg.launcher.max_rounds = self.cfg.max_rounds
+            ccfg.launcher.coordinator.bootstrap_steps = \
+                self.cfg.bootstrap_steps
+            ccfg.launcher.coordinator.steps_per_round = \
+                self.cfg.steps_per_round
+            ccfg.launcher.coordinator.bootstrap_train_batch = \
+                self.cfg.train_batch
         self.cluster = ClusterController(ccfg)
         self.replicas: Dict[str, LiveReplica] = {}
         # failed/removed replicas' serving counters: their pre-kill work
@@ -84,8 +112,15 @@ class ServingFabric:
         self.cluster.on_batch_result(result, stream_id)
 
     def add_replica(self, rep: LiveReplica) -> None:
+        from repro.core.states import ReplicaState
         self.replicas[rep.replica_id] = rep
-        self.cluster.add_replica(rep)
+        # with fine-tuning on, fresh replicas join IDLE so the launcher
+        # can cohort them immediately (a new replica has served nothing
+        # — waiting for the Eq. 1 EWMAs to notice would be pure delay);
+        # unselected ones roll back to SERVING after T' decisions
+        self.cluster.add_replica(
+            rep, ReplicaState.IDLE if self.cfg.enable_finetuning
+            else ReplicaState.SERVING)
 
     def fail_replica(self, replica_id: str, now: float) -> LiveReplica:
         """Mid-flight failure: the controller drains the dead replica
@@ -100,15 +135,37 @@ class ServingFabric:
     def submit(self, req: Request) -> None:
         self.cluster.submit_request(req)
 
+    def tick(self, now: float) -> bool:
+        """ONE fabric tick: run the control plane (dispatcher macro/
+        micro cycles AND — with fine-tuning enabled — the launcher's
+        session polling / round aggregation), then advance every live
+        replica one runtime tick (``pump_once``: serving decode fused
+        with its session's train step).  Returns True while any replica
+        holds unfinished serving work."""
+        self.cluster.tick(now)
+        busy = False
+        for rep in list(self.replicas.values()):
+            busy = rep.pump_once(now) or busy
+        return busy
+
+    @property
+    def training(self) -> bool:
+        """True while any FL session is open on the fabric."""
+        return bool(self.cluster.launcher.sessions)
+
     def run(self, requests: Sequence[Request], *,
             timeout: float = 600.0,
-            failures: Sequence[Tuple[float, str]] = ()) -> Dict:
+            failures: Sequence[Tuple[float, str]] = (),
+            min_rounds: int = 0) -> Dict:
         """Drive the fabric until every request completes (or re-queues
         are impossible).  ``requests`` are submitted when the wall clock
         passes their ``arrival``; ``failures`` is a list of
-        ``(time, replica_id)`` kill events injected mid-run.  Returns
-        the aggregate serving summary (see ``aggregate_serve_stats``)
-        plus dispatcher/routing telemetry."""
+        ``(time, replica_id)`` kill events injected mid-run.  With
+        fine-tuning enabled, ``min_rounds`` keeps the loop ticking until
+        that many FL rounds have aggregated (bounded by ``timeout``).
+        Returns the aggregate serving summary (see
+        ``aggregate_serve_stats``) plus dispatcher/routing telemetry
+        and, when training ran, the launcher's round history."""
         todo = sorted(requests, key=lambda r: r.arrival)
         kills = sorted(failures)
         next_req = 0
@@ -122,12 +179,12 @@ class ServingFabric:
                 _, rid = kills.pop(0)
                 if rid in self.replicas:
                     self.fail_replica(rid, now)
-            self.cluster.tick(now)
-            busy = False
-            for rep in list(self.replicas.values()):
-                busy = rep.pump_once(now) or busy
+            busy = self.tick(now)
+            rounds_ok = self.cluster.launcher.completed_rounds \
+                >= min_rounds
             if next_req >= len(todo) and not kills and not busy \
-                    and all(r.completed_at is not None for r in todo):
+                    and all(r.completed_at is not None for r in todo) \
+                    and (rounds_ok or not self.training):
                 break
             if not self.replicas:
                 # every replica failed: requeued requests have nowhere
@@ -136,9 +193,10 @@ class ServingFabric:
                 break
             if now > timeout:
                 break
-            if not busy:
+            if not busy and not self.training:
                 # idle until the next arrival / subflow fire instead of
-                # hot-spinning the control loop
+                # hot-spinning the control loop (a live session keeps
+                # the loop hot: every tick is one fused train step)
                 time.sleep(0.002)
         out = self.summary()
         out["incomplete_requests"] = sum(
@@ -157,6 +215,10 @@ class ServingFabric:
                   "rebalanced": d.rebalanced,
                   "overload_promotions": d.overload_promotions}
             for sid, d in self.cluster.dispatchers.items()}
+        launcher = self.cluster.launcher
+        out["fl_rounds"] = launcher.completed_rounds
+        out["rounds"] = [dict(r) for r in launcher.round_history]
+        out["adapter_versions"] = dict(launcher.adapter_versions)
         return out
 
 
@@ -165,11 +227,17 @@ def build_fabric(arch: str, n_replicas: int, *, smoke: bool = True,
                  gen_tokens: int = 16, paged: bool = False,
                  block_size: int = 16, n_blocks: Optional[int] = None,
                  prefix_cache: bool = False, seed: int = 0,
+                 train_pool: int = 0,
                  cfg: Optional[FabricConfig] = None,
                  ) -> Tuple[ServingFabric, Any]:
     """Build a fabric of ``n_replicas`` live replicas over ONE shared
     set of frozen base params (each replica owns its adapter, optimizer
-    state, and cache pool).  Returns ``(fabric, model_cfg)``."""
+    state, and cache pool).  Returns ``(fabric, model_cfg)``.
+
+    ``train_pool > 0`` fixes the fine-tuning corpus to that many
+    batches cycled epoch-style (a finite finetuning set, the realistic
+    FL PEFT workload — and a train-loss signal strong enough to gate
+    on); 0 streams fresh synthetic batches every step."""
     import jax
 
     from repro.configs.registry import get_config
@@ -185,10 +253,23 @@ def build_fabric(arch: str, n_replicas: int, *, smoke: bool = True,
     params = model.init(jax.random.key(seed))
     data = SyntheticDataset("alpaca", vocab_size=mcfg.vocab_size,
                             seq_len=max(prompt_len, 16), seed=seed)
+    pools: Dict[int, List[Dict[str, Any]]] = {}
+    cursors: Dict[int, int] = {}
 
     def data_fn(b: int) -> Dict[str, Any]:
         import jax.numpy as jnp
-        return {k: jnp.asarray(v) for k, v in data.batch(b).items()}
+
+        def fresh():
+            return {k: jnp.asarray(v) for k, v in data.batch(b).items()}
+
+        if train_pool <= 0:
+            return fresh()
+        if b not in pools:
+            pools[b] = [fresh() for _ in range(train_pool)]
+            cursors[b] = 0
+        i = cursors[b]
+        cursors[b] = i + 1
+        return pools[b][i % train_pool]
 
     fabric = ServingFabric(cfg)
     for i in range(n_replicas):

@@ -106,20 +106,36 @@ def aggregate_serve_stats(per_replica: Dict[str, "object"]) -> Dict:
     cluster: Dict[str, float] = {f: 0 for f in _SERVE_COUNTERS}
     rates: List[float] = []
     walls: List[float] = []
+    versions: List[int] = []
+    train_losses: List[float] = []
     for rid in sorted(per_replica):
         s = per_replica[rid]
         row = {f: getattr(s, f) for f in _SERVE_COUNTERS}
         row["wall_time"] = float(s.wall_time)
         row["throughput_tok_s"] = float(s.throughput())
+        # quality progression: which adapter the replica serves and the
+        # latest train CE its fused steps saw (None until it trained)
+        row["adapter_version"] = int(getattr(s, "adapter_version", 0))
+        tl = float(getattr(s, "train_loss", float("nan")))
+        row["train_loss"] = tl if tl == tl else None
         replicas[rid] = row
         for f in _SERVE_COUNTERS:
             cluster[f] += row[f]
         rates.append(row["throughput_tok_s"])
         walls.append(row["wall_time"])
+        versions.append(row["adapter_version"])
+        if row["train_loss"] is not None:
+            train_losses.append(row["train_loss"])
     cluster["n_replicas"] = len(replicas)
     cluster["wall_time_busy"] = float(sum(walls))
     cluster["wall_time_max"] = float(max(walls, default=0.0))
     cluster["throughput_sum_tok_s"] = float(sum(rates))
     cluster["throughput_wall_tok_s"] = \
         cluster["generated_tokens"] / max(cluster["wall_time_busy"], 1e-9)
+    # adapter spread: min == max once every member serves the merged
+    # global; a lagging min flags a replica stuck on an old version
+    cluster["adapter_version_min"] = int(min(versions, default=0))
+    cluster["adapter_version_max"] = int(max(versions, default=0))
+    cluster["train_loss"] = float(np.mean(train_losses)) \
+        if train_losses else None
     return {"replicas": replicas, "cluster": cluster}

@@ -19,6 +19,7 @@ import numpy as np
 from repro.core.interfaces import (
     BatchResult, ReplicaHandle, ReplicaPressure, Request, TrainRoundStats,
 )
+from repro.optim.grad_noise import NoiseScaleEMA, noise_scale_from_microbatches
 
 
 # =========================================================================
@@ -121,6 +122,10 @@ class SimReplica:
         self.training_until: float = 0.0
         self.adapter: Any = {"version": 0}
         self.adapter_version: int = 0
+        # active incremental round:
+        # ((train_batch, infer_batch, steps, step_time), started, done)
+        self._round: Optional[Tuple[Tuple[int, int, int, float],
+                                    float, float]] = None
         # busy-interval bookkeeping for utilization()
         self.busy_intervals: Deque[Tuple[float, float]] = collections.deque(
             maxlen=4096)
@@ -252,6 +257,63 @@ class SimReplica:
             avg_step_time=step_time, loss_before=before, loss_after=after,
             noise_scale=self.loss_curve.noise_scale(), samples=samples)
 
+    # ------------------------------------------- incremental sessions ------
+    def begin_round(self, train_batch: int, infer_batch: int, steps: int,
+                    now: float) -> None:
+        """Non-blocking round: the training WINDOW is billed up front
+        (the interference surface sees the co-running batch for its
+        duration), but the round's EFFECTS — loss-curve advance, train
+        time — land only at ``finish_round``, so an aborted round
+        leaves quality at the last published state exactly like the
+        live path's discarded shadow."""
+        if self._round is not None:
+            raise RuntimeError(
+                f"{self.replica_id}: train round already active")
+        step_time = self.surface.t_train(train_batch, infer_batch,
+                                         self.rng) * self.slow_factor
+        self.train_batch = train_batch
+        self.training_until = max(self.training_until,
+                                  now + steps * step_time)
+        self._round = ((train_batch, infer_batch, steps, step_time),
+                       now, now + steps * step_time)
+
+    def round_progress(self, now: float) -> float:
+        if self._round is None:
+            return 1.0
+        _, t0, t1 = self._round
+        if t1 <= t0:
+            return 1.0
+        return float(min(max((now - t0) / (t1 - t0), 0.0), 1.0))
+
+    def finish_round(self, now: float) -> TrainRoundStats:
+        if self._round is None:
+            raise RuntimeError(f"{self.replica_id}: no active round")
+        (train_batch, infer_batch, steps, step_time), _, _ = self._round
+        self._round = None
+        self.train_batch = 0
+        samples = train_batch * steps
+        before, after = self.loss_curve.advance(samples, train_batch)
+        self.total_train_time += steps * step_time
+        return TrainRoundStats(
+            replica_id=self.replica_id, steps=steps,
+            train_batch=train_batch, infer_batch=infer_batch,
+            avg_step_time=step_time, loss_before=before,
+            loss_after=after,
+            noise_scale=self.loss_curve.noise_scale(), samples=samples)
+
+    def publish_adapter(self) -> int:
+        # the analytic replica has no shadow tree — ``finish_round``
+        # already advanced the loss curve the adapter stands for
+        return self.adapter_version
+
+    def abort_round(self, now: float) -> None:
+        """§8.2 suspension: drop the pending round WITHOUT its effects
+        (no loss advance, no train-time billing) and stop the
+        co-running interference at ``now``."""
+        self._round = None
+        self.train_batch = 0
+        self.training_until = min(self.training_until, now)
+
     def quality_score(self, now: float) -> float:
         """§8.1: response quality = 1 / CE-loss of the current model."""
         return 1.0 / max(self.loss_curve.loss(), 1e-6)
@@ -269,6 +331,37 @@ class SimReplica:
 # =========================================================================
 # Live replica (real JAX execution)
 # =========================================================================
+@dataclasses.dataclass
+class TrainSession:
+    """One incremental COMBINED train round, advanced ONE fused
+    ``combined_step`` tick at a time inside ``pump_once`` — the fabric
+    loop interleaves it with every other replica's serving instead of a
+    blocking whole-round call monopolizing the device.
+
+    The optimizer donates into the replica's SHADOW adapter for the
+    whole session; prefill/decode keep reading the published snapshot,
+    so greedy serving output is bit-identical to serve-only until
+    ``publish_adapter`` swaps the trees at the round boundary."""
+    train_batch: int
+    infer_batch: int
+    steps: int
+    started_at: float               # caller's clock
+    grad_accum: int = 1             # microbatch split for the p_t probe
+    steps_done: int = 0
+    busy_time: float = 0.0          # wall seconds inside session ticks
+    losses: List[float] = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return self.steps_done >= self.steps
+
+    @property
+    def progress(self) -> float:
+        if self.steps <= 0:
+            return 1.0      # a zero-step round is born complete
+        return min(self.steps_done / self.steps, 1.0)
+
+
 class LiveReplica:
     """Runs actual JAX serving + training (reduced models) and measures
     wall-clock — the end-to-end integration path.
@@ -312,6 +405,15 @@ class LiveReplica:
         self._gen_counter = 0
         self._busy_frac = 0.0
         self._last_loss = float("nan")
+        # incremental COMBINED round state
+        self._session: Optional[TrainSession] = None
+        self._noise_ema = NoiseScaleEMA()
+        # per-tick busy-time accounting: (wall stamp at tick end, tick
+        # seconds) over a trailing window — the replica's REAL busy
+        # fraction, train and serve ticks alike
+        self._busy_log: Deque[Tuple[float, float]] = collections.deque(
+            maxlen=1024)
+        self._busy_window = 2.0
         self.batcher = ContinuousBatcher(
             engine, params, lora, n_slots=serve_slots,
             max_seq=serve_prompt_len + max_gen_tokens,
@@ -429,18 +531,38 @@ class LiveReplica:
         """ONE runtime tick: ingest admissible groups, advance every
         active slot one token, emit finished groups.  The multi-replica
         fabric round-robins this so replicas interleave instead of one
-        ``pump`` monopolizing the device.  Returns True while the
-        replica still holds unfinished work."""
+        ``pump`` monopolizing the device.  With a train session active,
+        the same tick runs the fused ``combined_step``: the shadow
+        adapter takes one optimizer step while the decode wave reads the
+        published snapshot — and a tick with no serving work still
+        advances the session through a plain shadow train step.  Returns
+        True while the replica holds unfinished SERVING work (training
+        progress is the Launcher's to poll, not a reason to spin the
+        trace loop)."""
         self._ingest(now)
-        if not self.batcher.idle():
+        sess = self._session
+        train_due = sess is not None and not sess.done
+        serving = not self.batcher.idle()
+        if serving or train_due:
+            tb = self.data_fn(sess.train_batch) if train_due else None
             t0 = _time.perf_counter()
-            self.batcher.step(now=now)
-            # per-replica busy time: this replica's share of the device
-            # (per-replica throughput = its tokens / its stepping time)
-            self.batcher.stats.wall_time += _time.perf_counter() - t0
-            self._emit_finished(now)
-        self._busy_frac = len(self.batcher.active_slots()) \
-            / self.batcher.n_slots
+            self.batcher.step(train_batch=tb, now=now)
+            dt = _time.perf_counter() - t0
+            if serving:
+                # per-replica busy time: this replica's share of the
+                # device (per-replica throughput = its tokens / its
+                # stepping time); train-only ticks generate no tokens
+                # and must not dilute serving throughput
+                self.batcher.stats.wall_time += dt
+                self._emit_finished(now)
+            self._account_busy(dt)
+            if train_due:
+                sess.steps_done += 1
+                sess.busy_time += dt
+                m = self.batcher.last_train_metrics
+                sess.losses.append(m["ce_loss"])
+                self._observe_noise(m, sess)
+        self._busy_frac = self._measured_busy_frac()
         return bool(self._queue or self._inflight
                     or not self.batcher.idle())
 
@@ -458,6 +580,26 @@ class LiveReplica:
 
     def utilization(self, now: float) -> float:
         return self._busy_frac
+
+    # --------------------------------------------- busy-time accounting ----
+    def _account_busy(self, dt: float) -> None:
+        self._busy_log.append((_time.perf_counter(), dt))
+
+    def _measured_busy_frac(self) -> float:
+        """Busy fraction over the trailing window of per-tick busy-time
+        accounting: wall seconds spent stepping (serve + train ticks)
+        divided by the window actually covered.  Decays to 0 once the
+        replica stops ticking — the SERVING→IDLE signal the state
+        manager's Eq. 1 consumes."""
+        if not self._busy_log:
+            return 0.0
+        t_now = _time.perf_counter()
+        lo = t_now - self._busy_window
+        first_end, first_dt = self._busy_log[0]
+        span = max(min(self._busy_window,
+                       t_now - (first_end - first_dt)), 1e-6)
+        busy = sum(d for t, d in self._busy_log if t >= lo)
+        return float(min(busy / span, 1.0))
 
     # ------------------------------------------------- placement signals ---
     def pressure(self, now: float) -> ReplicaPressure:
@@ -557,45 +699,128 @@ class LiveReplica:
 
     # ------------------------------------------------------------ training -
     def set_adapter(self, adapter: Any, version: int) -> None:
+        """Publish ``adapter`` as the served snapshot (round boundaries /
+        deployment).  A new global landing mid-session ABORTS the
+        session outright — shadow and progress discarded — rather than
+        silently retargeting the remaining ticks at the served tree
+        (which would break the within-round snapshot isolation)."""
+        if self._session is not None:
+            self.abort_round(0.0)
         self.lora = adapter
         self.adapter_version = version
+        self.batcher.train_lora = None
+        self.batcher.stats.adapter_version = version
 
     def get_adapter(self) -> Any:
         return self.lora
 
+    # ------------------------------------------- incremental sessions ------
+    def begin_round(self, train_batch: int, infer_batch: int, steps: int,
+                    now: float) -> None:
+        """Open an incremental train session: stage the shadow tree (a
+        reference to the published snapshot — JAX arrays are immutable,
+        so the first optimizer step forks it) and let ``pump_once``
+        advance one fused step per fabric tick."""
+        if self._session is not None:
+            raise RuntimeError(
+                f"{self.replica_id}: train session already active")
+        # microbatch split for the gradient-noise probe (Eq. 8's p_t):
+        # an even batch trains as 2 microbatches inside the same fused
+        # step; odd/unit batches keep the EMA from previous rounds
+        accum = 2 if train_batch >= 2 and train_batch % 2 == 0 else 1
+        self.batcher.train_lora = self.lora
+        self.batcher.train_grad_accum = accum
+        self.train_batch = train_batch
+        self._session = TrainSession(
+            train_batch=train_batch, infer_batch=infer_batch,
+            steps=steps, started_at=now, grad_accum=accum)
+
+    def round_progress(self, now: float) -> float:
+        return 1.0 if self._session is None else self._session.progress
+
+    def finish_round(self, now: float) -> TrainRoundStats:
+        """Close the session and report MEASURED round stats: wall time
+        per fused step and the gradient-noise scale estimated from the
+        session's microbatch gradients (EMA across ticks/rounds) — not
+        a hardcoded prior."""
+        sess = self._session
+        if sess is None:
+            raise RuntimeError(f"{self.replica_id}: no active round")
+        self._session = None
+        self.batcher.train_grad_accum = 1
+        # no training co-runs past this point: results emitted before
+        # the next begin_round must not carry a stale interference
+        # label (the dispatcher's Eq. 14 fit skips train_batch > 0 rows)
+        self.train_batch = 0
+        self._busy_frac = self._measured_busy_frac()
+        dt = sess.busy_time / max(sess.steps_done, 1)
+        noise = self._noise_ema.value if self._noise_ema.initialized \
+            else 8.0    # prior until the first even-batch round measures
+        return TrainRoundStats(
+            replica_id=self.replica_id, steps=sess.steps_done,
+            train_batch=sess.train_batch, infer_batch=sess.infer_batch,
+            avg_step_time=dt,
+            loss_before=sess.losses[0] if sess.losses else float("nan"),
+            loss_after=sess.losses[-1] if sess.losses else float("nan"),
+            noise_scale=noise,
+            samples=sess.train_batch * sess.steps_done)
+
+    def publish_adapter(self) -> int:
+        """Round boundary: atomically swap the trained shadow into the
+        published slot.  Host-side pointer swap — in-flight decodes read
+        whichever tree the next tick's program is handed, never a
+        half-updated one."""
+        shadow = self.batcher.train_lora
+        if shadow is not None:
+            self.lora = shadow          # resets the cached CE probe
+            self.batcher.train_lora = None
+            if self.batcher.train_losses:
+                # the shadow's final train CE is the published model's
+                # best available quality estimate (refreshed lazily by
+                # the eval probe on the next cold quality_score)
+                self._last_loss = self.batcher.train_losses[-1]
+            self.adapter_version += 1
+            self.batcher.stats.adapter_version = self.adapter_version
+        return self.adapter_version
+
+    def abort_round(self, now: float) -> None:
+        """§8.2 load-surge suspension: drop the session and the shadow
+        tree outright — the served adapter stays at the last PUBLISHED
+        version, so suspending fine-tuning never perturbs serving."""
+        self._session = None
+        self.batcher.train_lora = None
+        self.batcher.train_grad_accum = 1
+        self.train_batch = 0
+
+    def _observe_noise(self, metrics: Dict[str, float],
+                       sess: TrainSession) -> None:
+        """Per-tick gradient-noise-scale measurement (McCandlish
+        small/big estimator over the fused step's microbatches)."""
+        if sess.grad_accum <= 1:
+            return
+        est = float(noise_scale_from_microbatches(
+            metrics["micro_grad_sqnorm"], metrics["grad_sqnorm"],
+            micro_batch=sess.train_batch // sess.grad_accum,
+            n_micro=sess.grad_accum))
+        if math.isfinite(est):
+            # the small/big estimator is ill-conditioned when the signal
+            # term ~vanishes (near-random gradients on tiny smoke
+            # models): one such tick would dominate the EMA forever, so
+            # clip to a band that still spans every plausible B* regime
+            self._noise_ema.update(min(max(est, 0.0), 1e4))
+
     def train_round(self, train_batch: int, infer_batch: int, steps: int,
                     now: float) -> TrainRoundStats:
-        """One local round through the batcher: each tick is the fused
-        combined_step while serving work is in flight, a plain LoRA step
-        otherwise."""
-        self.train_batch = train_batch
-        self._ingest(now)
-        t0 = _time.perf_counter()
-        n_before = len(self.batcher.train_losses)
-        for _ in range(steps):
-            self.batcher.step(train_batch=self.data_fn(train_batch),
-                              now=now)
-            # emit groups the moment they complete so their latency
-            # reflects serving time, not the rest of the round; keep
-            # feeding the batcher from the admission queue as slots free
-            self._emit_finished(now)
-            self._ingest(now)
-        elapsed = _time.perf_counter() - t0
-        # the fused round generates serving tokens too — accrue its busy
-        # time so throughput (= tokens / wall_time) stays honest for
-        # COMBINED replicas driven outside pump_once
-        self.batcher.stats.wall_time += elapsed
-        dt = elapsed / max(steps, 1)
-        self._busy_frac = 0.9
-        losses = self.batcher.train_losses[n_before:]
-        before = losses[0] if losses else float("nan")
-        after = losses[-1] if losses else float("nan")
-        self._last_loss = after
-        return TrainRoundStats(
-            replica_id=self.replica_id, steps=steps,
-            train_batch=train_batch, infer_batch=infer_batch,
-            avg_step_time=dt, loss_before=before, loss_after=after,
-            noise_scale=8.0, samples=train_batch * steps)
+        """Blocking convenience over the session surface: begin a round,
+        drive it to completion through ``pump_once`` ticks (serving
+        interleaves exactly as it would under the fabric loop), then
+        finish and publish the trained shadow."""
+        self.begin_round(train_batch, infer_batch, steps, now)
+        while self._session is not None and not self._session.done:
+            self.pump_once(now)
+        stats = self.finish_round(now)
+        self.publish_adapter()
+        return stats
 
     def quality_score(self, now: float) -> float:
         if self.eval_fn is not None:

@@ -50,7 +50,10 @@ The runtime tick is unchanged by the layout:
               ``engine.combined_step`` / ``combined_step_paged`` — LoRA
               finetuning + the decode tick in ONE program over shared
               base weights (the paper's model-sharing semantics, per
-              token instead of per batch).
+              token instead of per batch).  With a shadow staged
+              (``train_lora``), the optimizer trains IT while decode
+              reads the published ``lora`` snapshot — see the
+              ContinuousBatcher docstring.
 
 ``static_batch_serve`` is the lock-step baseline (prefill a batch,
 decode until every request in the batch finishes, dead slots riding
@@ -102,12 +105,14 @@ def _engine_jits(engine) -> Dict[str, Callable]:
                                 donate_argnums=(0,)),
         "prefill_suffix": jax.jit(model.prefill_ragged_suffix),
         "copy_blocks": jax.jit(model.copy_blocks, donate_argnums=(0,)),
-        "combined": jax.jit(engine.combined_step, donate_argnums=(2, 4),
-                            static_argnames=("attn_backend",)),
+        "combined": jax.jit(
+            engine.combined_step, donate_argnums=(2, 4),
+            static_argnames=("attn_backend", "grad_accum")),
         "combined_paged": jax.jit(
             engine.combined_step_paged, donate_argnums=(2, 4),
-            static_argnames=("ring_len", "attn_backend")),
-        "train": jax.jit(engine.train_step, donate_argnums=(2,)),
+            static_argnames=("ring_len", "attn_backend", "grad_accum")),
+        "train": jax.jit(engine.train_step, donate_argnums=(2,),
+                         static_argnames=("grad_accum",)),
         "loss": jax.jit(
             lambda p, l, b: engine.model.forward_loss(p, l, b)[0]),
     }
@@ -190,6 +195,12 @@ class ServeStats:
     decode_steps: int = 0
     train_steps: int = 0
     wall_time: float = 0.0
+    # quality progression telemetry: the adapter version this replica
+    # currently serves (bumped by set_adapter/publish_adapter) and the
+    # latest train CE loss seen by its fused/plain train steps — NaN
+    # until the replica has trained at all
+    adapter_version: int = 0
+    train_loss: float = float("nan")
 
     def throughput(self) -> float:
         return self.generated_tokens / max(self.wall_time, 1e-9)
@@ -202,6 +213,17 @@ class ContinuousBatcher:
     donate/update them in place; ``LiveReplica`` delegates its adapter
     accessors here.  With ``paged=True`` it also owns the block
     allocator and per-slot block tables (see module docstring).
+
+    Shadow-adapter double buffering: ``self.lora`` is the PUBLISHED
+    snapshot — every prefill/decode reads it.  When ``self.train_lora``
+    is set (a train session's shadow tree), the fused combined step
+    trains THAT tree while decoding with the snapshot, so a whole round
+    of optimizer updates never perturbs in-flight generation; greedy
+    outputs stay bit-identical to serve-only until the owner swaps the
+    shadow in (``LiveReplica.publish_adapter``) at a round boundary.
+    With ``train_lora`` unset, training updates ``self.lora`` in place
+    (the single-replica ``--combined`` behaviour, continuous
+    adaptation per tick).
     """
 
     def __init__(self, engine, params, lora, *, n_slots: int = 8,
@@ -313,6 +335,14 @@ class ContinuousBatcher:
         self.slot_tok = np.zeros(n_slots, np.int32)   # next token to feed
         self.stats = ServeStats()
         self.train_losses: List[float] = []
+        # shadow adapter for double-buffered train sessions (None = train
+        # self.lora in place) + the microbatch split the session wants
+        self.train_lora: Optional[Any] = None
+        self.train_grad_accum: int = 1
+        # host copies of the latest train step's scalar metrics (ce_loss,
+        # micro_grad_sqnorm, grad_sqnorm) — the noise-scale estimator's
+        # inputs
+        self.last_train_metrics: Dict[str, float] = {}
 
         jits = _engine_jits(engine)
         self._jit_decode = jits["decode"]
@@ -642,20 +672,23 @@ class ContinuousBatcher:
             tables = self._dev_tables
         if train_batch is not None:
             if self.paged:
-                (self.lora, self.opt_state, logits, self.caches,
+                (new_tl, self.opt_state, logits, self.caches,
                  metrics) = self._jit_combined_paged(
-                    self.params, self.lora, self.opt_state, train_batch,
-                    self.caches, toks, pos, tables,
-                    ring_len=self.ring_len,
-                    attn_backend=self.attn_backend)
+                    self.params, self._train_adapter(), self.opt_state,
+                    train_batch, self.caches, toks, pos, tables,
+                    ring_len=self.ring_len, serve_lora=self.lora,
+                    attn_backend=self.attn_backend,
+                    grad_accum=self.train_grad_accum)
             else:
-                (self.lora, self.opt_state, logits, self.caches,
+                (new_tl, self.opt_state, logits, self.caches,
                  metrics) = self._jit_combined(
-                    self.params, self.lora, self.opt_state, train_batch,
-                    self.caches, toks, pos,
-                    attn_backend=self.attn_backend)
-            self.train_losses.append(float(metrics["ce_loss"]))
-            self.stats.train_steps += 1
+                    self.params, self._train_adapter(), self.opt_state,
+                    train_batch, self.caches, toks, pos,
+                    serve_lora=self.lora,
+                    attn_backend=self.attn_backend,
+                    grad_accum=self.train_grad_accum)
+            self._store_trained(new_tl)
+            self._record_train(metrics)
         elif self.paged:
             logits, self.caches = self._jit_decode_paged(
                 self.params, self.lora, self.caches, toks, pos, tables,
@@ -728,10 +761,38 @@ class ContinuousBatcher:
             r.rng = None
         return out
 
+    def _train_adapter(self) -> Any:
+        """The tree the optimizer steps: the staged shadow during a
+        train session, the published adapter otherwise (in-place
+        continuous adaptation); decode/prefill ALWAYS read
+        ``self.lora``."""
+        return self.train_lora if self.train_lora is not None \
+            else self.lora
+
+    def _store_trained(self, new_tl: Any) -> None:
+        if self.train_lora is not None:
+            self.train_lora = new_tl
+        else:
+            self.lora = new_tl
+
     def _plain_train(self, train_batch) -> None:
-        self.lora, self.opt_state, metrics = self._jit_train(
-            self.params, self.lora, self.opt_state, train_batch)
-        self.train_losses.append(float(metrics["ce_loss"]))
+        new_tl, self.opt_state, metrics = self._jit_train(
+            self.params, self._train_adapter(), self.opt_state,
+            train_batch, grad_accum=self.train_grad_accum)
+        self._store_trained(new_tl)
+        self._record_train(metrics)
+
+    def _record_train(self, metrics: Dict[str, Any]) -> None:
+        """One host sync per train tick: loss history + the scalar
+        gradient stats the noise-scale estimator consumes."""
+        self.last_train_metrics = {
+            "ce_loss": float(metrics["ce_loss"]),
+            "micro_grad_sqnorm": float(metrics["micro_grad_sqnorm"]),
+            "grad_sqnorm": float(metrics["grad_sqnorm"]),
+        }
+        loss = self.last_train_metrics["ce_loss"]
+        self.train_losses.append(loss)
+        self.stats.train_loss = loss
         self.stats.train_steps += 1
 
     # ------------------------------------------------------------------ run -
