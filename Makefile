@@ -17,6 +17,7 @@ bench-smoke:
 	PYTHONPATH=$(PYTHONPATH):. python benchmarks/continuous_batching.py --smoke
 	PYTHONPATH=$(PYTHONPATH):. python benchmarks/multi_replica.py --smoke
 	PYTHONPATH=$(PYTHONPATH):. python benchmarks/combined_fabric.py --smoke
+	PYTHONPATH=$(PYTHONPATH):. python benchmarks/multi_lora.py --smoke
 
 serve:
 	PYTHONPATH=$(PYTHONPATH) python -m repro.launch.serve --arch qwen1.5-0.5b

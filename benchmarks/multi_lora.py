@@ -1,0 +1,159 @@
+"""Batched segmented multi-LoRA decode vs unbatch-per-adapter serving.
+
+The multi-tenant trace (several tenants, each with fewer requests than
+the batcher has slots) is served two ways:
+
+  batched    ONE ContinuousBatcher + AdapterRegistry: tenants share
+             decode waves through the segmented LoRA paths, so slots
+             stay full across tenant boundaries;
+  unbatched  one single-adapter run PER tenant (the pre-registry
+             deployment: swap the adapter in, drain that tenant, swap
+             the next in) — every run pays its own under-full waves
+             and drain tail.
+
+Greedy tokens are asserted bit-identical between the two modes and the
+batched/unbatched tokens-per-second ratio is hard-gated > 1.0 (the
+whole point of batching tenants: same compute envelope, fewer decode
+waves).  Also reports the registry's residency hit rate.  Written to
+``BENCH_multi_lora.json`` so the perf trajectory is tracked per PR.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import timed
+from repro.configs.registry import get_config
+from repro.core.engine import make_engine
+from repro.data.synthetic import SyntheticDataset
+from repro.runtime.fabric import make_tenant_adapters
+from repro.runtime.serving_loop import (
+    AdapterRegistry, ContinuousBatcher, GenRequest,
+)
+
+QUICK = bool(int(os.environ.get("BENCH_QUICK", "0")))
+OUT_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "..", "BENCH_multi_lora.json")
+
+
+@timed("multi_lora_batched_vs_unbatched")
+def run() -> str:
+    import jax
+    n_tenants = 3 if QUICK else 4
+    per_tenant = 2 if QUICK else 3
+    reps = 2 if QUICK else 3
+    slots, prompt_len, gen = 4, 16, 12
+    max_seq = prompt_len + gen
+    cfg = get_config("qwen1.5-0.5b").scaled()
+    engine = make_engine(cfg, lr=1e-3)
+    model = engine.model
+    params = model.init(jax.random.key(0))
+    tenants = make_tenant_adapters(model, n_tenants, seed=1)
+    data = SyntheticDataset("alpaca", vocab_size=cfg.vocab_size,
+                            seq_len=prompt_len, seed=0)
+    prompts = data.sample_tokens(n_tenants * per_tenant)[:, :prompt_len]
+
+    def trace():
+        # round-robin tenant assignment: adjacent requests belong to
+        # different tenants, the shape adapter-unaware serving cannot
+        # batch
+        return [GenRequest(request_id=i, prompt=prompts[i],
+                           max_new_tokens=gen,
+                           adapter_id=f"tenant{i % n_tenants}")
+                for i in range(n_tenants * per_tenant)]
+
+    def run_batched():
+        reg = AdapterRegistry(model, capacity=n_tenants)
+        for t, tree in enumerate(tenants):
+            reg.register(f"tenant{t}", tree)
+        b = ContinuousBatcher(engine, params, tenants[0], n_slots=slots,
+                              max_seq=max_seq, prompt_pad=prompt_len,
+                              adapters=reg)
+        reqs = trace()
+        t0 = time.perf_counter()
+        stats = b.run(reqs)
+        dt = time.perf_counter() - t0
+        return reqs, stats, dt, reg
+
+    def run_unbatched():
+        # single-adapter runs take untagged requests: the tenant is
+        # implied by which tree is installed as the batcher's ``lora``
+        reqs = [GenRequest(request_id=r.request_id, prompt=r.prompt,
+                           max_new_tokens=r.max_new_tokens)
+                for r in trace()]
+        t0 = time.perf_counter()
+        steps = 0
+        for t in range(n_tenants):
+            b = ContinuousBatcher(engine, params, tenants[t],
+                                  n_slots=slots, max_seq=max_seq,
+                                  prompt_pad=prompt_len)
+            mine = [r for r in reqs if r.request_id % n_tenants == t]
+            steps += b.run(mine).decode_steps
+        dt = time.perf_counter() - t0
+        return reqs, steps, dt
+
+    run_batched()            # warm the jit caches (shared programs)
+    run_unbatched()
+    best = {}
+    tokens = {}
+    for rep in range(reps):
+        b_reqs, b_stats, b_dt, reg = run_batched()
+        u_reqs, u_steps, u_dt = run_unbatched()
+        n_tok = b_stats.generated_tokens
+        cur = {
+            "batched": {
+                "tokens_per_s": round(n_tok / b_dt, 1),
+                "decode_steps": b_stats.decode_steps,
+                "adapter_hits": reg.hits,
+                "adapter_loads": reg.loads,
+                "residency_hit_rate": round(
+                    reg.hits / max(reg.hits + reg.loads, 1), 3),
+            },
+            "unbatched": {
+                "tokens_per_s": round(n_tok / u_dt, 1),
+                "decode_steps": u_steps,
+            },
+        }
+        if not best or cur["batched"]["tokens_per_s"] \
+                > best["batched"]["tokens_per_s"]:
+            best = cur
+        key = lambda rs: [r.tokens for r in
+                          sorted(rs, key=lambda r: r.request_id)]
+        tokens["batched"], tokens["unbatched"] = key(b_reqs), key(u_reqs)
+    assert tokens["batched"] == tokens["unbatched"], \
+        "batched segmented decode diverged from per-adapter serving"
+    ratio = (best["batched"]["tokens_per_s"]
+             / max(best["unbatched"]["tokens_per_s"], 1e-9))
+    assert ratio > 1.0, \
+        f"tenant batching ratio {ratio:.2f}x <= 1.0 (no win over " \
+        "unbatch-per-adapter serving)"
+    assert best["batched"]["decode_steps"] \
+        < best["unbatched"]["decode_steps"], \
+        "tenant batching did not reduce decode waves"
+    out = {
+        "trace": {"n_tenants": n_tenants, "per_tenant": per_tenant,
+                  "slots": slots, "prompt_len": prompt_len, "gen": gen},
+        **best,
+        "tokens_per_s_ratio": round(ratio, 3),
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(out, f, indent=2)
+    return (f"batched={best['batched']['tokens_per_s']:.1f}tok_s "
+            f"unbatched={best['unbatched']['tokens_per_s']:.1f}tok_s "
+            f"ratio={ratio:.2f}x "
+            f"steps={best['batched']['decode_steps']}"
+            f"/{best['unbatched']['decode_steps']} "
+            f"hit_rate={best['batched']['residency_hit_rate']}")
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="short trace for CI (same as BENCH_QUICK=1)")
+    if ap.parse_args().smoke:
+        QUICK = True
+    run()

@@ -20,3 +20,4 @@ python benchmarks/prefix_cache.py --smoke
 python benchmarks/continuous_batching.py --smoke
 python benchmarks/multi_replica.py --smoke
 python benchmarks/combined_fabric.py --smoke
+python benchmarks/multi_lora.py --smoke

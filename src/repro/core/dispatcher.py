@@ -111,6 +111,7 @@ class SubflowDispatcher:
         self.dropped = 0
         self.overload_promotions = 0
         self.affinity_routed = 0       # requests placed by prefix affinity
+        self.adapter_routed = 0        # requests placed by adapter residency
         self.rebalanced = 0            # requests reclaimed + requeued
 
     # ---------------------------------------------------------- ingestion --
@@ -205,25 +206,44 @@ class SubflowDispatcher:
         return 1.0 / (1.0 + self.replicas[rid].queue_length(now))
 
     def _select_batch(self, rid: str, target: int, now: float,
-                      pred: float) -> List[Request]:
+                      pred: float,
+                      pressure: Optional[ReplicaPressure] = None
+                      ) -> List[Request]:
         """Pull up to ``target`` feasible requests from the stream queue
         for ``rid``.  Placement-aware: a request whose prompt matches
         the replica's registered prefix-cache chains jumps the scan
-        window (its prefill becomes a cache hit *on this replica*);
-        everything else stays FCFS.  Scanned requests that cannot meet
-        their deadline are shed (Eq. 13c)."""
+        window (its prefill becomes a cache hit *on this replica*), and
+        so does a request whose ``adapter_id`` is already DEVICE-
+        resident on the replica's AdapterRegistry (admission skips the
+        host->device adapter load); everything else stays FCFS.
+        Scanned requests that cannot meet their deadline are shed
+        (Eq. 13c)."""
         if not self.queue:
             return []
         handle = self.replicas[rid]
         q = list(self.queue)
         order: Sequence[int] = range(len(q))
-        hit_set: set = set()
-        if hasattr(handle, "prefix_affinity"):
+        prefix_hits: set = set()
+        adapter_hits: set = set()
+        resident = set(pressure.resident_adapters) \
+            if pressure is not None else set()
+        probe_prefix = hasattr(handle, "prefix_affinity")
+        if probe_prefix or resident:
             lookahead = min(len(q), max(4 * target, 16))
-            hits = [i for i in range(lookahead)
-                    if q[i].prompt is not None
-                    and handle.prefix_affinity(q[i].prompt) > 0]
-            if hits:
+            for i in range(lookahead):
+                if probe_prefix and q[i].prompt is not None \
+                        and handle.prefix_affinity(
+                            q[i].prompt,
+                            adapter_id=q[i].adapter_id) > 0:
+                    prefix_hits.add(i)
+                elif q[i].adapter_id is not None \
+                        and q[i].adapter_id in resident:
+                    adapter_hits.add(i)
+            if prefix_hits or adapter_hits:
+                # prefix hits outrank adapter hits: a cached prefix
+                # saves prefill compute, residency only a weight load
+                hits = sorted(prefix_hits) \
+                    + sorted(adapter_hits - prefix_hits)
                 hit_set = set(hits)
                 order = hits + [i for i in range(len(q))
                                 if i not in hit_set]
@@ -241,8 +261,10 @@ class SubflowDispatcher:
             r.dispatch_time = now
             batch.append(r)
             taken.add(i)
-            if i in hit_set:
+            if i in prefix_hits:
                 self.affinity_routed += 1
+            elif i in adapter_hits:
+                self.adapter_routed += 1
         if taken:
             self.queue = collections.deque(
                 q[i] for i in range(len(q)) if i not in taken)
@@ -294,7 +316,8 @@ class SubflowDispatcher:
             m = self.latency_models[rid]
             pred = m.predict(target) if m.fitted else 0.0
             had_demand = bool(self.queue)
-            batch = self._select_batch(rid, target, now, pred)
+            batch = self._select_batch(rid, target, now, pred,
+                                       pressure=p)
             if had_demand:
                 # Eq. 17's u_i measures the replica's unsaturation, not
                 # the stream's: an empty queue at fire time says nothing

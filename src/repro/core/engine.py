@@ -99,7 +99,8 @@ class Engine:
                       train_batch, caches, token, pos, *,
                       serve_lora: Any = None,
                       attn_backend: Optional[str] = None,
-                      grad_accum: int = 1
+                      grad_accum: int = 1,
+                      serve_adapter_idx: Any = None
                       ) -> Tuple[Any, AdamWState, jax.Array, Any,
                                  Dict[str, jax.Array]]:
         """One fused program: LoRA train step + decode batch, sharing the
@@ -112,10 +113,14 @@ class Engine:
         *shadow* tree) — shadow-adapter double buffering, so a whole
         round of training never perturbs in-flight generation.  Omitted,
         decode uses the training adapter (the pre-PR-5 behaviour).
+        ``serve_adapter_idx`` [B] int32 makes ``serve_lora`` a STACKED
+        multi-tenant tree (leaves [L, A, din, r]) with per-row slot
+        selection — the AdapterRegistry decode wave.
         """
         logits, new_caches = self.model.decode_step(
             params, lora if serve_lora is None else serve_lora,
-            caches, token, pos, attn_backend=attn_backend)
+            caches, token, pos, attn_backend=attn_backend,
+            adapter_idx=serve_adapter_idx)
         new_lora, new_opt, metrics = self.train_step(
             params, lora, opt_state, train_batch, grad_accum=grad_accum)
         return new_lora, new_opt, logits, new_caches, metrics
@@ -125,16 +130,19 @@ class Engine:
                             *, ring_len: int = 0,
                             serve_lora: Any = None,
                             attn_backend: Optional[str] = None,
-                            grad_accum: int = 1
+                            grad_accum: int = 1,
+                            serve_adapter_idx: Any = None
                             ) -> Tuple[Any, AdamWState, jax.Array, Any,
                                        Dict[str, jax.Array]]:
         """``combined_step`` over the paged KV pool: LoRA train step +
         block-table decode tick fused into one program (same pre-update
-        snapshot semantics and ``serve_lora`` shadow split)."""
+        snapshot semantics, ``serve_lora`` shadow split, and
+        ``serve_adapter_idx`` multi-tenant row selection)."""
         logits, new_caches = self.model.decode_step_paged(
             params, lora if serve_lora is None else serve_lora,
             caches, token, pos, block_tables,
-            ring_len=ring_len, attn_backend=attn_backend)
+            ring_len=ring_len, attn_backend=attn_backend,
+            adapter_idx=serve_adapter_idx)
         new_lora, new_opt, metrics = self.train_step(
             params, lora, opt_state, train_batch, grad_accum=grad_accum)
         return new_lora, new_opt, logits, new_caches, metrics

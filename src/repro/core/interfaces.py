@@ -28,6 +28,10 @@ class Request:
     # replicas draw from their data distribution when absent.  The
     # dispatcher also reads it for prefix-cache affinity routing.
     prompt: Optional[Any] = None
+    # multi-tenant serving: the registered adapter this request's tokens
+    # flow through (None = base model).  The dispatcher prefers replicas
+    # where the adapter is already device-resident (adapter affinity).
+    adapter_id: Optional[str] = None
     # sampling configuration, threaded through to the decode tick
     # (temperature <= 0 is exact greedy — the default)
     temperature: float = 0.0
@@ -100,6 +104,11 @@ class ReplicaPressure:
     # (None = unbounded; live replicas report their slot-wave headroom
     # so one fire never swallows a whole trace while peers sit idle)
     admit_capacity: Optional[int] = None
+    # multi-tenant serving: adapter ids currently DEVICE-resident on
+    # this replica's AdapterRegistry — the dispatcher routes a tenant's
+    # requests here to skip the host->device adapter load (empty on
+    # single-adapter replicas and the simulator)
+    resident_adapters: tuple = ()
 
     @property
     def slot_headroom(self) -> float:
@@ -152,10 +161,13 @@ class ReplicaHandle(Protocol):
         """Runtime pressure snapshot for placement-aware routing."""
         ...
 
-    def prefix_affinity(self, prompt: Any) -> int:
+    def prefix_affinity(self, prompt: Any,
+                        adapter_id: Optional[str] = None) -> int:
         """Prompt tokens this replica could serve from its prefix cache
         (0 when it has no cache or no match) — the dispatcher routes
-        matching requests here to convert prefill into cache hits."""
+        matching requests here to convert prefill into cache hits.
+        ``adapter_id`` scopes the lookup to that tenant's cached blocks
+        (cached KV is adapter-specific)."""
         ...
 
     # ---- elasticity / failover ---------------------------------------------

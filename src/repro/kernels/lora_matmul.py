@@ -9,6 +9,18 @@ VMEM scratch accumulator.
 
 Tiling: grid (M/bm, N/bn, K/bk), K innermost so the f32 accumulators
 persist across the contraction.  MXU-aligned tiles (multiples of 128).
+
+``segmented_lora_matmul`` is the multi-tenant form: every row of ``x``
+carries an ``adapter_idx`` into stacked per-adapter A/B tensors, so one
+decode wave mixes tenants without unbatching.  The stacks are laid out
+concatenated along the rank axis (``a_cat: [K, A*r]``,
+``b_cat: [A*r, N]``) and each row's bypass is isolated by masking the
+``x @ A`` intermediate to its adapter's rank segment before the B
+contraction — rows with ``adapter_idx < 0`` match no segment and come
+out as the pure base matmul.  A scalar-prefetched per-M-tile occupancy
+vector (same idiom as ``paged_decode_attention``'s block tables) lets
+tiles whose rows are ALL disabled skip the low-rank work entirely
+instead of multiplying by zeros.
 """
 from __future__ import annotations
 
@@ -74,3 +86,90 @@ def lora_matmul(x: jax.Array, w: jax.Array, a: jax.Array, b: jax.Array,
         ],
         interpret=interpret,
     )(x, w, a, b)
+
+
+def _seg_kernel(any_ref, idx_ref, x_ref, w_ref, a_ref, b_ref, o_ref,
+                acc_ref, xa_ref, *, scaling: float, k_steps: int,
+                rank: int):
+    i = pl.program_id(0)
+    kk = pl.program_id(2)
+    have = any_ref[i] != 0           # any live adapter row in this M tile?
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        xa_ref[...] = jnp.zeros_like(xa_ref)
+
+    x = x_ref[...]
+    acc_ref[...] += jnp.dot(x, w_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(have)
+    def _lowrank():
+        xa_ref[...] += jnp.dot(x, a_ref[...],
+                               preferred_element_type=jnp.float32)
+
+    # all-disabled tiles never touched A/B: emit the base product as-is
+    @pl.when((kk == k_steps - 1) & jnp.logical_not(have))
+    def _finish_base():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+    @pl.when((kk == k_steps - 1) & have)
+    def _finish_segmented():
+        bm, ar = xa_ref.shape
+        # column c of the concatenated rank axis belongs to adapter c//r;
+        # keep only each row's own segment (rows with idx < 0 match none)
+        seg = jax.lax.broadcasted_iota(jnp.int32, (bm, ar), 1) // rank
+        mask = idx_ref[...] == seg
+        xa_m = jnp.where(mask, xa_ref[...], 0.0)
+        low = jnp.dot(xa_m.astype(b_ref.dtype), b_ref[...],
+                      preferred_element_type=jnp.float32)
+        o_ref[...] = (acc_ref[...] + scaling * low).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scaling", "rank", "bm",
+                                             "bn", "bk", "interpret"))
+def segmented_lora_matmul(x: jax.Array, w: jax.Array, a_cat: jax.Array,
+                          b_cat: jax.Array, adapter_idx: jax.Array,
+                          scaling: float, *, rank: int, bm: int = 128,
+                          bn: int = 128, bk: int = 512,
+                          interpret: bool = False) -> jax.Array:
+    """x: [M,K]; w: [K,N]; a_cat: [K,A*r]; b_cat: [A*r,N];
+    adapter_idx: [M] int32 (row's adapter slot, < 0 = base only).
+
+    M, N, K must be divisible by the block sizes (ops.py pads; padded
+    rows carry adapter_idx = -1 so they add no low-rank work).
+    """
+    m, k = x.shape
+    n = w.shape[1]
+    ar = a_cat.shape[1]
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    k_steps = k // bk
+    grid = (m // bm, n // bn, k_steps)
+    tile_any = (adapter_idx.reshape(m // bm, bm) >= 0).any(
+        axis=1).astype(jnp.int32)
+    kernel = functools.partial(_seg_kernel, scaling=scaling,
+                               k_steps=k_steps, rank=rank)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, 1), lambda i, j, kk, any_ref: (i, 0)),
+            pl.BlockSpec((bm, bk), lambda i, j, kk, any_ref: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk, any_ref: (kk, j)),
+            pl.BlockSpec((bk, ar), lambda i, j, kk, any_ref: (kk, 0)),
+            pl.BlockSpec((ar, bn), lambda i, j, kk, any_ref: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk, any_ref: (i, j)),
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), jnp.float32),   # base accumulator
+            pltpu.VMEM((bm, ar), jnp.float32),   # x @ A_cat accumulator
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=interpret,
+    )(tile_any, adapter_idx.reshape(m, 1), x, w, a_cat, b_cat)

@@ -23,6 +23,8 @@ from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention as _decode_kernel
 from repro.kernels.flash_attention import flash_attention as _flash_kernel
 from repro.kernels.lora_matmul import lora_matmul as _lora_kernel
+from repro.kernels.lora_matmul import \
+    segmented_lora_matmul as _seg_lora_kernel
 from repro.kernels.ssd_scan import ssd_scan as _ssd_kernel
 
 
@@ -53,6 +55,42 @@ def lora_matmul(x, w, a, b, scaling: float, *,
     y = _lora_kernel(x2, wp, ap, bp, scaling, bm=block, bn=block,
                      bk=max(block, 512 if kp % 512 == 0 else block),
                      interpret=not _on_tpu())
+    return y[:m, :n].reshape(lead + (n,))
+
+
+def segmented_lora_matmul(x, w, a_stack, b_stack, adapter_idx,
+                          scaling: float, *, force_kernel: bool = False,
+                          block: int = 128):
+    """Multi-tenant LoRA: row i of ``x`` applies adapter
+    ``adapter_idx[i]`` from stacked ``a_stack: [A,K,r]`` /
+    ``b_stack: [A,r,N]`` (idx < 0 = base only).  Leading batch dims on
+    ``x`` mirror ``adapter_idx``'s shape."""
+    lead = x.shape[:-1]
+    m = 1
+    for dim in lead:
+        m *= dim
+    k, n = w.shape
+    x2 = x.reshape(m, k)
+    idx = adapter_idx.reshape(m).astype(jnp.int32)
+    if not (_on_tpu() or force_kernel):
+        y = ref.segmented_lora_matmul(x2, w, a_stack, b_stack, idx,
+                                      scaling)
+        return y.reshape(lead + (n,))
+    n_adapters, _, r = a_stack.shape
+    ar = n_adapters * r
+    # concatenate the stacks along the rank axis for the kernel layout
+    a_cat = a_stack.transpose(1, 0, 2).reshape(k, ar)
+    b_cat = b_stack.reshape(ar, n)
+    mp, kp, np_ = _round_up(m, block), _round_up(k, block), _round_up(n, block)
+    x2 = jnp.pad(x2, ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+    ap = jnp.pad(a_cat, ((0, kp - k), (0, 0)))
+    bp = jnp.pad(b_cat, ((0, 0), (0, np_ - n)))
+    idx_p = jnp.pad(idx, (0, mp - m), constant_values=-1)
+    y = _seg_lora_kernel(x2, wp, ap, bp, idx_p, scaling, rank=r,
+                         bm=block, bn=block,
+                         bk=max(block, 512 if kp % 512 == 0 else block),
+                         interpret=not _on_tpu())
     return y[:m, :n].reshape(lead + (n,))
 
 

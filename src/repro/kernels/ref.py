@@ -21,6 +21,27 @@ def lora_matmul(x: jax.Array, w: jax.Array, a: jax.Array, b: jax.Array,
     return (base + scaling * low).astype(x.dtype)
 
 
+def segmented_lora_matmul(x: jax.Array, w: jax.Array, a_stack: jax.Array,
+                          b_stack: jax.Array, adapter_idx: jax.Array,
+                          scaling: float) -> jax.Array:
+    """Per-row multi-adapter LoRA: row i applies adapter ``adapter_idx[i]``
+    from stacked ``a_stack: [A,K,r]`` / ``b_stack: [A,r,N]``; rows with
+    ``adapter_idx < 0`` return the pure base product bitwise (the select
+    happens AFTER the einsum, so garbage — even NaN — in unused adapter
+    slots never leaks into disabled rows)."""
+    xf = x.astype(jnp.float32)
+    base = xf @ w.astype(jnp.float32)
+    n_adapters = a_stack.shape[0]
+    valid = adapter_idx >= 0
+    idx = jnp.clip(adapter_idx, 0, n_adapters - 1)
+    a_sel = jnp.take(a_stack, idx, axis=0).astype(jnp.float32)  # [M,K,r]
+    b_sel = jnp.take(b_stack, idx, axis=0).astype(jnp.float32)  # [M,r,N]
+    xa = jnp.einsum("mk,mkr->mr", xf, a_sel)
+    low = jnp.einsum("mr,mrn->mn", xa, b_sel)
+    y = base + scaling * low
+    return jnp.where(valid[:, None], y, base).astype(x.dtype)
+
+
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, window: int = 0,
                     scale: Optional[float] = None) -> jax.Array:

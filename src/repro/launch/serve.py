@@ -38,6 +38,9 @@ Usage:
   ... --replicas 2   # dispatcher-routed pool of live replicas
   ... --replicas 2 --combined --rounds 2   # FL fine-tuning co-executed
                      # over the live fabric (shadow-adapter publishing)
+  ... --adapters 3   # multi-LoRA multi-tenant serving: requests tagged
+                     # round-robin across 3 registered tenants, decoded
+                     # through the batched segmented LoRA paths
   ... --temperature 0.8 --top-k 40 --top-p 0.95   # sampled decoding
 """
 from __future__ import annotations
@@ -60,10 +63,17 @@ def run_serving(arch: str, *, smoke: bool = True, n_requests: int = 16,
                 paged: bool = False, block_size: int = 16,
                 n_blocks: int = 0, prefix_cache: bool = False,
                 temperature: float = 0.0, top_k: int = 0,
-                top_p: float = 1.0,
+                top_p: float = 1.0, n_adapters: int = 0,
                 verbose: bool = True) -> dict:
     """Serve ``n_requests`` prompts on a ``batch_size``-slot continuous
-    batcher; returns throughput + (combined mode) train losses."""
+    batcher; returns throughput + (combined mode) train losses.
+
+    ``n_adapters > 0`` registers that many tenants on an
+    ``AdapterRegistry`` and assigns requests round-robin: one decode
+    wave then mixes tenants through the batched segmented LoRA paths.
+    In combined mode training still steps the co-train tree in place,
+    but decode reads the registry's published tenant copies — the
+    single-batcher analogue of shadow buffering."""
     cfg = get_config(arch)
     if smoke:
         cfg = cfg.scaled()
@@ -71,7 +81,18 @@ def run_serving(arch: str, *, smoke: bool = True, n_requests: int = 16,
     engine = make_engine(cfg, lr=3e-3)
     model = engine.model
     params = model.init(jax.random.key(seed))
-    lora = model.init_lora(jax.random.key(seed + 1))
+    registry = None
+    if n_adapters > 0:
+        from repro.runtime.fabric import make_tenant_adapters
+        from repro.runtime.serving_loop import AdapterRegistry
+        tenant_trees = make_tenant_adapters(model, n_adapters,
+                                            seed=seed + 1)
+        registry = AdapterRegistry(model, capacity=n_adapters)
+        for t, tree in enumerate(tenant_trees):
+            registry.register(f"tenant{t}", tree)
+        lora = tenant_trees[0]
+    else:
+        lora = model.init_lora(jax.random.key(seed + 1))
     opt_state = engine.optimizer.init(lora)
     data = SyntheticDataset("alpaca", vocab_size=cfg.vocab_size,
                             seq_len=prompt_len, seed=seed)
@@ -80,10 +101,13 @@ def run_serving(arch: str, *, smoke: bool = True, n_requests: int = 16,
         engine, params, lora, n_slots=batch_size,
         max_seq=prompt_len + gen_tokens, prompt_pad=prompt_len,
         opt_state=opt_state, paged=paged, block_size=block_size,
-        n_blocks=n_blocks or None, prefix_cache=prefix_cache)
+        n_blocks=n_blocks or None, prefix_cache=prefix_cache,
+        adapters=registry)
     prompts = data.sample_tokens(n_requests)[:, :prompt_len]
     requests = [GenRequest(request_id=i, prompt=prompts[i],
                            max_new_tokens=gen_tokens,
+                           adapter_id=f"tenant{i % n_adapters}"
+                           if n_adapters > 0 else None,
                            temperature=temperature, top_k=top_k,
                            top_p=top_p, seed=seed + i)
                 for i in range(n_requests)]
@@ -113,6 +137,11 @@ def run_serving(arch: str, *, smoke: bool = True, n_requests: int = 16,
     if prefix_cache:
         out["cached_prefix_tokens"] = stats.cached_prefix_tokens
         out["prefix_cache_hits"] = batcher.prefix_cache.hits
+    if registry is not None:
+        out["adapter_requests"] = dict(stats.adapter_requests)
+        out["adapter_hits"] = registry.hits
+        out["adapter_loads"] = registry.loads
+        out["adapter_evictions"] = registry.evictions
     if verbose:
         print(f"served {stats.finished}/{n_requests} requests, "
               f"{stats.generated_tokens} tokens in {stats.decode_steps} "
@@ -124,7 +153,10 @@ def run_serving(arch: str, *, smoke: bool = True, n_requests: int = 16,
               + (f"; co-trained {stats.train_steps} fused steps "
                  f"(loss {batcher.train_losses[0]:.3f} -> "
                  f"{batcher.train_losses[-1]:.3f})"
-                 if batcher.train_losses else ""))
+                 if batcher.train_losses else "")
+              + (f"; {n_adapters} tenants "
+                 f"{dict(sorted(stats.adapter_requests.items()))}"
+                 if registry is not None else ""))
     return out
 
 
@@ -134,10 +166,13 @@ def run_multi_replica_serving(
         batch_size: int = 4, seed: int = 0, paged: bool = False,
         block_size: int = 16, n_blocks: int = 0,
         prefix_cache: bool = False, temperature: float = 0.0,
-        top_k: int = 0, top_p: float = 1.0,
+        top_k: int = 0, top_p: float = 1.0, n_adapters: int = 0,
         verbose: bool = True) -> dict:
     """Serve ``n_requests`` prompts through the dispatcher-routed
-    multi-replica fabric; returns the aggregate cluster summary."""
+    multi-replica fabric; returns the aggregate cluster summary.
+    ``n_adapters > 0`` registers that many LoRA tenants on every
+    replica and tags requests round-robin, exercising adapter-affinity
+    routing and the batched segmented decode paths."""
     from repro.core.interfaces import Request
     from repro.runtime.fabric import build_fabric
 
@@ -145,7 +180,7 @@ def run_multi_replica_serving(
         arch, n_replicas, smoke=smoke, n_slots=batch_size,
         prompt_len=prompt_len, gen_tokens=gen_tokens, paged=paged,
         block_size=block_size, n_blocks=n_blocks or None,
-        prefix_cache=prefix_cache, seed=seed)
+        prefix_cache=prefix_cache, seed=seed, n_adapters=n_adapters)
     data = SyntheticDataset("alpaca", vocab_size=cfg.vocab_size,
                             seq_len=prompt_len, seed=seed)
     prompts = data.sample_tokens(n_requests)[:, :prompt_len]
@@ -153,6 +188,8 @@ def run_multi_replica_serving(
     requests = [Request(request_id=i, stream_id=stream, arrival=0.0,
                         deadline=1e9, tokens=gen_tokens,
                         prompt=prompts[i].astype(np.int32),
+                        adapter_id=f"tenant{i % n_adapters}"
+                        if n_adapters > 0 else None,
                         temperature=temperature, top_k=top_k,
                         top_p=top_p, seed=seed + i)
                 for i in range(n_requests)]
@@ -166,6 +203,13 @@ def run_multi_replica_serving(
               f"{c['generated_tokens']} tokens, "
               f"aggregate {c['throughput_sum_tok_s']:.1f} tok/s "
               f"({c['throughput_wall_tok_s']:.1f} on the shared device)")
+        if n_adapters > 0 and c.get("adapters"):
+            parts = ", ".join(f"{aid}: {a['requests']}"
+                              for aid, a in c["adapters"].items())
+            routed = sum(d["adapter_routed"]
+                         for d in out["dispatchers"].values())
+            print(f"  tenants ({routed} adapter-affinity routed): "
+                  f"{parts}")
         for rid, row in out["replicas"].items():
             print(f"  {rid}: {row['finished']} finished, "
                   f"{row['generated_tokens']} tokens, "
@@ -181,7 +225,8 @@ def run_combined_fabric_serving(
         prefix_cache: bool = False, train_batch: int = 4,
         rounds: int = 2, steps_per_round: int = 4, train_pool: int = 8,
         temperature: float = 0.0, top_k: int = 0, top_p: float = 1.0,
-        timeout: float = 300.0, verbose: bool = True) -> dict:
+        n_adapters: int = 0, timeout: float = 300.0,
+        verbose: bool = True) -> dict:
     """Live co-execution: serve the trace through the multi-replica
     fabric WHILE the launcher drives incremental FL train sessions over
     the same replicas.  ``train_pool`` fixes the fine-tuning corpus to
@@ -201,7 +246,7 @@ def run_combined_fabric_serving(
         prompt_len=prompt_len, gen_tokens=gen_tokens, paged=paged,
         block_size=block_size, n_blocks=n_blocks or None,
         prefix_cache=prefix_cache, seed=seed, train_pool=train_pool,
-        cfg=fcfg)
+        n_adapters=n_adapters, cfg=fcfg)
     data = SyntheticDataset("alpaca", vocab_size=cfg.vocab_size,
                             seq_len=prompt_len, seed=seed)
     prompts = data.sample_tokens(n_requests)[:, :prompt_len]
@@ -209,6 +254,8 @@ def run_combined_fabric_serving(
     requests = [Request(request_id=i, stream_id=stream, arrival=0.0,
                         deadline=1e9, tokens=gen_tokens,
                         prompt=prompts[i].astype(np.int32),
+                        adapter_id=f"tenant{i % n_adapters}"
+                        if n_adapters > 0 else None,
                         temperature=temperature, top_k=top_k,
                         top_p=top_p, seed=seed + i)
                 for i in range(n_requests)]
@@ -226,6 +273,10 @@ def run_combined_fabric_serving(
             print(f"  round {r['round']}: avg member loss "
                   f"{r['avg_loss']:.4f} -> published v{r['version']} "
                   f"({r['members']} members)")
+        if n_adapters > 0 and c.get("adapters"):
+            for aid, a in c["adapters"].items():
+                print(f"  {aid}: {a['requests']} requests, "
+                      f"version {a['version_min']}..{a['version_max']}")
         for rid, row in out["replicas"].items():
             tl = row["train_loss"]
             print(f"  {rid}: v{row['adapter_version']}, "
@@ -267,6 +318,9 @@ def main() -> None:
                     help="keep only the k highest logits (0 = all)")
     ap.add_argument("--top-p", type=float, default=1.0,
                     help="nucleus sampling mass (1.0 = no filter)")
+    ap.add_argument("--adapters", type=int, default=0,
+                    help="LoRA tenants to register and round-robin "
+                         "requests across (0 = single-adapter serving)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.prefix_cache and not args.paged:
@@ -285,7 +339,8 @@ def main() -> None:
                 train_batch=args.train_batch, rounds=args.rounds,
                 steps_per_round=args.steps_per_round,
                 temperature=args.temperature, top_k=args.top_k,
-                top_p=args.top_p, seed=args.seed)
+                top_p=args.top_p, n_adapters=args.adapters,
+                seed=args.seed)
             return
         run_multi_replica_serving(
             args.arch, n_replicas=args.replicas,
@@ -294,7 +349,7 @@ def main() -> None:
             paged=args.paged, block_size=args.block_size,
             n_blocks=args.n_blocks, prefix_cache=args.prefix_cache,
             temperature=args.temperature, top_k=args.top_k,
-            top_p=args.top_p, seed=args.seed)
+            top_p=args.top_p, n_adapters=args.adapters, seed=args.seed)
         return
     run_serving(args.arch, n_requests=args.requests,
                 prompt_len=args.prompt_len, gen_tokens=args.gen,
@@ -303,7 +358,8 @@ def main() -> None:
                 paged=args.paged, block_size=args.block_size,
                 n_blocks=args.n_blocks, prefix_cache=args.prefix_cache,
                 temperature=args.temperature, top_k=args.top_k,
-                top_p=args.top_p, seed=args.seed)
+                top_p=args.top_p, n_adapters=args.adapters,
+                seed=args.seed)
 
 
 if __name__ == "__main__":

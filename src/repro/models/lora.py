@@ -57,13 +57,47 @@ def init_lora(key, cfg: ModelConfig, stacked: int) -> Dict:
 
 
 def apply(x: jax.Array, base_out: jax.Array, pair: Optional[Dict],
-          scaling: float) -> jax.Array:
-    """base_out + scaling * (x @ A) @ B — the low-rank bypass."""
+          scaling: float, adapter_idx: Optional[jax.Array] = None
+          ) -> jax.Array:
+    """base_out + scaling * (x @ A) @ B — the low-rank bypass.
+
+    With ``adapter_idx`` set, ``pair`` holds STACKED per-adapter slices
+    (``a: [A, din, r]``, ``b: [A, r, dout]``) and each batch row applies
+    its own adapter (see ``apply_segmented``)."""
     if pair is None:
         return base_out
+    if adapter_idx is not None:
+        return apply_segmented(x, base_out, pair, adapter_idx, scaling)
     a = pair["a"].astype(x.dtype)
     b = pair["b"].astype(x.dtype)
     return base_out + ((x @ a) @ b) * scaling
+
+
+def apply_segmented(x: jax.Array, base_out: jax.Array, pair: Dict,
+                    adapter_idx: jax.Array, scaling: float) -> jax.Array:
+    """Per-row adapter selection over a stacked pair.
+
+    x: [B, S, din]; pair: {"a": [A, din, r], "b": [A, r, dout]} (one
+    layer's slot stack); adapter_idx: [B] int32, row's slot (< 0 =
+    adapter disabled, base output returned bitwise — the select happens
+    AFTER the einsum so stale device slots never leak into those rows).
+    """
+    a = pair["a"].astype(x.dtype)
+    b = pair["b"].astype(x.dtype)
+    n_adapters = a.shape[0]
+    valid = adapter_idx >= 0
+    idx = jnp.clip(adapter_idx, 0, n_adapters - 1)
+    xa = jnp.einsum("bsk,bkr->bsr", x, jnp.take(a, idx, axis=0))
+    low = jnp.einsum("bsr,brn->bsn", xa, jnp.take(b, idx, axis=0))
+    y = base_out + low * scaling
+    return jnp.where(valid[:, None, None], y, base_out)
+
+
+def stack_adapters(trees: "list[Dict]") -> Dict:
+    """Stack ``k`` same-structure adapter trees into one multi-slot tree:
+    leaves go from ``[L, din, r]`` to ``[L, k, din, r]`` (slot axis 1 so
+    the layer scan still slices axis 0)."""
+    return jax.tree.map(lambda *leaves: jnp.stack(leaves, axis=1), *trees)
 
 
 def merge_into(base_w: jax.Array, pair: Dict, scaling: float) -> jax.Array:

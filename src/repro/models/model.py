@@ -139,8 +139,13 @@ class Model:
         return shard(x, "batch", "act_seq", "embed")
 
     def hidden_states(self, params, lora, batch, *, collect_caches=False,
-                      block_kv: int = 512, skip_masked_blocks: bool = False):
-        """Full-sequence forward.  Returns (hidden, caches|None, aux)."""
+                      block_kv: int = 512, skip_masked_blocks: bool = False,
+                      adapter_idx=None):
+        """Full-sequence forward.  Returns (hidden, caches|None, aux).
+
+        ``adapter_idx`` [B] int32 (optional) selects each row's adapter
+        slot from a STACKED multi-adapter lora tree (leaves
+        [L, A, din, r]); < 0 disables the bypass for that row."""
         cfg = self.cfg
         x = self._embed(params, batch)
         s = x.shape[1]
@@ -151,7 +156,8 @@ class Model:
             bp, lslice = xs
             y, (kv, ssm_final, aux) = tfm.block_full(
                 bp, xc, cfg, rope_cs, lora=lslice, block_kv=block_kv,
-                skip_masked_blocks=skip_masked_blocks)
+                skip_masked_blocks=skip_masked_blocks,
+                adapter_idx=adapter_idx)
             outs = (kv, ssm_final, aux) if collect_caches else (None, None, aux)
             return y, outs
 
@@ -281,7 +287,8 @@ class Model:
 
     def prefill_ragged(self, params, lora, batch, prompt_lens, *,
                        block_kv: int = 512,
-                       skip_masked_blocks: bool = False):
+                       skip_masked_blocks: bool = False,
+                       adapter_idx=None):
         """Prefill right-padded ragged prompts in one batch.
 
         ``prompt_lens`` [B] int32 gives each row's true prompt length;
@@ -297,7 +304,8 @@ class Model:
             f"{cfg.name}: ragged (padded) prefill breaks SSM recurrence"
         hidden, caches, _ = self.hidden_states(
             params, lora, batch, collect_caches=True, block_kv=block_kv,
-            skip_masked_blocks=skip_masked_blocks)
+            skip_masked_blocks=skip_masked_blocks,
+            adapter_idx=adapter_idx)
         idx = (prompt_lens - 1).astype(jnp.int32)[:, None, None]
         last = jnp.take_along_axis(
             hidden, jnp.broadcast_to(idx, (hidden.shape[0], 1,
@@ -391,7 +399,8 @@ class Model:
         return jax.tree.map(write, pool_caches, prefill_caches)
 
     def prefill_ragged_suffix(self, params, lora, batch, suffix_lens,
-                              prefix_lens, caches, prefix_tables):
+                              prefix_lens, caches, prefix_tables,
+                              adapter_idx=None):
         """Prefill only the uncached suffix of each prompt (prefix
         sharing over the paged pool).
 
@@ -431,7 +440,8 @@ class Model:
             bp, lsl, pre = xs
             y, kv = tfm.block_prefill_suffix(bp, xc, cfg, pre,
                                              prefix_lens, rope_cs,
-                                             lora=lsl)
+                                             lora=lsl,
+                                             adapter_idx=adapter_idx)
             return y, kv
 
         scan = _scan_or_loop if not cfg.scan_layers else lax.scan
@@ -460,12 +470,16 @@ class Model:
 
     # --------------------------------------------------------------- decode -
     def decode_step(self, params, lora, caches, token, pos, *,
-                    attn_backend: Optional[str] = None):
+                    attn_backend: Optional[str] = None,
+                    adapter_idx=None):
         """One decode step.  token: [B,1] int32; pos: scalar int32 (next
         write position, shared) or [B] int32 (per-sequence positions —
         ragged decode slots for continuous batching).  ``attn_backend``
         (static) picks the decode-attention path — Pallas on TPU, jnp
-        elsewhere.  Returns (logits [B,1,V], updated caches)."""
+        elsewhere.  ``adapter_idx`` [B] int32 (optional) selects each
+        row's adapter slot from a STACKED multi-adapter ``lora`` tree
+        (leaves [L, A, din, r]; < 0 = base only) — the multi-tenant
+        decode wave.  Returns (logits [B,1,V], updated caches)."""
         cfg = self.cfg
         pos = jnp.asarray(pos)
         x = jnp.take(params["embed"], token, axis=0)
@@ -505,7 +519,8 @@ class Model:
                 bp, lsl, cache_l = xs
                 y, nc = tfm.block_decode(bp, xc, cfg, cache_l, pos,
                                          rope_cs, lora=lsl,
-                                         backend=attn_backend)
+                                         backend=attn_backend,
+                                         adapter_idx=adapter_idx)
                 return y, nc
 
             cache_tree = {}
@@ -521,7 +536,8 @@ class Model:
 
     def decode_step_paged(self, params, lora, caches, token, pos,
                           block_tables, *, ring_len: int = 0,
-                          attn_backend: Optional[str] = None):
+                          attn_backend: Optional[str] = None,
+                          adapter_idx=None):
         """One decode step over the paged KV pool.
 
         caches: ``init_paged_caches`` tree; token: [B,1] int32; pos: [B]
@@ -559,7 +575,8 @@ class Model:
             bp, lsl, pool_l = xs
             y, new_pool = tfm.block_decode_paged(
                 bp, xc, cfg, pool_l, rope_cs, block_tables, write_block,
-                write_off, kv_len, lora=lsl, backend=attn_backend)
+                write_off, kv_len, lora=lsl, backend=attn_backend,
+                adapter_idx=adapter_idx)
             return y, new_pool
 
         x, new_kv = scan(body, x, (params["blocks"], lora, caches["kv"]))

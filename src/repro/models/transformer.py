@@ -94,11 +94,14 @@ def init_cross_block(key, cfg: ModelConfig) -> Dict:
 
 
 # ------------------------------------------------------------- attention ---
-def _proj_qkv(p, x, cfg, lora):
+def _proj_qkv(p, x, cfg, lora, adapter_idx=None):
     sc = cfg.lora.scaling
-    q = lora_lib.apply(x, x @ p["wq"], lora.get("q") if lora else None, sc)
-    k = lora_lib.apply(x, x @ p["wk"], lora.get("k") if lora else None, sc)
-    v = lora_lib.apply(x, x @ p["wv"], lora.get("v") if lora else None, sc)
+    q = lora_lib.apply(x, x @ p["wq"], lora.get("q") if lora else None, sc,
+                       adapter_idx)
+    k = lora_lib.apply(x, x @ p["wk"], lora.get("k") if lora else None, sc,
+                       adapter_idx)
+    v = lora_lib.apply(x, x @ p["wv"], lora.get("v") if lora else None, sc,
+                       adapter_idx)
     if "bq" in p:
         q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
     b, s = x.shape[0], x.shape[1]
@@ -123,11 +126,12 @@ def use_dense_prefill(cfg: ModelConfig, s: int) -> bool:
 
 
 def attn_full(p, x, cfg: ModelConfig, rope_cs, lora=None,
-              block_kv: int = 512, skip_masked_blocks: bool = False
+              block_kv: int = 512, skip_masked_blocks: bool = False,
+              adapter_idx=None
               ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
     """Full-sequence attention (training / prefill).  Returns (out, (k, v))
     so prefill can stash the KV cache."""
-    q, k, v = _proj_qkv(p, x, cfg, lora)
+    q, k, v = _proj_qkv(p, x, cfg, lora, adapter_idx)
     if rope_cs is not None:
         cos, sin = rope_cs
         q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
@@ -148,12 +152,12 @@ def attn_full(p, x, cfg: ModelConfig, rope_cs, lora=None,
                                 unroll=cfg.unroll_attn_blocks)
     o = o.reshape(x.shape[0], s, cfg.n_heads * cfg.head_dim)
     out = lora_lib.apply(o, o @ p["wo"], lora.get("o") if lora else None,
-                         cfg.lora.scaling)
+                         cfg.lora.scaling, adapter_idx)
     return out, (k, v)
 
 
 def attn_decode(p, x, cfg: ModelConfig, cache_kv, pos, rope_cs, lora=None,
-                backend=None):
+                backend=None, adapter_idx=None):
     """One-token attention against a KV cache.
 
     cache_kv: (k_cache, v_cache) [B,S,Hkv,Dh]; pos: scalar int32 absolute
@@ -167,7 +171,7 @@ def attn_decode(p, x, cfg: ModelConfig, cache_kv, pos, rope_cs, lora=None,
     k_cache, v_cache = cache_kv
     cache_len = k_cache.shape[1]
     ragged = jnp.ndim(pos) > 0
-    q, k, v = _proj_qkv(p, x, cfg, lora)
+    q, k, v = _proj_qkv(p, x, cfg, lora, adapter_idx)
     if rope_cs is not None:
         cos, sin = rope_cs  # [1, Dh/2] (shared) or [B, 1, Dh/2] (ragged)
         q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
@@ -190,7 +194,7 @@ def attn_decode(p, x, cfg: ModelConfig, cache_kv, pos, rope_cs, lora=None,
         o = o.reshape(x.shape[0], 1, cfg.n_heads * cfg.head_dim)
         out = lora_lib.apply(o, o @ p["wo"],
                              lora.get("o") if lora else None,
-                             cfg.lora.scaling)
+                             cfg.lora.scaling, adapter_idx)
         return out, (k_cache, v_cache)
 
     wpos = lax.rem(pos, cache_len) if cfg.sliding_window > 0 else pos
@@ -210,13 +214,13 @@ def attn_decode(p, x, cfg: ModelConfig, cache_kv, pos, rope_cs, lora=None,
     o = attention_decode(q, k_cache, v_cache, kv_len, backend=backend)
     o = o.reshape(x.shape[0], 1, cfg.n_heads * cfg.head_dim)
     out = lora_lib.apply(o, o @ p["wo"], lora.get("o") if lora else None,
-                         cfg.lora.scaling)
+                         cfg.lora.scaling, adapter_idx)
     return out, (k_cache, v_cache)
 
 
 def attn_decode_paged(p, x, cfg: ModelConfig, pool_kv, rope_cs,
                       block_tables, write_block, write_off, kv_len,
-                      lora=None, backend=None):
+                      lora=None, backend=None, adapter_idx=None):
     """One-token attention against one layer's paged KV block pool.
 
     pool_kv: (k_pool, v_pool) [n_blocks, block_size, Hkv, Dh];
@@ -226,7 +230,7 @@ def attn_decode_paged(p, x, cfg: ModelConfig, pool_kv, rope_cs,
     addressing for sliding-window archs included); kv_len: [B] valid
     logical length AFTER the write.  Returns (out, updated pools)."""
     k_pool, v_pool = pool_kv
-    q, k, v = _proj_qkv(p, x, cfg, lora)
+    q, k, v = _proj_qkv(p, x, cfg, lora, adapter_idx)
     if rope_cs is not None:
         cos, sin = rope_cs
         q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
@@ -242,19 +246,19 @@ def attn_decode_paged(p, x, cfg: ModelConfig, pool_kv, rope_cs,
                                backend=backend)
     o = o.reshape(x.shape[0], 1, cfg.n_heads * cfg.head_dim)
     out = lora_lib.apply(o, o @ p["wo"], lora.get("o") if lora else None,
-                         cfg.lora.scaling)
+                         cfg.lora.scaling, adapter_idx)
     return out, (k_pool, v_pool)
 
 
 def attn_prefill_suffix(p, x, cfg: ModelConfig, prefix_kv, prefix_len,
-                        rope_cs, lora=None):
+                        rope_cs, lora=None, adapter_idx=None):
     """Ragged suffix prefill attention for one layer: queries are the
     uncached suffix tokens (absolute positions ``prefix_len + i``, RoPE
     tables precomputed per row); keys are the cached prefix K/V
     (gathered from pool blocks) plus the suffix's own K/V.  Returns
     (out, (k_suf, v_suf)) so the runtime can scatter the fresh suffix
     K/V into its newly allocated blocks."""
-    q, k, v = _proj_qkv(p, x, cfg, lora)
+    q, k, v = _proj_qkv(p, x, cfg, lora, adapter_idx)
     if rope_cs is not None:
         cos, sin = rope_cs
         q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
@@ -263,20 +267,22 @@ def attn_prefill_suffix(p, x, cfg: ModelConfig, prefix_kv, prefix_len,
                                 window=cfg.sliding_window)
     o = o.reshape(x.shape[0], x.shape[1], cfg.n_heads * cfg.head_dim)
     out = lora_lib.apply(o, o @ p["wo"], lora.get("o") if lora else None,
-                         cfg.lora.scaling)
+                         cfg.lora.scaling, adapter_idx)
     return out, (k, v)
 
 
 def block_prefill_suffix(bp, x, cfg: ModelConfig, prefix_kv, prefix_len,
-                         rope_cs, lora=None):
+                         rope_cs, lora=None, adapter_idx=None):
     """Suffix-prefill block (attention-only stacks — prefix sharing
     rides on the paged KV pool).  Returns (x, (k_suf, v_suf))."""
     h = rms_norm(x, bp["ln1"])
     attn_out, kv = attn_prefill_suffix(bp["attn"], h, cfg, prefix_kv,
-                                       prefix_len, rope_cs, lora=lora)
+                                       prefix_len, rope_cs, lora=lora,
+                                       adapter_idx=adapter_idx)
     x = x + attn_out
     if cfg.d_ff > 0:
-        y, _ = _mlp_out(bp, rms_norm(x, bp["ln2"]), cfg, lora)
+        y, _ = _mlp_out(bp, rms_norm(x, bp["ln2"]), cfg, lora,
+                        adapter_idx)
         x = x + y
     x = shard(x, "batch", "act_seq", "embed")
     return x, kv
@@ -302,25 +308,26 @@ def vision_kv(p, vis: jax.Array, cfg: ModelConfig):
 
 
 # ----------------------------------------------------------------- blocks --
-def _mlp_out(bp, h, cfg, lora):
+def _mlp_out(bp, h, cfg, lora, adapter_idx=None):
     if "moe" in bp:
         from repro.models.moe import MoEParams, moe_mlp
         y, aux = moe_mlp(MoEParams(**bp["moe"]), h, cfg)
         return y, aux
     sc = cfg.lora.scaling
     g = lora_lib.apply(h, h @ bp["mlp"]["wg"],
-                       lora.get("gate") if lora else None, sc)
+                       lora.get("gate") if lora else None, sc, adapter_idx)
     u = lora_lib.apply(h, h @ bp["mlp"]["wu"],
-                       lora.get("up") if lora else None, sc)
+                       lora.get("up") if lora else None, sc, adapter_idx)
     hidden = jax.nn.silu(g) * u
     hidden = shard(hidden, "batch", "seq", "ff")
     y = lora_lib.apply(hidden, hidden @ bp["mlp"]["wd"],
-                       lora.get("down") if lora else None, sc)
+                       lora.get("down") if lora else None, sc, adapter_idx)
     return y, jnp.zeros((), jnp.float32)
 
 
 def block_full(bp, x, cfg: ModelConfig, rope_cs, lora=None,
-               block_kv: int = 512, skip_masked_blocks: bool = False):
+               block_kv: int = 512, skip_masked_blocks: bool = False,
+               adapter_idx=None):
     """Full-sequence block (training / prefill).  Returns
     (x, (kv, ssm_cache_final, aux_loss))."""
     h = rms_norm(x, bp["ln1"])
@@ -334,7 +341,8 @@ def block_full(bp, x, cfg: ModelConfig, rope_cs, lora=None,
         return x, (kv, ssm_cache._asdict(), jnp.zeros((), jnp.float32))
     attn_out, kv = attn_full(bp["attn"], h, cfg, rope_cs, lora=lora,
                              block_kv=block_kv,
-                             skip_masked_blocks=skip_masked_blocks)
+                             skip_masked_blocks=skip_masked_blocks,
+                             adapter_idx=adapter_idx)
     if cfg.family is Family.HYBRID:
         ssm_out, ssm_cache = mamba2.ssm_mixer(
             mamba2.SSMParams(**bp["ssm"]), h, cfg, cache=None, lora=lora)
@@ -343,7 +351,8 @@ def block_full(bp, x, cfg: ModelConfig, rope_cs, lora=None,
     x = x + attn_out
     aux = jnp.zeros((), jnp.float32)
     if cfg.d_ff > 0:
-        y, aux = _mlp_out(bp, rms_norm(x, bp["ln2"]), cfg, lora)
+        y, aux = _mlp_out(bp, rms_norm(x, bp["ln2"]), cfg, lora,
+                          adapter_idx)
         x = x + y
     # residual-stream constraint: under SP rules the remat-saved carry is
     # sequence-sharded over the model axis (act_seq), not replicated
@@ -352,7 +361,7 @@ def block_full(bp, x, cfg: ModelConfig, rope_cs, lora=None,
 
 
 def block_decode(bp, x, cfg: ModelConfig, caches, pos, rope_cs, lora=None,
-                 backend=None):
+                 backend=None, adapter_idx=None):
     """One-token block.  caches: dict with optional 'kv' (k,v) and 'ssm'
     (SSMCache).  Returns (x, updated caches)."""
     h = rms_norm(x, bp["ln1"])
@@ -364,7 +373,8 @@ def block_decode(bp, x, cfg: ModelConfig, caches, pos, rope_cs, lora=None,
         new_caches["ssm"] = new_ssm._asdict()
         return x + y, new_caches
     attn_out, new_kv = attn_decode(bp["attn"], h, cfg, caches["kv"], pos,
-                                   rope_cs, lora=lora, backend=backend)
+                                   rope_cs, lora=lora, backend=backend,
+                                   adapter_idx=adapter_idx)
     new_caches["kv"] = new_kv
     if cfg.family is Family.HYBRID:
         ssm_out, new_ssm = mamba2.ssm_mixer(
@@ -374,24 +384,27 @@ def block_decode(bp, x, cfg: ModelConfig, caches, pos, rope_cs, lora=None,
         attn_out = 0.5 * (attn_out + ssm_out)
     x = x + attn_out
     if cfg.d_ff > 0:
-        y, _ = _mlp_out(bp, rms_norm(x, bp["ln2"]), cfg, lora)
+        y, _ = _mlp_out(bp, rms_norm(x, bp["ln2"]), cfg, lora,
+                        adapter_idx)
         x = x + y
     return x, new_caches
 
 
 def block_decode_paged(bp, x, cfg: ModelConfig, pool_kv, rope_cs,
                        block_tables, write_block, write_off, kv_len,
-                       lora=None, backend=None):
+                       lora=None, backend=None, adapter_idx=None):
     """One-token block against one layer's paged KV pool (attention-only
     stacks — SSM state is per-slot, not per-block).  Returns
     (x, updated pools)."""
     h = rms_norm(x, bp["ln1"])
     attn_out, new_kv = attn_decode_paged(
         bp["attn"], h, cfg, pool_kv, rope_cs, block_tables, write_block,
-        write_off, kv_len, lora=lora, backend=backend)
+        write_off, kv_len, lora=lora, backend=backend,
+        adapter_idx=adapter_idx)
     x = x + attn_out
     if cfg.d_ff > 0:
-        y, _ = _mlp_out(bp, rms_norm(x, bp["ln2"]), cfg, lora)
+        y, _ = _mlp_out(bp, rms_norm(x, bp["ln2"]), cfg, lora,
+                        adapter_idx)
         x = x + y
     return x, new_kv
 

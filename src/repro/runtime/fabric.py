@@ -129,6 +129,18 @@ class ServingFabric:
         rep = self.replicas.pop(replica_id)
         self.cluster.remove_replica(replica_id, now)
         self.retired_stats[replica_id] = rep.batcher.stats
+        # multi-tenant failover: every tenant the dead replica served
+        # must stay servable — re-register its host tree (at the dead
+        # replica's version) on any survivor that lacks it; survivors
+        # already serving the tenant keep their own copy
+        if rep.adapters is not None:
+            for aid in rep.adapters.registered():
+                tree = rep.adapters.host_tree(aid)
+                ver = rep.adapters.version(aid)
+                for peer in self.replicas.values():
+                    if peer.adapters is not None \
+                            and not peer.adapters.is_registered(aid):
+                        peer.adapters.register(aid, tree, version=ver)
         return rep
 
     # ------------------------------------------------------------ serving --
@@ -212,6 +224,7 @@ class ServingFabric:
         out["dispatchers"] = {
             sid: {"dispatched": d.dispatched, "dropped": d.dropped,
                   "affinity_routed": d.affinity_routed,
+                  "adapter_routed": d.adapter_routed,
                   "rebalanced": d.rebalanced,
                   "overload_promotions": d.overload_promotions}
             for sid, d in self.cluster.dispatchers.items()}
@@ -222,12 +235,40 @@ class ServingFabric:
         return out
 
 
+def make_tenant_adapters(model, n: int, *, seed: int = 0) -> List[Any]:
+    """``n`` distinct tenant LoRA trees for multi-tenant serving.
+
+    Standard init sets ``b = 0`` (a fresh adapter is a no-op), which
+    would make every tenant serve identical base-model tokens — so
+    tenants t >= 1 get a NONZERO ``b`` drawn per target, giving each a
+    distinct greedy stream (the 0.5 scale is deliberate: much smaller
+    perturbations shift logits without flipping any argmax on smoke
+    configs, collapsing every tenant onto the base stream).  Tenant 0
+    keeps the no-op init: it is the co-training tenant whose weights
+    the publish path rewrites."""
+    import jax
+
+    out = []
+    for t in range(n):
+        key = jax.random.key(seed + 101 * t)
+        tree = model.init_lora(key)
+        if t > 0:
+            for i, tgt in enumerate(sorted(tree)):
+                k = jax.random.fold_in(key, i + 1)
+                b = tree[tgt]["b"]
+                tree[tgt]["b"] = 0.5 * jax.random.normal(
+                    k, b.shape, b.dtype)
+        out.append(tree)
+    return out
+
+
 def build_fabric(arch: str, n_replicas: int, *, smoke: bool = True,
                  n_slots: int = 4, prompt_len: int = 32,
                  gen_tokens: int = 16, paged: bool = False,
                  block_size: int = 16, n_blocks: Optional[int] = None,
                  prefix_cache: bool = False, seed: int = 0,
-                 train_pool: int = 0,
+                 train_pool: int = 0, n_adapters: int = 0,
+                 adapter_slots: Optional[int] = None,
                  cfg: Optional[FabricConfig] = None,
                  ) -> Tuple[ServingFabric, Any]:
     """Build a fabric of ``n_replicas`` live replicas over ONE shared
@@ -237,7 +278,15 @@ def build_fabric(arch: str, n_replicas: int, *, smoke: bool = True,
     ``train_pool > 0`` fixes the fine-tuning corpus to that many
     batches cycled epoch-style (a finite finetuning set, the realistic
     FL PEFT workload — and a train-loss signal strong enough to gate
-    on); 0 streams fresh synthetic batches every step."""
+    on); 0 streams fresh synthetic batches every step.
+
+    ``n_adapters > 0`` turns on multi-tenant serving: every replica
+    gets an ``AdapterRegistry`` (``adapter_slots`` device slots, all
+    tenants by default) with the SAME ``tenant0..tenant{k-1}`` host
+    trees registered, so any replica can serve any tenant and failover
+    regeneration stays bit-identical.  ``tenant0``'s tree IS the
+    replica's co-training adapter: each publish writes through to its
+    registry slot (``LiveReplica.publish_adapter``)."""
     import jax
 
     from repro.configs.registry import get_config
@@ -271,15 +320,35 @@ def build_fabric(arch: str, n_replicas: int, *, smoke: bool = True,
         cursors[b] = i + 1
         return pools[b][i % train_pool]
 
+    tenant_trees: List[Any] = []
+    if n_adapters > 0:
+        tenant_trees = make_tenant_adapters(model, n_adapters,
+                                            seed=seed + 1)
     fabric = ServingFabric(cfg)
     for i in range(n_replicas):
-        lora = model.init_lora(jax.random.key(seed + 1))
+        if n_adapters > 0:
+            # tenant0's no-op tree doubles as the replica's co-training
+            # adapter — identical on every replica, so mixed placement
+            # and failover keep greedy streams bit-identical
+            lora = tenant_trees[0]
+        else:
+            lora = model.init_lora(jax.random.key(seed + 1))
         opt_state = engine.optimizer.init(lora)
+        registry = None
+        train_tenant = None
+        if n_adapters > 0:
+            from repro.runtime.serving_loop import AdapterRegistry
+            registry = AdapterRegistry(
+                model, capacity=adapter_slots or n_adapters)
+            for t, tree in enumerate(tenant_trees):
+                registry.register(f"tenant{t}", tree)
+            train_tenant = "tenant0"
         fabric.add_replica(LiveReplica(
             f"r{i}", mcfg.name, engine, params, lora, opt_state,
             on_result=fabric.on_result, data_fn=data_fn,
             serve_slots=n_slots, serve_prompt_len=prompt_len,
             max_gen_tokens=gen_tokens, serve_paged=paged,
             serve_block_size=block_size, serve_n_blocks=n_blocks,
-            serve_prefix_cache=prefix_cache))
+            serve_prefix_cache=prefix_cache, adapters=registry,
+            train_tenant=train_tenant))
     return fabric, mcfg

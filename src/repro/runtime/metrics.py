@@ -118,6 +118,13 @@ def aggregate_serve_stats(per_replica: Dict[str, "object"]) -> Dict:
         row["adapter_version"] = int(getattr(s, "adapter_version", 0))
         tl = float(getattr(s, "train_loss", float("nan")))
         row["train_loss"] = tl if tl == tl else None
+        # multi-tenant serving: per-adapter finished-request counts and
+        # the tenant's adapter version at last touch ({} on
+        # single-adapter replicas / pre-registry stats objects)
+        row["adapter_requests"] = dict(
+            getattr(s, "adapter_requests", {}) or {})
+        row["adapter_versions"] = dict(
+            getattr(s, "adapter_versions", {}) or {})
         replicas[rid] = row
         for f in _SERVE_COUNTERS:
             cluster[f] += row[f]
@@ -138,4 +145,24 @@ def aggregate_serve_stats(per_replica: Dict[str, "object"]) -> Dict:
     cluster["adapter_version_max"] = int(max(versions, default=0))
     cluster["train_loss"] = float(np.mean(train_losses)) \
         if train_losses else None
+    # per-adapter cluster rollup: requests summed across replicas,
+    # version spread per tenant (min < max flags a replica serving a
+    # stale copy of that tenant's adapter)
+    adapters: Dict[str, Dict[str, int]] = {}
+    for row in replicas.values():
+        for aid, n in row["adapter_requests"].items():
+            a = adapters.setdefault(
+                aid, {"requests": 0, "version_min": None,
+                      "version_max": None})
+            a["requests"] += int(n)
+        for aid, v in row["adapter_versions"].items():
+            a = adapters.setdefault(
+                aid, {"requests": 0, "version_min": None,
+                      "version_max": None})
+            v = int(v)
+            a["version_min"] = v if a["version_min"] is None \
+                else min(a["version_min"], v)
+            a["version_max"] = v if a["version_max"] is None \
+                else max(a["version_max"], v)
+    cluster["adapters"] = {aid: adapters[aid] for aid in sorted(adapters)}
     return {"replicas": replicas, "cluster": cluster}

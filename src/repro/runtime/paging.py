@@ -237,10 +237,19 @@ class BlockAllocator:
 _ROOT = -1   # parent id of a prompt's first block
 
 
-def _digest(tokens: np.ndarray) -> bytes:
-    """Content hash of one block's tokens (stable across processes)."""
+def _ns_bytes(namespace: Optional[str]) -> bytes:
+    """Tenant salt: a cached block's KV was computed under a specific
+    adapter, so lookups are namespaced per tenant (None = base model)."""
+    return b"" if namespace is None \
+        else namespace.encode("utf-8") + b"\x00"
+
+
+def _digest(tokens: np.ndarray, namespace: Optional[str] = None) -> bytes:
+    """Content hash of one block's tokens (stable across processes),
+    salted by the tenant namespace."""
     return hashlib.blake2b(
-        np.ascontiguousarray(tokens, np.int32).tobytes(),
+        _ns_bytes(namespace)
+        + np.ascontiguousarray(tokens, np.int32).tobytes(),
         digest_size=16).digest()
 
 
@@ -278,14 +287,17 @@ class PrefixCache:
         return len(self._key_of)
 
     # -------------------------------------------------------------- lookup -
-    def match(self, prompt: np.ndarray) -> List[int]:
+    def match(self, prompt: np.ndarray,
+              namespace: Optional[str] = None) -> List[int]:
         """Longest chain of cached blocks covering a block-aligned
         prefix of ``prompt`` — capped so at least ONE prompt token is
         always left to prefill (its logits seed generation).  Pure
         lookup: hit/miss counters are bumped by ``count_admitted`` only
         when an admission actually commits to a (possibly trimmed)
         match, so a backpressured queue head re-matched every tick
-        cannot inflate telemetry."""
+        cannot inflate telemetry.  ``namespace`` scopes the lookup to
+        one tenant's blocks: KV cached under one adapter never serves
+        another tenant's (or the base model's) prompt."""
         bs = self.block_size
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         max_blocks = (len(prompt) - 1) // bs
@@ -293,14 +305,15 @@ class PrefixCache:
         parent = _ROOT
         for i in range(max_blocks):
             chunk = prompt[i * bs:(i + 1) * bs]
-            bid = self._lookup(parent, chunk)
+            bid = self._lookup(parent, chunk, namespace)
             if bid is None:
                 break
             out.append(bid)
             parent = bid
         return out
 
-    def count_admitted(self, prompt: np.ndarray, n_matched: int) -> None:
+    def count_admitted(self, prompt: np.ndarray, n_matched: int,
+                       namespace: Optional[str] = None) -> None:
         """Record hit/miss telemetry for one admitted request:
         ``n_matched`` blocks were aliased, the rest of the prompt's
         matchable blocks had to be prefilled."""
@@ -309,11 +322,13 @@ class PrefixCache:
         self.hits += n_matched
         self.misses += max_blocks - n_matched
 
-    def _lookup(self, parent: int, chunk: np.ndarray) -> Optional[int]:
-        entries = self._table.get((parent, _digest(chunk)))
+    def _lookup(self, parent: int, chunk: np.ndarray,
+                namespace: Optional[str] = None) -> Optional[int]:
+        entries = self._table.get((parent, _digest(chunk, namespace)))
         if not entries:
             return None
-        raw = np.ascontiguousarray(chunk, np.int32).tobytes()
+        raw = _ns_bytes(namespace) \
+            + np.ascontiguousarray(chunk, np.int32).tobytes()
         for token_bytes, bid in entries:
             if token_bytes == raw:   # collision-proof: verify content
                 return bid
@@ -321,7 +336,7 @@ class PrefixCache:
 
     # -------------------------------------------------------- registration -
     def register(self, prompt: np.ndarray, block_ids: Sequence[int],
-                 n_matched: int) -> None:
+                 n_matched: int, namespace: Optional[str] = None) -> None:
         """Register the full prompt blocks of a freshly admitted
         request.  ``block_ids`` is the slot's complete block list
         (matched prefix + fresh suffix); blocks ``n_matched ..
@@ -336,8 +351,9 @@ class PrefixCache:
         for i in range(n_matched, n_full):
             chunk = prompt[i * bs:(i + 1) * bs]
             bid = block_ids[i]
-            key = (parent, _digest(chunk))
-            raw = np.ascontiguousarray(chunk, np.int32).tobytes()
+            key = (parent, _digest(chunk, namespace))
+            raw = _ns_bytes(namespace) \
+                + np.ascontiguousarray(chunk, np.int32).tobytes()
             entries = self._table.setdefault(key, [])
             existing = next((b for tb, b in entries if tb == raw), None)
             if existing is None and bid not in self._key_of:

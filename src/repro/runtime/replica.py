@@ -219,7 +219,8 @@ class SimReplica:
             active_slots=1 if self.busy_until > now else 0,
             total_slots=1)
 
-    def prefix_affinity(self, prompt: Any) -> int:
+    def prefix_affinity(self, prompt: Any,
+                        adapter_id: Optional[str] = None) -> int:
         return 0    # analytic latencies never look at prompt content
 
     def reclaim_queued(self, max_n: int, now: float) -> List[Request]:
@@ -382,7 +383,9 @@ class LiveReplica:
                  max_gen_tokens: int = 8, serve_paged: bool = False,
                  serve_block_size: int = 16,
                  serve_n_blocks: Optional[int] = None,
-                 serve_prefix_cache: bool = False):
+                 serve_prefix_cache: bool = False,
+                 adapters: Any = None,
+                 train_tenant: Optional[str] = None):
         from repro.runtime.serving_loop import ContinuousBatcher
         self.replica_id = replica_id
         self.model_id = model_id
@@ -414,12 +417,19 @@ class LiveReplica:
         self._busy_log: Deque[Tuple[float, float]] = collections.deque(
             maxlen=1024)
         self._busy_window = 2.0
+        # multi-tenant serving: the AdapterRegistry routing decode rows
+        # per tenant, and which tenant mirrors the co-training adapter
+        # (publish_adapter/set_adapter write through to its registry
+        # entry so its requests see each published round)
+        self.adapters = adapters
+        self.train_tenant = train_tenant
         self.batcher = ContinuousBatcher(
             engine, params, lora, n_slots=serve_slots,
             max_seq=serve_prompt_len + max_gen_tokens,
             prompt_pad=serve_prompt_len, opt_state=opt_state,
             paged=serve_paged, block_size=serve_block_size,
-            n_blocks=serve_n_blocks, prefix_cache=serve_prefix_cache)
+            n_blocks=serve_n_blocks, prefix_cache=serve_prefix_cache,
+            adapters=adapters)
         from repro.runtime.serving_loop import _engine_jits
         self._jit_loss = _engine_jits(engine)["loss"]
 
@@ -473,7 +483,8 @@ class LiveReplica:
                 g = GenRequest(
                     request_id=self._gen_counter, prompt=prompt,
                     max_new_tokens=min(r.tokens, self.max_gen_tokens),
-                    arrival=now, temperature=r.temperature,
+                    arrival=now, adapter_id=r.adapter_id,
+                    temperature=r.temperature,
                     top_k=r.top_k, top_p=r.top_p,
                     # seed from the CONTROL-plane id, never the
                     # per-replica gen counter: sampled streams must not
@@ -620,6 +631,8 @@ class LiveReplica:
             total_slots=b.n_slots,
             # one wave decoding + one wave queued behind it
             admit_capacity=max(2 * b.n_slots - active - committed, 0))
+        if b.adapters is not None:
+            p.resident_adapters = b.adapters.resident_ids()
         if b.paged:
             p.free_blocks = max(b.allocator.available(), 0)
             p.reserved_blocks = b.allocator.reserved
@@ -628,9 +641,12 @@ class LiveReplica:
                 p.cached_blocks = len(b.prefix_cache)
         return p
 
-    def prefix_affinity(self, prompt: Any) -> int:
+    def prefix_affinity(self, prompt: Any,
+                        adapter_id: Optional[str] = None) -> int:
         """Prompt tokens this replica's prefix cache would serve without
-        prefill — the dispatcher routes matching requests here."""
+        prefill — the dispatcher routes matching requests here.  The
+        lookup is scoped to ``adapter_id``'s namespace (cached KV is
+        adapter-specific, so another tenant's blocks never count)."""
         pc = self.batcher.prefix_cache
         if pc is None or prompt is None or len(pc) == 0:
             # empty-cache early-out: the dispatcher probes affinity per
@@ -638,7 +654,8 @@ class LiveReplica:
             # until something is actually registered
             return 0
         prompt = np.asarray(prompt, np.int32).reshape(-1)
-        return len(pc.match(prompt[:self.serve_prompt_len])) \
+        return len(pc.match(prompt[:self.serve_prompt_len],
+                            namespace=adapter_id)) \
             * self.batcher.block_size
 
     # ------------------------------------------------ elastic / failover ---
@@ -710,6 +727,7 @@ class LiveReplica:
         self.adapter_version = version
         self.batcher.train_lora = None
         self.batcher.stats.adapter_version = version
+        self._mirror_train_tenant()
 
     def get_adapter(self) -> Any:
         return self.lora
@@ -781,7 +799,17 @@ class LiveReplica:
                 self._last_loss = self.batcher.train_losses[-1]
             self.adapter_version += 1
             self.batcher.stats.adapter_version = self.adapter_version
+            self._mirror_train_tenant()
         return self.adapter_version
+
+    def _mirror_train_tenant(self) -> None:
+        """Write the freshly published co-training adapter through to
+        its registry tenant: resident slot rewritten in place, so every
+        in-flight row of that tenant reads the new version on its next
+        tick while other tenants' tokens stay bit-identical."""
+        if self.adapters is not None and self.train_tenant is not None:
+            self.adapters.update(self.train_tenant, self.lora,
+                                 version=self.adapter_version)
 
     def abort_round(self, now: float) -> None:
         """§8.2 load-surge suspension: drop the session and the shadow

@@ -126,6 +126,9 @@ class GenRequest:
     prompt: np.ndarray                  # [P] int32 token ids
     max_new_tokens: int = 16
     arrival: float = 0.0
+    # multi-tenant serving: which registered adapter this request's
+    # tokens flow through (None = the base model / single-adapter mode)
+    adapter_id: Optional[str] = None
     # sampling: temperature <= 0 is exact greedy (the argmax fast path,
     # no host logits transfer); top_k/top_p filter before the softmax;
     # ``seed`` makes the sampled stream reproducible per request
@@ -201,9 +204,190 @@ class ServeStats:
     # until the replica has trained at all
     adapter_version: int = 0
     train_loss: float = float("nan")
+    # multi-tenant telemetry: per-adapter finished-request counts and
+    # the version each tenant's adapter was serving at last touch (the
+    # legacy scalar above tracks only the co-training tenant)
+    adapter_requests: Dict[str, int] = dataclasses.field(
+        default_factory=dict)
+    adapter_versions: Dict[str, int] = dataclasses.field(
+        default_factory=dict)
 
     def throughput(self) -> float:
         return self.generated_tokens / max(self.wall_time, 1e-9)
+
+
+class AdapterError(RuntimeError):
+    """Misuse of the AdapterRegistry (unknown id, double free, ...)."""
+
+
+class OutOfAdapterSlots(AdapterError):
+    """Every device slot is pinned by in-flight requests."""
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _write_adapter_slot(stack, tree, slot):
+    """Overwrite device slot ``slot`` of a stacked multi-adapter tree
+    (leaves [L, A, din, r]) with a single-adapter tree's leaves — one
+    traced program for every slot index."""
+    return jax.tree.map(
+        lambda stk, leaf: stk.at[:, slot].set(leaf.astype(stk.dtype)),
+        stack, tree)
+
+
+class AdapterRegistry:
+    """Per-replica multi-tenant adapter residency: every registered
+    tenant keeps a HOST copy of its LoRA tree; up to ``capacity`` of
+    them are DEVICE-resident in one stacked tree (leaves
+    ``[L, capacity, din, r]``) that the decode wave indexes per row
+    (``segmented`` paths in models/).
+
+    Residency is refcounted like the paged pool's ``BlockAllocator``:
+    ``acquire`` pins a tenant's slot for the lifetime of a request
+    (loading it from host into a free slot on a miss), ``release``
+    unpins it, and refcount-0 residents park in an LRU retained list —
+    still servable at hit cost zero — until a miss needs their slot
+    (cold-adapter eviction).  ``update`` rewrites a resident tenant's
+    slot in place, which is what makes ``publish_adapter`` an atomic
+    swap under co-training: in-flight rows keep reading the slot and
+    simply see the new version on their next tick, exactly like the
+    single-tenant pointer swap.
+
+    Free/evicted slots are zero-filled at init and overwritten on load,
+    so the stacked tensors stay finite — a requirement of the fused
+    segmented kernel, whose concatenated B contraction touches every
+    slot's columns (masked rows contribute exact zeros, not NaN)."""
+
+    def __init__(self, model, capacity: int):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        specs = model.lora_specs()
+        self._stack = jax.tree.map(
+            lambda s: jnp.zeros((s.shape[0], capacity) + s.shape[1:],
+                                s.dtype), specs)
+        self._host: Dict[str, Any] = {}
+        self._version: Dict[str, int] = {}
+        self._slot: Dict[str, int] = {}        # resident tenants only
+        self._refs: Dict[str, int] = {}        # resident tenants only
+        self._free: List[int] = list(range(capacity))
+        # refcount-0 residents, oldest first (the LRU retained pool)
+        self._lru: "collections.OrderedDict[str, int]" = \
+            collections.OrderedDict()
+        self.hits = 0
+        self.loads = 0
+        self.evictions = 0
+
+    # ---------------------------------------------------------- tenants --
+    def register(self, adapter_id: str, tree: Any,
+                 version: int = 0) -> None:
+        """Add (or overwrite) a tenant's host-resident adapter tree."""
+        if adapter_id in self._slot:
+            raise AdapterError(
+                f"{adapter_id}: already registered and resident — use "
+                "update() to change a live tenant's weights")
+        self._host[adapter_id] = tree
+        self._version[adapter_id] = version
+
+    def unregister(self, adapter_id: str) -> None:
+        if self.refcount(adapter_id) > 0:
+            raise AdapterError(
+                f"{adapter_id}: unregister with {self.refcount(adapter_id)} "
+                "in-flight refs")
+        if adapter_id in self._slot:
+            self._free.append(self._slot.pop(adapter_id))
+            self._refs.pop(adapter_id, None)
+            self._lru.pop(adapter_id, None)
+        self._host.pop(adapter_id, None)
+        self._version.pop(adapter_id, None)
+
+    def is_registered(self, adapter_id: str) -> bool:
+        return adapter_id in self._host
+
+    def registered(self) -> List[str]:
+        return sorted(self._host)
+
+    def host_tree(self, adapter_id: str) -> Any:
+        return self._host[adapter_id]
+
+    def version(self, adapter_id: str) -> int:
+        return self._version.get(adapter_id, 0)
+
+    # -------------------------------------------------------- residency --
+    def refcount(self, adapter_id: str) -> int:
+        return self._refs.get(adapter_id, 0)
+
+    def slot_index(self, adapter_id: str) -> int:
+        """Device slot of a resident tenant, -1 otherwise."""
+        return self._slot.get(adapter_id, -1)
+
+    def resident_ids(self) -> tuple:
+        return tuple(sorted(self._slot))
+
+    def can_acquire(self, adapter_id: str) -> bool:
+        if not self.is_registered(adapter_id):
+            return False
+        return adapter_id in self._slot or bool(self._free) \
+            or bool(self._lru)
+
+    def acquire(self, adapter_id: str) -> int:
+        """Pin ``adapter_id``'s device slot (+1 ref), loading it from
+        host on a miss — evicting the LRU cold tenant if no slot is
+        free.  Raises ``OutOfAdapterSlots`` when every slot is pinned."""
+        if not self.is_registered(adapter_id):
+            raise AdapterError(f"{adapter_id}: not registered")
+        slot = self._slot.get(adapter_id)
+        if slot is not None:
+            self.hits += 1
+            self._lru.pop(adapter_id, None)
+            self._refs[adapter_id] = self._refs.get(adapter_id, 0) + 1
+            return slot
+        if self._free:
+            slot = self._free.pop()
+        elif self._lru:
+            cold, slot = self._lru.popitem(last=False)
+            del self._slot[cold]
+            self._refs.pop(cold, None)
+            self.evictions += 1
+        else:
+            raise OutOfAdapterSlots(
+                f"{adapter_id}: all {self.capacity} adapter slots are "
+                "pinned by in-flight requests")
+        self._stack = _write_adapter_slot(
+            self._stack, self._host[adapter_id],
+            jnp.asarray(slot, jnp.int32))
+        self.loads += 1
+        self._slot[adapter_id] = slot
+        self._refs[adapter_id] = 1
+        return slot
+
+    def release(self, adapter_id: str) -> None:
+        refs = self._refs.get(adapter_id, 0)
+        if refs <= 0:
+            raise AdapterError(f"{adapter_id}: release without acquire")
+        refs -= 1
+        self._refs[adapter_id] = refs
+        if refs == 0:
+            # stays resident (warm) until a miss needs the slot
+            self._lru[adapter_id] = self._slot[adapter_id]
+
+    def update(self, adapter_id: str, tree: Any,
+               version: Optional[int] = None) -> None:
+        """Swap a tenant's weights: host copy always, device slot in
+        place when resident — the atomic publish under co-training
+        (in-flight rows read the new weights on their next tick)."""
+        if not self.is_registered(adapter_id):
+            raise AdapterError(f"{adapter_id}: not registered")
+        self._host[adapter_id] = tree
+        if version is not None:
+            self._version[adapter_id] = version
+        slot = self._slot.get(adapter_id)
+        if slot is not None:
+            self._stack = _write_adapter_slot(
+                self._stack, tree, jnp.asarray(slot, jnp.int32))
+
+    def device_lora(self) -> Any:
+        """The stacked device tree the segmented decode paths consume."""
+        return self._stack
 
 
 class ContinuousBatcher:
@@ -224,6 +408,17 @@ class ContinuousBatcher:
     With ``train_lora`` unset, training updates ``self.lora`` in place
     (the single-replica ``--combined`` behaviour, continuous
     adaptation per tick).
+
+    Multi-tenant mode: pass an ``AdapterRegistry`` as ``adapters`` and
+    route requests by ``GenRequest.adapter_id``.  Every prefill/decode
+    then reads the registry's STACKED device tree with a per-row slot
+    index (the segmented model paths), so one wave mixes tenants;
+    admission pins each request's adapter (refcount+1, loading it on a
+    miss) and eviction unpins it.  ``adapter_id=None`` rows serve the
+    bare base model (slot -1).  The co-training pair is orthogonal:
+    ``self.lora``/``train_lora`` stay the published/shadow trees of the
+    co-train tenant, and the owner mirrors publishes into the registry
+    (``LiveReplica.publish_adapter``).
     """
 
     def __init__(self, engine, params, lora, *, n_slots: int = 8,
@@ -232,7 +427,8 @@ class ContinuousBatcher:
                  paged: bool = False, block_size: int = 16,
                  n_blocks: Optional[int] = None,
                  prefix_cache: bool = False,
-                 attn_backend: Optional[str] = None):
+                 attn_backend: Optional[str] = None,
+                 adapters: Optional[AdapterRegistry] = None):
         cfg = engine.model.cfg
         if n_slots < 1:
             # run() makes progress only through slots; zero would spin
@@ -254,12 +450,18 @@ class ContinuousBatcher:
                 f"{cfg.name}: prompt_pad {prompt_pad} exceeds the "
                 f"attention window {cfg.sliding_window}; windowed "
                 "prompt eviction at admission is not implemented")
+        if adapters is not None and cfg.has_ssm:
+            raise NotImplementedError(
+                f"{cfg.name}: multi-tenant adapter serving needs the "
+                "ragged attention paths (SSM prefill is exact-length "
+                "per request)")
         self.engine = engine
         self.model = engine.model
         self.cfg = cfg
         self.params = params
         self.lora = lora
         self.opt_state = opt_state
+        self.adapters = adapters
         self.n_slots = n_slots
         self.max_seq = max_seq
         self.prompt_pad = min(prompt_pad, max_seq)
@@ -333,6 +535,9 @@ class ContinuousBatcher:
         self.slot_req: List[Optional[GenRequest]] = [None] * n_slots
         self.slot_pos = np.zeros(n_slots, np.int32)   # next write position
         self.slot_tok = np.zeros(n_slots, np.int32)   # next token to feed
+        # registry mode: the adapter id each slot's request pinned at
+        # admission (None = base-only row, decode slot index -1)
+        self.slot_aid: List[Optional[str]] = [None] * n_slots
         self.stats = ServeStats()
         self.train_losses: List[float] = []
         # shadow adapter for double-buffered train sessions (None = train
@@ -363,6 +568,16 @@ class ContinuousBatcher:
         req.prompt = np.asarray(req.prompt, np.int32).reshape(-1)
         assert len(req.prompt) <= self.prompt_pad, \
             f"prompt len {len(req.prompt)} > prompt_pad {self.prompt_pad}"
+        if req.adapter_id is not None:
+            if self.adapters is None:
+                raise AdapterError(
+                    f"request {req.request_id} names adapter "
+                    f"{req.adapter_id!r} but this batcher has no "
+                    "AdapterRegistry")
+            if not self.adapters.is_registered(req.adapter_id):
+                raise AdapterError(
+                    f"request {req.request_id}: adapter "
+                    f"{req.adapter_id!r} is not registered")
         # a slot holds prompt + generation; clamp so writes stay in-pool
         budget = self.max_seq - len(req.prompt)
         req.max_new_tokens = max(1, min(req.max_new_tokens, budget))
@@ -387,6 +602,36 @@ class ContinuousBatcher:
         tokens = min(len(req.prompt) + req.max_new_tokens - 1,
                      self.ring_len)
         return blocks_for(tokens, self.block_size)
+
+    # ---------------------------------------------------- adapter routing --
+    def _serve_lora(self) -> Any:
+        """The tree every prefill/decode reads: the registry's stacked
+        device tree in multi-tenant mode, the single published adapter
+        otherwise."""
+        return self.adapters.device_lora() if self.adapters is not None \
+            else self.lora
+
+    def _wave_adapter_idx(self, reqs: List[GenRequest]):
+        """Per-row registry slots for a prefill wave (requests were
+        pinned at admission, so slots are stable); None without a
+        registry."""
+        if self.adapters is None:
+            return None
+        return jnp.asarray(
+            [self.adapters.slot_index(r.adapter_id)
+             if r.adapter_id is not None else -1 for r in reqs],
+            jnp.int32)
+
+    def _record_finish(self, req: GenRequest, now: float) -> None:
+        req.finished_at = now
+        req.finished_wall = time.perf_counter()
+        self.stats.finished += 1
+        if req.adapter_id is not None:
+            self.stats.adapter_requests[req.adapter_id] = \
+                self.stats.adapter_requests.get(req.adapter_id, 0) + 1
+            if self.adapters is not None:
+                self.stats.adapter_versions[req.adapter_id] = \
+                    self.adapters.version(req.adapter_id)
 
     def _prefill_wave(self, reqs: List[GenRequest],
                       plans: Optional[List] = None):
@@ -429,9 +674,11 @@ class ContinuousBatcher:
                 padded[j, :suf_lens[j]] = r.prompt[pre_lens[j]:]
                 pre_tables[j, :len(matched[j])] = matched[j]
             logits, pre = self._jit_prefill_suffix(
-                self.params, self.lora, {"tokens": jnp.asarray(padded)},
+                self.params, self._serve_lora(),
+                {"tokens": jnp.asarray(padded)},
                 jnp.asarray(suf_lens), jnp.asarray(pre_lens),
-                self.caches, jnp.asarray(pre_tables))
+                self.caches, jnp.asarray(pre_tables),
+                self._wave_adapter_idx(reqs))
             firsts = np.asarray(jnp.argmax(logits[:, -1], axis=-1),
                                 np.int32)
             return firsts, [(pre, j) for j in range(len(reqs))], \
@@ -440,8 +687,9 @@ class ContinuousBatcher:
         for j, r in enumerate(reqs):
             padded[j, :lens[j]] = r.prompt
         logits, pre = self._jit_prefill_ragged(
-            self.params, self.lora, {"tokens": jnp.asarray(padded)},
-            jnp.asarray(lens))
+            self.params, self._serve_lora(),
+            {"tokens": jnp.asarray(padded)}, jnp.asarray(lens),
+            adapter_idx=self._wave_adapter_idx(reqs))
         firsts = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
         return firsts, [(pre, j) for j in range(len(reqs))], logits[:, -1]
 
@@ -463,9 +711,17 @@ class ContinuousBatcher:
         # per admitted request: (matched block chain, blocks reserved)
         plans: List = []
         while len(reqs) < len(free) and self.queue:
+            head = self.queue[0]
+            if self.adapters is not None and head.adapter_id is not None \
+                    and not self.adapters.can_acquire(head.adapter_id):
+                # every adapter slot is pinned by in-flight requests —
+                # FCFS waits for a release, mirroring the paged pool's
+                # preemption-free backpressure
+                break
             if self.paged:
                 req = self.queue[0]
-                matched = self.prefix_cache.match(req.prompt) \
+                matched = self.prefix_cache.match(
+                    req.prompt, namespace=req.adapter_id) \
                     if self.prefix_cache is not None else []
                 worst = self._worst_blocks(req)
 
@@ -493,10 +749,16 @@ class ContinuousBatcher:
                 self.allocator.acquire(matched)
                 self.allocator.reserve(need)
                 if self.prefix_cache is not None:
-                    self.prefix_cache.count_admitted(req.prompt,
-                                                     len(matched))
+                    self.prefix_cache.count_admitted(
+                        req.prompt, len(matched),
+                        namespace=req.adapter_id)
                 plans.append((matched, need))
-            reqs.append(self.queue.popleft())
+            req = self.queue.popleft()
+            if self.adapters is not None and req.adapter_id is not None:
+                # pin the tenant's device slot for the request lifetime
+                # (loads from host on a miss; can_acquire gated above)
+                self.adapters.acquire(req.adapter_id)
+            reqs.append(req)
         if not reqs:
             return finished
         firsts, entries, last_logits = self._prefill_wave(
@@ -540,9 +802,10 @@ class ContinuousBatcher:
                     or first == self.eos_id:
                 # done at admission: never occupies the slot, so skip
                 # the cache write entirely and drop the aliased prefix
-                req.finished_at = now
-                req.finished_wall = time.perf_counter()
-                self.stats.finished += 1
+                self._record_finish(req, now)
+                if self.adapters is not None \
+                        and req.adapter_id is not None:
+                    self.adapters.release(req.adapter_id)
                 if self.paged:
                     self.allocator.release(reserved)
                     if matched:
@@ -568,7 +831,8 @@ class ContinuousBatcher:
                     > self.ring_len
                 if self.prefix_cache is not None and not wraps:
                     self.prefix_cache.register(
-                        req.prompt, self.slot_blocks[slot], len(matched))
+                        req.prompt, self.slot_blocks[slot], len(matched),
+                        namespace=req.adapter_id)
                 self._dev_tables = None
             elif batched:
                 wave_slots[src] = slot
@@ -577,6 +841,7 @@ class ContinuousBatcher:
                                               slot, src)
             admitted_rows += 1
             self.slot_req[slot] = req
+            self.slot_aid[slot] = req.adapter_id
             self.slot_pos[slot] = len(req.prompt)
             self.slot_tok[slot] = first
         if admitted_rows and self.paged:
@@ -661,6 +926,22 @@ class ContinuousBatcher:
             return finished
         toks = jnp.asarray(self.slot_tok[:, None])
         pos = jnp.asarray(self.slot_pos)
+        # registry mode: per-slot device adapter slots for the segmented
+        # decode paths (inactive / base-only rows select -1 -> bitwise
+        # base output); without a registry the kwargs stay absent so the
+        # single-adapter traces are untouched
+        if self.adapters is not None:
+            idx = np.full(self.n_slots, -1, np.int32)
+            for i in active:
+                aid = self.slot_aid[i]
+                if aid is not None:
+                    idx[i] = self.adapters.slot_index(aid)
+            serve_idx = jnp.asarray(idx)
+            dec_kw = {"adapter_idx": serve_idx}
+            comb_kw = {"serve_adapter_idx": serve_idx}
+        else:
+            dec_kw = {}
+            comb_kw = {}
         if self.paged:
             self._grow_tables(active)
             width = self._table_width(active)
@@ -676,27 +957,28 @@ class ContinuousBatcher:
                  metrics) = self._jit_combined_paged(
                     self.params, self._train_adapter(), self.opt_state,
                     train_batch, self.caches, toks, pos, tables,
-                    ring_len=self.ring_len, serve_lora=self.lora,
+                    ring_len=self.ring_len, serve_lora=self._serve_lora(),
                     attn_backend=self.attn_backend,
-                    grad_accum=self.train_grad_accum)
+                    grad_accum=self.train_grad_accum, **comb_kw)
             else:
                 (new_tl, self.opt_state, logits, self.caches,
                  metrics) = self._jit_combined(
                     self.params, self._train_adapter(), self.opt_state,
                     train_batch, self.caches, toks, pos,
-                    serve_lora=self.lora,
+                    serve_lora=self._serve_lora(),
                     attn_backend=self.attn_backend,
-                    grad_accum=self.train_grad_accum)
+                    grad_accum=self.train_grad_accum, **comb_kw)
             self._store_trained(new_tl)
             self._record_train(metrics)
         elif self.paged:
             logits, self.caches = self._jit_decode_paged(
-                self.params, self.lora, self.caches, toks, pos, tables,
-                ring_len=self.ring_len, attn_backend=self.attn_backend)
+                self.params, self._serve_lora(), self.caches, toks, pos,
+                tables, ring_len=self.ring_len,
+                attn_backend=self.attn_backend, **dec_kw)
         else:
             logits, self.caches = self._jit_decode(
-                self.params, self.lora, self.caches, toks, pos,
-                attn_backend=self.attn_backend)
+                self.params, self._serve_lora(), self.caches, toks, pos,
+                attn_backend=self.attn_backend, **dec_kw)
         self.stats.decode_steps += 1
         nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
         if any(self.slot_req[i].samples for i in active):
@@ -720,9 +1002,7 @@ class ContinuousBatcher:
             self.slot_tok[i] = nxt[i]
             if len(req.tokens) >= req.max_new_tokens \
                     or int(nxt[i]) == self.eos_id:
-                req.finished_at = now
-                req.finished_wall = time.perf_counter()
-                self.stats.finished += 1
+                self._record_finish(req, now)
                 self._evict(i)
                 finished.append(req)
         return finished
@@ -735,6 +1015,11 @@ class ContinuousBatcher:
         self.slot_req[i] = None
         self.slot_pos[i] = 0
         self.slot_tok[i] = 0
+        if self.slot_aid[i] is not None:
+            # unpin the request's adapter — without this the registry
+            # leaks a ref per request and eventually deadlocks admission
+            self.adapters.release(self.slot_aid[i])
+            self.slot_aid[i] = None
         if self.paged:
             self.allocator.free(self.slot_blocks[i])
             self.slot_blocks[i] = []

@@ -49,7 +49,7 @@ class FakeLiveReplica(FakeReplica):
             free_blocks=self.free_blocks,
             pool_blocks=self.pool_blocks)
 
-    def prefix_affinity(self, prompt):
+    def prefix_affinity(self, prompt, adapter_id=None):
         return self.affinity_tokens if prompt is not None else 0
 
     def reclaim_queued(self, max_n, now):

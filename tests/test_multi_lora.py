@@ -1,0 +1,315 @@
+"""Multi-LoRA multi-tenant serving: batched segmented kernel parity,
+AdapterRegistry residency/refcount invariants, mixed-tenant decode
+equivalence, publish isolation, and the control-plane surfaces
+(dispatcher adapter-affinity routing, failover re-registration,
+per-adapter stats aggregation)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import sample_prompts as _prompts
+from repro.configs.registry import get_config
+from repro.core.engine import make_engine
+from repro.data.synthetic import SyntheticDataset
+from repro.kernels import ops, ref
+from repro.runtime.fabric import make_tenant_adapters
+from repro.runtime.serving_loop import (
+    AdapterError, AdapterRegistry, ContinuousBatcher, GenRequest,
+    OutOfAdapterSlots,
+)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("qwen1.5-0.5b").scaled()
+    engine = make_engine(cfg, lr=3e-3)
+    model = engine.model
+    params = model.init(jax.random.key(0))
+    tenants = make_tenant_adapters(model, 3, seed=1)
+    return cfg, engine, model, params, tenants
+
+
+def _registry(model, tenants, capacity):
+    reg = AdapterRegistry(model, capacity=capacity)
+    for t, tree in enumerate(tenants):
+        reg.register(f"tenant{t}", tree)
+    return reg
+
+
+# ------------------------------------------------------ kernel parity ------
+@pytest.mark.parametrize("m,k,n,r,A", [(128, 256, 128, 8, 3),
+                                       (256, 128, 256, 16, 2),
+                                       (128, 128, 128, 4, 5)])
+def test_segmented_kernel_parity(m, k, n, r, A):
+    """Interpret-mode segmented kernel == pure-jnp oracle over mixed
+    rows (every adapter present plus disabled rows)."""
+    ks = jax.random.split(jax.random.key(0), 4)
+    x = jax.random.normal(ks[0], (m, k), jnp.float32)
+    w = jax.random.normal(ks[1], (k, n), jnp.float32) * 0.05
+    a = jax.random.normal(ks[2], (A, k, r), jnp.float32) * 0.05
+    b = jax.random.normal(ks[3], (A, r, n), jnp.float32) * 0.05
+    idx = jnp.asarray(np.random.default_rng(1).integers(-1, A, m),
+                      jnp.int32)
+    y = ops.segmented_lora_matmul(x, w, a, b, idx, 2.0, force_kernel=True)
+    yr = ref.segmented_lora_matmul(x, w, a, b, idx, 2.0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_segmented_disabled_rows_bitwise_base():
+    """Rows with adapter_idx < 0 must return the pure base product
+    BITWISE — garbage (even NaN, on the oracle path) in adapter slots
+    never leaks into disabled rows.  This is what lets single-adapter
+    and multi-tenant traces share one compiled program."""
+    m, k, n, r, A = 128, 128, 128, 8, 3
+    ks = jax.random.split(jax.random.key(2), 2)
+    x = jax.random.normal(ks[0], (m, k), jnp.float32)
+    w = jax.random.normal(ks[1], (k, n), jnp.float32) * 0.05
+    base = np.asarray(
+        (x.astype(jnp.float32) @ w.astype(jnp.float32)).astype(x.dtype))
+    idx = jnp.asarray([i % A if i % 2 == 0 else -1 for i in range(m)],
+                      jnp.int32)
+    off = np.asarray(idx) < 0
+
+    # oracle path: NaN poison (select happens AFTER the einsum)
+    a_nan = jnp.full((A, k, r), jnp.nan, jnp.float32)
+    b_nan = jnp.full((A, r, n), jnp.nan, jnp.float32)
+    y = np.asarray(ops.segmented_lora_matmul(x, w, a_nan, b_nan, idx, 2.0))
+    np.testing.assert_array_equal(y[off], base[off])
+
+    # kernel path: finite poison (masked before the B matmul)
+    a_big = jnp.full((A, k, r), 1e6, jnp.float32)
+    b_big = jnp.full((A, r, n), 1e6, jnp.float32)
+    y = np.asarray(ops.segmented_lora_matmul(x, w, a_big, b_big, idx, 2.0,
+                                             force_kernel=True))
+    np.testing.assert_array_equal(y[off], base[off])
+    assert np.isfinite(y).all()
+
+
+def test_rank0_all_disabled_is_base_matmul():
+    """An all-disabled wave (every idx = -1) is the single-adapter
+    fast path: bitwise-identical to x @ w regardless of stack contents."""
+    m, k, n = 128, 128, 128
+    ks = jax.random.split(jax.random.key(3), 2)
+    x = jax.random.normal(ks[0], (m, k), jnp.float32)
+    w = jax.random.normal(ks[1], (k, n), jnp.float32) * 0.05
+    idx = jnp.full((m,), -1, jnp.int32)
+    a = jnp.full((2, k, 4), jnp.nan, jnp.float32)
+    b = jnp.full((2, 4, n), jnp.nan, jnp.float32)
+    base = np.asarray(
+        (x.astype(jnp.float32) @ w.astype(jnp.float32)).astype(x.dtype))
+    for force in (False, True):
+        stacks = (a, b) if not force else \
+            (jnp.zeros_like(a), jnp.zeros_like(b))
+        y = np.asarray(ops.segmented_lora_matmul(
+            x, w, *stacks, idx, 2.0, force_kernel=force))
+        np.testing.assert_array_equal(y, base)
+
+
+# -------------------------------------------------- registry invariants ----
+def test_registry_refcount_lru_eviction(setup):
+    cfg, engine, model, params, tenants = setup
+    reg = _registry(model, tenants, capacity=2)
+    assert reg.registered() == ["tenant0", "tenant1", "tenant2"]
+    assert reg.resident_ids() == ()          # residency is lazy
+
+    s0 = reg.acquire("tenant0")
+    assert reg.refcount("tenant0") == 1 and reg.slot_index("tenant0") == s0
+    reg.acquire("tenant0")
+    assert reg.refcount("tenant0") == 2 and reg.hits == 1
+    reg.acquire("tenant1")
+    assert reg.resident_ids() == ("tenant0", "tenant1")
+
+    # every slot pinned: tenant2 cannot be admitted, and acquire raises
+    assert not reg.can_acquire("tenant2")
+    with pytest.raises(OutOfAdapterSlots):
+        reg.acquire("tenant2")
+
+    # releasing tenant1 leaves it warm (LRU) — tenant2 now evicts it
+    reg.release("tenant1")
+    assert reg.refcount("tenant1") == 0
+    assert reg.resident_ids() == ("tenant0", "tenant1")
+    assert reg.can_acquire("tenant2")
+    reg.acquire("tenant2")
+    assert reg.evictions == 1
+    assert reg.resident_ids() == ("tenant0", "tenant2")
+
+    # re-acquiring the evicted tenant reloads from host
+    reg.release("tenant2")
+    loads = reg.loads
+    reg.acquire("tenant1")
+    assert reg.loads == loads + 1
+
+
+def test_registry_register_update_guards(setup):
+    cfg, engine, model, params, tenants = setup
+    reg = _registry(model, tenants, capacity=2)
+    reg.acquire("tenant0")
+    with pytest.raises(AdapterError):
+        reg.register("tenant0", tenants[0])   # resident: must use update
+    with pytest.raises(AdapterError):
+        reg.unregister("tenant0")             # pinned by an in-flight ref
+    reg.update("tenant0", tenants[1], version=7)
+    assert reg.version("tenant0") == 7
+    assert reg.refcount("tenant0") == 1       # publish never drops refs
+    reg.release("tenant0")
+    reg.unregister("tenant0")
+    assert not reg.is_registered("tenant0")
+
+
+# ------------------------------------------------ mixed-tenant serving -----
+def _serve(engine, params, lora, prompts, gen, *, registry=None,
+           adapter_ids=None, n_slots=4):
+    pad = max(len(p) for p in prompts)
+    b = ContinuousBatcher(engine, params, lora, n_slots=n_slots,
+                          max_seq=pad + gen, prompt_pad=pad,
+                          adapters=registry)
+    reqs = [GenRequest(request_id=i, prompt=np.asarray(p, np.int32),
+                       max_new_tokens=gen,
+                       adapter_id=adapter_ids[i] if adapter_ids else None)
+            for i, p in enumerate(prompts)]
+    stats = b.run(reqs)
+    return b, reqs, stats
+
+
+def test_mixed_vs_solo_bit_identity(setup):
+    """One mixed wave (base + 3 tenants sharing slots) must emit tokens
+    bit-identical to each tenant served alone with its tree as the
+    plain single-adapter ``lora`` — the segmented path adds tenancy,
+    never drift."""
+    cfg, engine, model, params, tenants = setup
+    prompts = _prompts(cfg, 4, [8, 8, 8, 8])
+    aids = [None, "tenant0", "tenant1", "tenant2"]
+    reg = _registry(model, tenants, capacity=3)
+    _, mixed, stats = _serve(engine, params, tenants[0], prompts, 6,
+                             registry=reg, adapter_ids=aids)
+    assert all(r.done for r in mixed)
+    # tenants diverge (the registry trees are deliberately distinct)
+    assert mixed[1].tokens != mixed[2].tokens
+    assert mixed[2].tokens != mixed[3].tokens
+    for i, aid in enumerate(aids):
+        tree = model.init_lora(jax.random.key(9)) if aid is None \
+            else tenants[int(aid[-1])]
+        _, solo, _ = _serve(engine, params, tree, [prompts[i]], 6)
+        assert solo[0].tokens == mixed[i].tokens, \
+            f"{aid or 'base'}: mixed wave drifted from solo serving"
+    assert stats.adapter_requests == {"tenant0": 1, "tenant1": 1,
+                                      "tenant2": 1}
+
+
+def test_batcher_releases_refs_on_drain(setup):
+    """Slot eviction must hand adapter refs back: leaked refs would pin
+    slots forever and deadlock admission behind can_acquire."""
+    cfg, engine, model, params, tenants = setup
+    prompts = _prompts(cfg, 6, [8] * 6)
+    aids = [f"tenant{i % 3}" for i in range(6)]
+    reg = _registry(model, tenants, capacity=3)
+    b, reqs, stats = _serve(engine, params, tenants[0], prompts, 4,
+                            registry=reg, adapter_ids=aids, n_slots=3)
+    assert stats.finished == 6
+    assert all(reg.refcount(f"tenant{t}") == 0 for t in range(3))
+    assert all(aid is None for aid in b.slot_aid)
+    assert stats.adapter_requests == {"tenant0": 2, "tenant1": 2,
+                                      "tenant2": 2}
+
+
+def test_capacity_backpressure_evicts_and_serves_all(setup):
+    """More tenants than device slots: admission backpressures on
+    can_acquire, the LRU rotates residency, and every request still
+    finishes with the right tenant's weights."""
+    cfg, engine, model, params, tenants = setup
+    prompts = _prompts(cfg, 6, [8] * 6)
+    aids = [f"tenant{i % 3}" for i in range(6)]
+    reg = _registry(model, tenants, capacity=2)
+    _, reqs, stats = _serve(engine, params, tenants[0], prompts, 4,
+                            registry=reg, adapter_ids=aids, n_slots=2)
+    assert stats.finished == 6
+    assert reg.evictions > 0
+    assert all(reg.refcount(f"tenant{t}") == 0 for t in range(3))
+
+
+def test_publish_isolation_across_update(setup):
+    """Rewriting one tenant's slot (the publish path) must not perturb
+    any other tenant's greedy stream."""
+    cfg, engine, model, params, tenants = setup
+    prompts = _prompts(cfg, 1, [8]) * 2      # same prompt, two tenants
+    aids = ["tenant1", "tenant2"]
+    reg = _registry(model, tenants, capacity=3)
+    _, before, _ = _serve(engine, params, tenants[0], prompts, 6,
+                          registry=reg, adapter_ids=aids)
+    # publish new tenant1 weights (tenant2's tree, version-bumped)
+    reg.update("tenant1", tenants[2], version=5)
+    _, after, stats = _serve(engine, params, tenants[0], prompts, 6,
+                             registry=reg, adapter_ids=aids)
+    assert after[1].tokens == before[1].tokens      # tenant2 untouched
+    assert after[0].tokens == before[1].tokens      # tenant1 now = t2 tree
+    assert stats.adapter_versions["tenant1"] == 5
+
+
+# ------------------------------------------------------- control plane -----
+def test_aggregate_serve_stats_adapter_rollup():
+    from repro.runtime.metrics import aggregate_serve_stats
+
+    class S:
+        def __init__(self, reqs, vers):
+            self.admitted = self.finished = sum(reqs.values())
+            self.prefill_tokens = self.cached_prefix_tokens = 0
+            self.generated_tokens = self.decode_steps = 0
+            self.train_steps = 0
+            self.wall_time = 1.0
+            self.adapter_version = max(vers.values(), default=0)
+            self.train_loss = float("nan")
+            self.adapter_requests = reqs
+            self.adapter_versions = vers
+
+        def throughput(self):
+            return 0.0
+
+    out = aggregate_serve_stats({
+        "r0": S({"tenant0": 3, "tenant1": 1}, {"tenant0": 2, "tenant1": 0}),
+        "r1": S({"tenant0": 2}, {"tenant0": 5}),
+    })
+    a = out["cluster"]["adapters"]
+    assert a["tenant0"] == {"requests": 5, "version_min": 2,
+                            "version_max": 5}
+    assert a["tenant1"] == {"requests": 1, "version_min": 0,
+                            "version_max": 0}
+    assert out["replicas"]["r1"]["adapter_requests"] == {"tenant0": 2}
+
+
+def test_dispatcher_adapter_affinity_routing():
+    """A queued request whose adapter is device-resident on the firing
+    replica jumps the FCFS scan window (prefix hits still outrank it)."""
+    from test_dispatcher import make_dispatcher
+    from repro.core.interfaces import ReplicaPressure, Request
+
+    d, reps, _ = make_dispatcher(1)
+    for i in range(4):
+        d.submit(Request(request_id=i, stream_id="s", arrival=0.0,
+                         deadline=100.0, tokens=4,
+                         adapter_id="tenantB" if i == 3 else "tenantA"))
+    p = ReplicaPressure(queue_len=0, pending=0, active_slots=0,
+                        total_slots=4,
+                        resident_adapters=("tenantB",))
+    batch = d._select_batch("r0", 2, 0.0, 0.0, pressure=p)
+    assert [r.request_id for r in batch] == [3, 0]
+    assert d.adapter_routed == 1 and d.affinity_routed == 0
+
+
+def test_fabric_failover_reregisters_tenants():
+    """Killing a replica must leave every tenant it served registered
+    somewhere — survivors lacking the tenant inherit its host tree at
+    the dead replica's version."""
+    from repro.runtime.fabric import build_fabric
+
+    fabric, cfg = build_fabric("qwen1.5-0.5b", 2, n_slots=2,
+                               prompt_len=8, gen_tokens=4, n_adapters=2)
+    (r0, rep0), (r1, rep1) = sorted(fabric.replicas.items())
+    rep1.adapters.unregister("tenant1")
+    rep0.adapters.update("tenant1", rep0.adapters.host_tree("tenant1"),
+                         version=3)
+    fabric.fail_replica(r0, 0.0)
+    assert rep1.adapters.is_registered("tenant1")
+    assert rep1.adapters.version("tenant1") == 3
+    assert rep1.adapters.is_registered("tenant0")

@@ -162,7 +162,8 @@ def test_partial_block_boundary_and_hash_collision(setup, monkeypatch):
     degenerate (constant) content hash must not alias wrong content —
     lookups verify the full token bytes."""
     cfg, engine, model, params, lora = setup
-    monkeypatch.setattr(paging, "_digest", lambda tokens: b"collide")
+    monkeypatch.setattr(paging, "_digest",
+                        lambda tokens, namespace=None: b"collide")
     (shared,) = _prompts(cfg, 1, [10])            # 2 full blocks of 4 + 2
     tails = _prompts(cfg, 3, [3, 5, 2], seed=7)
     prompts = [np.concatenate([shared, t]) for t in tails]
