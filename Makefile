@@ -18,6 +18,7 @@ bench-smoke:
 	PYTHONPATH=$(PYTHONPATH):. python benchmarks/multi_replica.py --smoke
 	PYTHONPATH=$(PYTHONPATH):. python benchmarks/combined_fabric.py --smoke
 	PYTHONPATH=$(PYTHONPATH):. python benchmarks/multi_lora.py --smoke
+	PYTHONPATH=$(PYTHONPATH):. python benchmarks/chaos.py --smoke
 
 serve:
 	PYTHONPATH=$(PYTHONPATH) python -m repro.launch.serve --arch qwen1.5-0.5b

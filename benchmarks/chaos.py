@@ -1,0 +1,226 @@
+"""Chaos harness for the live serving fabric: seeded fault injection
+against a 2-replica pool, gated on zero request loss and bit-identical
+greedy output.
+
+Two scenarios over one live smoke model:
+
+  serving   the same two-wave trace through (a) a clean 2-replica
+            fabric (reference) and (b) the same fabric under seeded
+            chaos — one STALL turning r0 into a gross straggler from
+            t=0.05 plus one CRASH killing r1 mid-trace.  Gates: the
+            straggler is quarantined (drain + requeue + subflow
+            suspension, replica stays a pool member), the crash is
+            failed over, EVERY retry-eligible request completes
+            (completion_rate >= 1.0), and each request's greedy tokens
+            are bit-identical to the no-chaos reference — failover
+            regeneration and quarantine requeues must not perturb
+            decoding.  Goodput retention (chaos aggregate tok/s over
+            clean aggregate tok/s) is recorded for trajectory
+            tracking, not gated.
+  nan_round a combined (serve + FL fine-tune) fabric with one
+            nan_grads event poisoning a member's shadow tree
+            mid-round.  Gates: the publish gates block the poisoned
+            shadow (``nan_publishes_blocked >= 1``), at least one FL
+            round still completes, and every replica's SERVED adapter
+            tree stays finite.
+
+Results land in ``BENCH_chaos.json`` so the fault-tolerance trajectory
+is tracked per PR.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import timed
+from repro.core.interfaces import Request
+from repro.data.synthetic import SyntheticDataset
+from repro.runtime.fabric import FabricConfig, build_fabric
+from repro.runtime.fault import FaultEvent, FaultInjector
+
+QUICK = bool(int(os.environ.get("BENCH_QUICK", "0")))
+OUT_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "..", "BENCH_chaos.json")
+
+ARCH = "qwen1.5-0.5b"
+SLOTS, PROMPT_PAD, MAX_GEN, BLOCK = 4, 16, 8, 8
+STREAM = None   # filled from the model config at build time
+
+
+def _trace(cfg, n, seed=11):
+    rng = np.random.default_rng(seed)
+    data = SyntheticDataset("alpaca", vocab_size=cfg.vocab_size,
+                            seq_len=PROMPT_PAD, seed=seed)
+    toks = data.sample_tokens(n)
+    lens = rng.integers(PROMPT_PAD // 2, PROMPT_PAD + 1, size=n)
+    gens = rng.integers(3, MAX_GEN + 1, size=n)
+    return [(toks[i, :lens[i]].astype(np.int32), int(gens[i]))
+            for i in range(n)]
+
+
+def _requests(trace, spacing=0.0):
+    """``spacing > 0`` streams arrivals (one every ``spacing`` seconds)
+    so the trace is still live when the scheduled faults fire — a batch
+    trace on a warm-jit pool drains in tens of milliseconds, before any
+    fault can matter."""
+    return [Request(request_id=i, stream_id=STREAM, arrival=i * spacing,
+                    deadline=1e9, tokens=gen, prompt=prompt.copy())
+            for i, (prompt, gen) in enumerate(trace)]
+
+
+def _chaos_cfg(**kw):
+    # jit caches are warm by the time the chaos run starts (the clean
+    # reference runs first in the same process), so the straggler watch
+    # needs only a short compile grace
+    return FabricConfig(
+        straggler_threshold=2.0, straggler_window=8,
+        straggler_min_samples=4, straggler_warmup=2,
+        quarantine_cooldown=0.5, health_poll_interval=0.05, **kw)
+
+
+def _sorted_tokens(reqs):
+    return [r.output_tokens for r in
+            sorted(reqs, key=lambda r: r.request_id)]
+
+
+@timed("chaos_fabric")
+def run() -> str:
+    global STREAM
+    import jax
+
+    from repro.configs.registry import get_config
+
+    n_req = 16 if QUICK else 28
+    cfg = get_config(ARCH).scaled()
+    STREAM = cfg.name
+    trace = _trace(cfg, n_req)
+
+    # ---- clean reference: same trace, no chaos.  The first run only
+    # warms the jit caches (its rate is compile-dominated); the second
+    # is the measured reference, so goodput retention compares warm
+    # against warm ---------------------------------------------------------
+    clean_rate = 0.0
+    for _ in range(2):
+        fab, _ = build_fabric(ARCH, 2, n_slots=SLOTS,
+                              prompt_len=PROMPT_PAD, gen_tokens=MAX_GEN,
+                              paged=True, block_size=BLOCK,
+                              cfg=FabricConfig())
+        clean_reqs = _requests(trace)
+        clean = fab.run(clean_reqs)
+        assert all(r.completed_at is not None for r in clean_reqs), \
+            "clean reference failed to complete"
+        ref_tokens = _sorted_tokens(clean_reqs)
+        clean_rate = clean["cluster"]["throughput_sum_tok_s"]
+
+    # ---- chaos: stall r0 (straggler) + crash r1 mid-trace ----------------
+    inj = FaultInjector([
+        FaultEvent(at=0.0, replica_id="r0", kind="stall",
+                   duration=60.0, stall_s=0.05),
+        FaultEvent(at=1.2, replica_id="r1", kind="crash"),
+    ])
+    fab, _ = build_fabric(ARCH, 2, n_slots=SLOTS, prompt_len=PROMPT_PAD,
+                          gen_tokens=MAX_GEN, paged=True,
+                          block_size=BLOCK, cfg=_chaos_cfg(),
+                          injector=inj)
+    chaos_reqs = _requests(trace, spacing=0.04)
+    chaos = fab.run(chaos_reqs)
+    ft = chaos["fault_tolerance"]
+
+    kinds = {k for _, _, k in ft["injected"]}
+    assert "crash" in kinds and "stall" in kinds, \
+        f"scheduled faults did not fire: {sorted(kinds)}"
+    assert ft["failovers"] >= 1, "crash was not failed over"
+    assert ft["quarantines"] >= 1, "straggler was never quarantined"
+    assert "r0" in fab.replicas, \
+        "quarantine must bench the straggler, not remove it"
+
+    completed = sum(1 for r in chaos_reqs if r.completed_at is not None)
+    eligible = n_req - len(fab.retry_policy.rejected)
+    completion_rate = completed / max(eligible, 1)
+    assert completion_rate >= 1.0, \
+        f"lost retry-eligible requests: {completed}/{eligible}"
+    assert chaos["failed_requests"] == 0, \
+        "retry budget should cover a single crash + one quarantine"
+    assert _sorted_tokens(chaos_reqs) == ref_tokens, \
+        "chaos run diverged from the clean greedy reference"
+    retention = (chaos["cluster"]["throughput_sum_tok_s"]
+                 / max(clean_rate, 1e-9))
+
+    serving_row = {
+        "requests": n_req, "completed": completed,
+        "completion_rate": round(completion_rate, 3),
+        "greedy_tokens_identical": True,
+        "failovers": ft["failovers"], "quarantines": ft["quarantines"],
+        "retried_requests": ft["retried_requests"],
+        "rejected_requests": ft["rejected_requests"],
+        "injected": [[round(t, 3), rid, k]
+                     for t, rid, k in ft["injected"][:8]],
+        "clean_tok_s_aggregate": round(clean_rate, 1),
+        "chaos_tok_s_aggregate": round(
+            chaos["cluster"]["throughput_sum_tok_s"], 1),
+        "goodput_retention": round(retention, 3),
+        "survivors": sorted(fab.replicas),
+    }
+
+    # ---- nan_round: poisoned shadow must never reach serving -------------
+    inj = FaultInjector([FaultEvent(at=0.0, replica_id="r0",
+                                    kind="nan_grads")])
+    fcfg = _chaos_cfg(enable_finetuning=True, train_batch=4,
+                      bootstrap_steps=3, steps_per_round=3,
+                      min_cohort=2)
+    fab, _ = build_fabric(ARCH, 2, n_slots=SLOTS, prompt_len=PROMPT_PAD,
+                          gen_tokens=MAX_GEN, train_pool=8, cfg=fcfg,
+                          injector=inj)
+    nan_reqs = _requests(trace[:n_req // 2])
+    nan_out = fab.run(nan_reqs, min_rounds=1, timeout=180.0)
+    nft = nan_out["fault_tolerance"]
+
+    assert any(k == "nan_grads" for _, _, k in nft["injected"]), \
+        "nan_grads event never fired"
+    assert nft["nan_publishes_blocked"] >= 1, \
+        "poisoned shadow was not blocked at a publish gate"
+    assert nan_out["fl_rounds"] >= 1, \
+        "FL round did not complete under the NaN fault"
+    for rid, rep in fab.replicas.items():
+        for leaf in jax.tree_util.tree_leaves(rep.lora):
+            assert bool(jax.numpy.isfinite(leaf).all()), \
+                f"{rid}: non-finite served adapter leaked past the gates"
+
+    nan_row = {
+        "requests": len(nan_reqs),
+        "completed": sum(1 for r in nan_reqs
+                         if r.completed_at is not None),
+        "fl_rounds": nan_out["fl_rounds"],
+        "nan_publishes_blocked": nft["nan_publishes_blocked"],
+        "served_adapters_finite": True,
+    }
+
+    out = {
+        "trace": {"n_requests": n_req, "slots": SLOTS,
+                  "prompt_pad": PROMPT_PAD, "max_gen": MAX_GEN,
+                  "arch": ARCH},
+        "serving_chaos": serving_row,
+        "nan_round": nan_row,
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(out, f, indent=2)
+    return (f"completion={completed}/{n_req} "
+            f"identical_tokens=yes "
+            f"failovers={ft['failovers']} "
+            f"quarantines={ft['quarantines']} "
+            f"retries={ft['retried_requests']} "
+            f"goodput_retention={retention:.2f} "
+            f"nan_blocked={nft['nan_publishes_blocked']} "
+            f"fl_rounds={nan_out['fl_rounds']}")
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="short trace for CI (same as BENCH_QUICK=1)")
+    if ap.parse_args().smoke:
+        QUICK = True
+    run()

@@ -21,3 +21,4 @@ python benchmarks/continuous_batching.py --smoke
 python benchmarks/multi_replica.py --smoke
 python benchmarks/combined_fabric.py --smoke
 python benchmarks/multi_lora.py --smoke
+python benchmarks/chaos.py --smoke

@@ -69,6 +69,11 @@ class ClusterController:
         self.launcher.budget_fn = self._latency_budget
         self.dispatchers: Dict[str, SubflowDispatcher] = {}
         self._next_monitor = 0.0
+        # optional runtime.fault.RetryPolicy: when set, every request a
+        # dying replica hands back is charged one retry (+ one failure)
+        # before re-queueing; budget-exhausted / poison requests are
+        # terminally rejected instead of requeued
+        self.retry_policy = None
 
     def _latency_budget(self) -> float:
         """τ' = (τ − T̄_queue) × headroom for the Coordinator's Eq. 12.
@@ -103,8 +108,15 @@ class ClusterController:
         # generations, which would otherwise resurrect latency-model
         # entries for the dead replica
         if handle is not None and hasattr(handle, "drain_pending"):
+            drained = handle.drain_pending(now)
+            if self.retry_policy is not None:
+                # the replica DIED with these accepted: charge the
+                # retry budget + failure count; poison / exhausted
+                # requests drop out here with a terminal status
+                drained = self.retry_policy.filter_requeue(
+                    drained, now, replica_died=True)
             by_stream: Dict[str, List[Request]] = {}
-            for req in handle.drain_pending(now):
+            for req in drained:
                 by_stream.setdefault(req.stream_id, []).append(req)
             for sid, reqs in by_stream.items():
                 self.dispatcher_for(sid).requeue(reqs)

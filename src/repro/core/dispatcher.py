@@ -99,6 +99,10 @@ class SubflowDispatcher:
 
         self.queue: Deque[Request] = collections.deque()
         self.subflows: Dict[str, Subflow] = {}
+        # quarantined stragglers: rid -> suspension end; suspended
+        # replicas keep their subflow/latency state but receive no
+        # traffic until the clock passes the mark
+        self.suspended: Dict[str, float] = {}
         self.latency_models: Dict[str, LinearLatencyModel] = {}
         self.queue_lat: Deque[float] = collections.deque(
             maxlen=cfg.queue_window)
@@ -131,10 +135,18 @@ class SubflowDispatcher:
         return len(self.queue)
 
     # ----------------------------------------------------------- eligibility
-    def _active_replicas(self) -> List[str]:
+    def suspend_replica(self, replica_id: str, until: float) -> None:
+        """Quarantine: exclude a replica from routing until ``until``
+        (straggler cooldown).  State/subflow survive — quarantine is a
+        traffic decision, not membership."""
+        self.suspended[replica_id] = max(
+            self.suspended.get(replica_id, 0.0), until)
+
+    def _active_replicas(self, now: float) -> List[str]:
         return [rid for rid in self.replicas
                 if self.state_of(rid) in (ReplicaState.SERVING,
-                                          ReplicaState.COMBINED)]
+                                          ReplicaState.COMBINED)
+                and self.suspended.get(rid, 0.0) <= now]
 
     def _ensure_subflow(self, rid: str, now: float) -> Subflow:
         sf = self.subflows.get(rid)
@@ -181,7 +193,7 @@ class SubflowDispatcher:
         holds more than ~one SLO period of the active capacity, promote
         an IDLE (or, via the controller fallback, release a COMBINED)
         replica immediately rather than waiting for the macro cycle."""
-        active = self._active_replicas()
+        active = self._active_replicas(now)
         capacity = sum(self._ensure_subflow(r, now).b_max for r in active)
         if len(self.queue) > max(capacity, 1):
             promoted = self.promote_idle(now)
@@ -253,8 +265,12 @@ class SubflowDispatcher:
             if len(batch) >= target:
                 break
             r = q[i]
+            if r.not_before > now:
+                # retry backoff gate: the request stays queued (keeps
+                # its place) but is not dispatchable yet
+                continue
             if r.deadline < now + pred:
-                self.dropped += 1
+                self._shed(r)
                 taken.add(i)
                 continue
             r.dispatched = True
@@ -272,7 +288,7 @@ class SubflowDispatcher:
 
     def _fire_due_subflows(self, now: float) -> None:
         due: List[str] = []
-        for rid in self._active_replicas():
+        for rid in self._active_replicas(now):
             sf = self._ensure_subflow(rid, now)
             if now < sf.next_fire:
                 continue
@@ -334,12 +350,19 @@ class SubflowDispatcher:
             sf.interval = max(min(interval, self.cfg.slo), 1e-3)
             sf.next_fire = now + sf.interval
 
+    def _shed(self, req: Request) -> None:
+        """Deadline shed (Eq. 13c): the drop is TERMINAL — stamping the
+        status lets the fabric's run loop stop waiting on a request
+        that will never complete."""
+        req.status = "failed"
+        req.failed_reason = "deadline"
+        self.dropped += 1
+
     def _expire_requests(self, now: float) -> None:
         """Requests past their deadline cannot contribute (Eq. 13c) —
         count and drop so they stop occupying capacity."""
         while self.queue and self.queue[0].deadline < now:
-            self.queue.popleft()
-            self.dropped += 1
+            self._shed(self.queue.popleft())
 
     # ------------------------------------------------------------ macro ----
     def macro_cycle(self, now: float) -> None:
@@ -362,7 +385,7 @@ class SubflowDispatcher:
                 # T̄_queue must be re-measured with the new capacity
                 self.queue_lat.clear()
                 budget = self.cfg.slo - self.avg_queue_latency()
-        for rid in self._active_replicas():
+        for rid in self._active_replicas(now):
             sf = self._ensure_subflow(rid, now)
             plan = self.combined_plan(rid) \
                 if self.state_of(rid) is ReplicaState.COMBINED else None
@@ -397,7 +420,7 @@ class SubflowDispatcher:
 
     # ------------------------------------------------------------ micro ----
     def micro_cycle(self, now: float) -> None:
-        active = self._active_replicas()
+        active = self._active_replicas(now)
         if not active:
             return
         flows = [self._ensure_subflow(rid, now) for rid in active]

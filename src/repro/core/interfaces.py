@@ -41,11 +41,34 @@ class Request:
     # filled by live replicas on completion: the generated token ids
     # (the multi-replica equivalence gates compare these bit-for-bit)
     output_tokens: Optional[List[int]] = None
+    # --- fault-tolerance lifecycle (runtime/fault.py RetryPolicy) ---
+    # retries: re-admissions after a failover/quarantine drain handed
+    # the request back; failures: how many of those drains were replica
+    # DEATHS with this request accepted there (the poison-request
+    # signal: a request that kills every replica it lands on must stop
+    # being requeued).  ``not_before`` is the exponential-backoff gate —
+    # the dispatcher skips the request until the clock passes it.  The
+    # SLO clock (arrival/deadline) is NEVER touched by a retry: a
+    # re-admitted request keeps its original deadline.
+    retries: int = 0
+    failures: int = 0
+    not_before: float = 0.0
+    # "pending" until served or terminally rejected; "failed" is a
+    # TERMINAL verdict (retry budget exhausted, poison request, missed
+    # deadline) — the fabric loop stops waiting on failed requests
+    status: str = "pending"
+    failed_reason: Optional[str] = None
 
     @property
     def slo_met(self) -> bool:
         return self.completed_at is not None \
             and self.completed_at <= self.deadline
+
+    @property
+    def terminal(self) -> bool:
+        """Served or terminally rejected — either way the control plane
+        owes this request nothing further."""
+        return self.completed_at is not None or self.status == "failed"
 
 
 @dataclasses.dataclass

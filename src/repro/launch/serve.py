@@ -42,6 +42,10 @@ Usage:
                      # round-robin across 3 registered tenants, decoded
                      # through the batched segmented LoRA paths
   ... --temperature 0.8 --top-k 40 --top-p 0.95   # sampled decoding
+  ... --replicas 2 --chaos --chaos-crashes 1 --chaos-stalls 1
+                     # seeded fault injection against the fabric:
+                     # crashes/stalls/OOMs/NaN-rounds on a deterministic
+                     # schedule; the run prints failover + retry telemetry
 """
 from __future__ import annotations
 
@@ -54,6 +58,33 @@ from repro.configs.registry import ARCH_IDS, get_config
 from repro.core.engine import make_engine
 from repro.data.synthetic import SyntheticDataset
 from repro.runtime.serving_loop import ContinuousBatcher, GenRequest
+
+
+def _make_injector(n_replicas: int, chaos: dict):
+    """Build a seeded FaultInjector over the fabric's replica ids from
+    the --chaos-* knobs."""
+    from repro.runtime.fault import FaultInjector
+    plan = FaultInjector.random_plan(
+        [f"r{i}" for i in range(n_replicas)],
+        seed=chaos.get("seed", 0),
+        horizon=chaos.get("horizon", 5.0),
+        n_crashes=chaos.get("crashes", 1),
+        n_stalls=chaos.get("stalls", 1),
+        n_ooms=chaos.get("ooms", 0),
+        n_nan_rounds=chaos.get("nan_rounds", 0))
+    return FaultInjector(plan)
+
+
+def _print_fault_telemetry(out: dict) -> None:
+    ft = out.get("fault_tolerance")
+    if not ft:
+        return
+    print(f"  chaos: {len(ft['injected'])} faults injected, "
+          f"{ft['failovers']} failovers, {ft['quarantines']} quarantines, "
+          f"{ft['retried_requests']} retries, "
+          f"{ft['rejected_requests']} rejected, "
+          f"{ft['nan_publishes_blocked']} NaN publishes blocked; "
+          f"{out.get('failed_requests', 0)} requests failed")
 
 
 def run_serving(arch: str, *, smoke: bool = True, n_requests: int = 16,
@@ -167,20 +198,24 @@ def run_multi_replica_serving(
         block_size: int = 16, n_blocks: int = 0,
         prefix_cache: bool = False, temperature: float = 0.0,
         top_k: int = 0, top_p: float = 1.0, n_adapters: int = 0,
-        verbose: bool = True) -> dict:
+        chaos: dict = None, verbose: bool = True) -> dict:
     """Serve ``n_requests`` prompts through the dispatcher-routed
     multi-replica fabric; returns the aggregate cluster summary.
     ``n_adapters > 0`` registers that many LoRA tenants on every
     replica and tags requests round-robin, exercising adapter-affinity
-    routing and the batched segmented decode paths."""
+    routing and the batched segmented decode paths.  ``chaos`` (a dict
+    of seed/horizon/crashes/stalls/ooms/nan_rounds) arms a seeded
+    ``FaultInjector`` against the pool."""
     from repro.core.interfaces import Request
     from repro.runtime.fabric import build_fabric
 
+    injector = _make_injector(n_replicas, chaos) if chaos else None
     fabric, cfg = build_fabric(
         arch, n_replicas, smoke=smoke, n_slots=batch_size,
         prompt_len=prompt_len, gen_tokens=gen_tokens, paged=paged,
         block_size=block_size, n_blocks=n_blocks or None,
-        prefix_cache=prefix_cache, seed=seed, n_adapters=n_adapters)
+        prefix_cache=prefix_cache, seed=seed, n_adapters=n_adapters,
+        injector=injector)
     data = SyntheticDataset("alpaca", vocab_size=cfg.vocab_size,
                             seq_len=prompt_len, seed=seed)
     prompts = data.sample_tokens(n_requests)[:, :prompt_len]
@@ -214,6 +249,8 @@ def run_multi_replica_serving(
             print(f"  {rid}: {row['finished']} finished, "
                   f"{row['generated_tokens']} tokens, "
                   f"{row['throughput_tok_s']:.1f} tok/s")
+        if chaos:
+            _print_fault_telemetry(out)
     return out
 
 
@@ -226,7 +263,7 @@ def run_combined_fabric_serving(
         rounds: int = 2, steps_per_round: int = 4, train_pool: int = 8,
         temperature: float = 0.0, top_k: int = 0, top_p: float = 1.0,
         n_adapters: int = 0, timeout: float = 300.0,
-        verbose: bool = True) -> dict:
+        chaos: dict = None, verbose: bool = True) -> dict:
     """Live co-execution: serve the trace through the multi-replica
     fabric WHILE the launcher drives incremental FL train sessions over
     the same replicas.  ``train_pool`` fixes the fine-tuning corpus to
@@ -241,12 +278,13 @@ def run_combined_fabric_serving(
         enable_finetuning=True, train_batch=train_batch,
         bootstrap_steps=steps_per_round, steps_per_round=steps_per_round,
         min_cohort=min(2, n_replicas))
+    injector = _make_injector(n_replicas, chaos) if chaos else None
     fabric, cfg = build_fabric(
         arch, n_replicas, smoke=smoke, n_slots=batch_size,
         prompt_len=prompt_len, gen_tokens=gen_tokens, paged=paged,
         block_size=block_size, n_blocks=n_blocks or None,
         prefix_cache=prefix_cache, seed=seed, train_pool=train_pool,
-        n_adapters=n_adapters, cfg=fcfg)
+        n_adapters=n_adapters, cfg=fcfg, injector=injector)
     data = SyntheticDataset("alpaca", vocab_size=cfg.vocab_size,
                             seq_len=prompt_len, seed=seed)
     prompts = data.sample_tokens(n_requests)[:, :prompt_len]
@@ -283,6 +321,8 @@ def run_combined_fabric_serving(
                   f"{row['finished']} finished, "
                   f"{row['throughput_tok_s']:.1f} tok/s"
                   + (f", train CE {tl:.4f}" if tl is not None else ""))
+        if chaos:
+            _print_fault_telemetry(out)
     return out
 
 
@@ -322,10 +362,35 @@ def main() -> None:
                     help="LoRA tenants to register and round-robin "
                          "requests across (0 = single-adapter serving)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--chaos", action="store_true",
+                    help="arm seeded fault injection against the fabric "
+                         "(requires --replicas > 1)")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="seed for the chaos schedule")
+    ap.add_argument("--chaos-horizon", type=float, default=5.0,
+                    help="fault schedule horizon in seconds")
+    ap.add_argument("--chaos-crashes", type=int, default=1,
+                    help="replica crashes to schedule")
+    ap.add_argument("--chaos-stalls", type=int, default=1,
+                    help="straggler stalls to schedule")
+    ap.add_argument("--chaos-ooms", type=int, default=0,
+                    help="admission OOMs to schedule")
+    ap.add_argument("--chaos-nan-rounds", type=int, default=0,
+                    help="NaN-poisoned train rounds to schedule "
+                         "(combined mode)")
     args = ap.parse_args()
     if args.prefix_cache and not args.paged:
         ap.error("--prefix-cache requires --paged (sharing rides on "
                  "pool block aliasing)")
+    if args.chaos and args.replicas < 2:
+        ap.error("--chaos requires --replicas > 1 (fault tolerance is "
+                 "a property of the pool)")
+    chaos = None
+    if args.chaos:
+        chaos = {"seed": args.chaos_seed, "horizon": args.chaos_horizon,
+                 "crashes": args.chaos_crashes,
+                 "stalls": args.chaos_stalls, "ooms": args.chaos_ooms,
+                 "nan_rounds": args.chaos_nan_rounds}
     if args.replicas > 1:
         if args.combined:
             # the full co-execution path: launcher-driven incremental
@@ -340,7 +405,7 @@ def main() -> None:
                 steps_per_round=args.steps_per_round,
                 temperature=args.temperature, top_k=args.top_k,
                 top_p=args.top_p, n_adapters=args.adapters,
-                seed=args.seed)
+                seed=args.seed, chaos=chaos)
             return
         run_multi_replica_serving(
             args.arch, n_replicas=args.replicas,
@@ -349,7 +414,8 @@ def main() -> None:
             paged=args.paged, block_size=args.block_size,
             n_blocks=args.n_blocks, prefix_cache=args.prefix_cache,
             temperature=args.temperature, top_k=args.top_k,
-            top_p=args.top_p, n_adapters=args.adapters, seed=args.seed)
+            top_p=args.top_p, n_adapters=args.adapters, seed=args.seed,
+            chaos=chaos)
         return
     run_serving(args.arch, n_requests=args.requests,
                 prompt_len=args.prompt_len, gen_tokens=args.gen,

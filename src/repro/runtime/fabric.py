@@ -44,6 +44,9 @@ import numpy as np
 
 from repro.core.cluster import ClusterConfig, ClusterController
 from repro.core.interfaces import BatchResult, Request
+from repro.runtime.fault import (
+    FaultInjector, HealthConfig, HealthMonitor, RetryPolicy,
+)
 from repro.runtime.metrics import aggregate_serve_stats
 from repro.runtime.replica import LiveReplica
 
@@ -67,6 +70,18 @@ class FabricConfig:
     steps_per_round: int = 4
     train_batch: int = 4            # B0 bootstrap train batch
     max_rounds: int = 1000
+    # fault tolerance (runtime/fault.py): pump-driven health + retries
+    beat_timeout: float = 1.0       # silent seconds = one missed beat
+    max_missed_beats: int = 3
+    health_poll_interval: float = 0.1
+    straggler_threshold: float = 3.0
+    straggler_window: int = 32
+    straggler_min_samples: int = 8
+    straggler_warmup: int = 4       # jit-compile grace per replica
+    quarantine_cooldown: float = 1.0
+    max_retries: int = 4            # re-admissions per request
+    max_request_failures: int = 3   # replica deaths before poison verdict
+    retry_backoff: float = 0.05     # base of the exponential backoff
 
 
 class ServingFabric:
@@ -104,6 +119,28 @@ class ServingFabric:
         # must stay in the cluster totals
         self.retired_stats: Dict[str, Any] = {}
         self.results: List[BatchResult] = []
+        # fault tolerance: pump-driven health verdicts + the request
+        # retry budget the failover drain path charges
+        self.health = HealthMonitor(HealthConfig(
+            beat_timeout=self.cfg.beat_timeout,
+            max_misses=self.cfg.max_missed_beats,
+            poll_interval=self.cfg.health_poll_interval,
+            straggler_threshold=self.cfg.straggler_threshold,
+            straggler_window=self.cfg.straggler_window,
+            straggler_min_samples=self.cfg.straggler_min_samples,
+            straggler_warmup=self.cfg.straggler_warmup,
+            quarantine_cooldown=self.cfg.quarantine_cooldown))
+        self.retry_policy = RetryPolicy(
+            max_retries=self.cfg.max_retries,
+            max_failures=self.cfg.max_request_failures,
+            backoff_base=self.cfg.retry_backoff)
+        self.cluster.retry_policy = self.retry_policy
+        self.injector: Optional[FaultInjector] = None
+        # fault log: (now, replica_id, action) — failover/quarantine
+        # decisions for telemetry and post-mortems
+        self.fault_log: List[Tuple[float, str, str]] = []
+        self.quarantines = 0
+        self.failovers = 0
 
     # ------------------------------------------------------------ registry -
     def on_result(self, result: BatchResult, stream_id: str) -> None:
@@ -113,6 +150,9 @@ class ServingFabric:
 
     def add_replica(self, rep: LiveReplica) -> None:
         from repro.core.states import ReplicaState
+        if self.injector is not None and getattr(rep, "injector",
+                                                 None) is None:
+            rep.injector = self.injector
         self.replicas[rep.replica_id] = rep
         # with fine-tuning on, fresh replicas join IDLE so the launcher
         # can cohort them immediately (a new replica has served nothing
@@ -129,6 +169,9 @@ class ServingFabric:
         rep = self.replicas.pop(replica_id)
         self.cluster.remove_replica(replica_id, now)
         self.retired_stats[replica_id] = rep.batcher.stats
+        self.health.forget(replica_id)
+        self.failovers += 1
+        self.fault_log.append((now, replica_id, "failover"))
         # multi-tenant failover: every tenant the dead replica served
         # must stay servable — re-register its host tree (at the dead
         # replica's version) on any survivor that lacks it; survivors
@@ -153,12 +196,63 @@ class ServingFabric:
         session polling / round aggregation), then advance every live
         replica one runtime tick (``pump_once``: serving decode fused
         with its session's train step).  Returns True while any replica
-        holds unfinished serving work."""
+        holds unfinished serving work.
+
+        Fault containment: an exception escaping a pump NEVER crashes
+        the loop — it is reported to the HealthMonitor as a detected
+        failure, and the tick closes by acting on health verdicts
+        (dead -> ``fail_replica`` failover, straggler -> quarantine
+        drain + dispatcher suspension)."""
         self.cluster.tick(now)
         busy = False
-        for rep in list(self.replicas.values()):
-            busy = rep.pump_once(now) or busy
+        for rid, rep in list(self.replicas.items()):
+            if rid not in self.replicas:
+                continue        # removed by an earlier verdict this tick
+            t0 = time.perf_counter()
+            try:
+                served = rep.pump_once(now)
+            except Exception as e:          # noqa: BLE001 — containment
+                self.health.failure(rid, now,
+                                    reason=type(e).__name__)
+                continue
+            # heartbeat off REAL pump progress; serving ticks feed
+            # their wall latency to the straggler watch (idle ticks
+            # are ~free and would drag the medians toward zero)
+            self.health.beat(rid, now,
+                             busy_s=time.perf_counter() - t0
+                             if served else None)
+            busy = served or busy
+        dead, stragglers = self.health.poll(now)
+        for rid in dead:
+            if rid in self.replicas:
+                self.fail_replica(rid, now)
+        for rid in stragglers:
+            if rid in self.replicas:
+                self.quarantine_replica(rid, now)
         return busy
+
+    def quarantine_replica(self, replica_id: str, now: float) -> None:
+        """Straggler mitigation: drain the replica's pending work back
+        through the SAME ``drain_pending`` path failover uses (charged
+        to the retry budget as a non-fatal re-admission), requeue it on
+        the stream queues, and suspend the replica's subflows for the
+        health cooldown.  The replica stays a pool member — after the
+        cooldown the dispatcher resumes routing to it and the watch
+        re-evaluates from fresh samples."""
+        rep = self.replicas[replica_id]
+        until = self.health.quarantine(replica_id, now)
+        drained = rep.drain_pending(now)
+        survivors = self.retry_policy.filter_requeue(
+            drained, now, replica_died=False)
+        by_stream: Dict[str, List[Request]] = {}
+        for req in survivors:
+            by_stream.setdefault(req.stream_id, []).append(req)
+        for sid, reqs in by_stream.items():
+            self.cluster.dispatcher_for(sid).requeue(reqs)
+        for d in self.cluster.dispatchers.values():
+            d.suspend_replica(replica_id, until)
+        self.quarantines += 1
+        self.fault_log.append((now, replica_id, "quarantine"))
 
     @property
     def training(self) -> bool:
@@ -194,8 +288,11 @@ class ServingFabric:
             busy = self.tick(now)
             rounds_ok = self.cluster.launcher.completed_rounds \
                 >= min_rounds
+            # a request is settled once TERMINAL: served, or
+            # terminally rejected (retry budget / poison / deadline) —
+            # waiting on a failed request would spin out the timeout
             if next_req >= len(todo) and not kills and not busy \
-                    and all(r.completed_at is not None for r in todo) \
+                    and all(r.terminal for r in todo) \
                     and (rounds_ok or not self.training):
                 break
             if not self.replicas:
@@ -213,6 +310,8 @@ class ServingFabric:
         out = self.summary()
         out["incomplete_requests"] = sum(
             1 for r in todo if r.completed_at is None)
+        out["failed_requests"] = sum(
+            1 for r in todo if r.status == "failed")
         return out
 
     # ---------------------------------------------------------- telemetry --
@@ -232,6 +331,18 @@ class ServingFabric:
         out["fl_rounds"] = launcher.completed_rounds
         out["rounds"] = [dict(r) for r in launcher.round_history]
         out["adapter_versions"] = dict(launcher.adapter_versions)
+        out["fault_tolerance"] = {
+            "failovers": self.failovers,
+            "quarantines": self.quarantines,
+            "failures_detected": len(self.health.failures),
+            "retried_requests": self.retry_policy.retried,
+            "rejected_requests": len(self.retry_policy.rejected),
+            "nan_publishes_blocked":
+                out["cluster"]["nan_publishes_blocked"],
+            "injected": list(self.injector.injected)
+                if self.injector is not None else [],
+            "log": list(self.fault_log),
+        }
         return out
 
 
@@ -270,6 +381,7 @@ def build_fabric(arch: str, n_replicas: int, *, smoke: bool = True,
                  train_pool: int = 0, n_adapters: int = 0,
                  adapter_slots: Optional[int] = None,
                  cfg: Optional[FabricConfig] = None,
+                 injector: Optional[FaultInjector] = None,
                  ) -> Tuple[ServingFabric, Any]:
     """Build a fabric of ``n_replicas`` live replicas over ONE shared
     set of frozen base params (each replica owns its adapter, optimizer
@@ -325,6 +437,7 @@ def build_fabric(arch: str, n_replicas: int, *, smoke: bool = True,
         tenant_trees = make_tenant_adapters(model, n_adapters,
                                             seed=seed + 1)
     fabric = ServingFabric(cfg)
+    fabric.injector = injector
     for i in range(n_replicas):
         if n_adapters > 0:
             # tenant0's no-op tree doubles as the replica's co-training

@@ -87,7 +87,8 @@ class MetricsCollector:
 # =========================================================================
 _SERVE_COUNTERS = ("admitted", "finished", "prefill_tokens",
                    "cached_prefix_tokens", "generated_tokens",
-                   "decode_steps", "train_steps")
+                   "decode_steps", "train_steps",
+                   "nan_publishes_blocked")
 
 
 def aggregate_serve_stats(per_replica: Dict[str, "object"]) -> Dict:
@@ -110,7 +111,7 @@ def aggregate_serve_stats(per_replica: Dict[str, "object"]) -> Dict:
     train_losses: List[float] = []
     for rid in sorted(per_replica):
         s = per_replica[rid]
-        row = {f: getattr(s, f) for f in _SERVE_COUNTERS}
+        row = {f: getattr(s, f, 0) for f in _SERVE_COUNTERS}
         row["wall_time"] = float(s.wall_time)
         row["throughput_tok_s"] = float(s.throughput())
         # quality progression: which adapter the replica serves and the

@@ -22,6 +22,18 @@ from repro.core.interfaces import (
 from repro.optim.grad_noise import NoiseScaleEMA, noise_scale_from_microbatches
 
 
+def tree_finite(tree: Any) -> bool:
+    """True iff every leaf of a (possibly nested) array tree is fully
+    finite — the publish-gate predicate: a NaN/Inf-poisoned shadow must
+    never be swapped into serving."""
+    import jax
+    import jax.numpy as jnp
+    if tree is None:
+        return True
+    return all(bool(jnp.isfinite(leaf).all())
+               for leaf in jax.tree_util.tree_leaves(tree))
+
+
 # =========================================================================
 # Simulated replica
 # =========================================================================
@@ -385,7 +397,8 @@ class LiveReplica:
                  serve_n_blocks: Optional[int] = None,
                  serve_prefix_cache: bool = False,
                  adapters: Any = None,
-                 train_tenant: Optional[str] = None):
+                 train_tenant: Optional[str] = None,
+                 injector: Any = None):
         from repro.runtime.serving_loop import ContinuousBatcher
         self.replica_id = replica_id
         self.model_id = model_id
@@ -423,6 +436,11 @@ class LiveReplica:
         # entry so its requests see each published round)
         self.adapters = adapters
         self.train_tenant = train_tenant
+        # chaos hooks (runtime.fault.FaultInjector or None): consulted
+        # at pump top (crash/stall), admission (oom), and after train
+        # ticks (nan_grads) — injected crashes/OOMs RAISE out of
+        # pump_once; the fabric tick contains them as detected failures
+        self.injector = injector
         self.batcher = ContinuousBatcher(
             engine, params, lora, n_slots=serve_slots,
             max_seq=serve_prompt_len + max_gen_tokens,
@@ -470,6 +488,8 @@ class LiveReplica:
         from repro.runtime.serving_loop import GenRequest
         while self._queue \
                 and len(self.batcher.queue) < self.batcher.n_slots:
+            if self.injector is not None:
+                self.injector.at_admission(self.replica_id, now)
             submit_t, submit_wall, batch = self._queue.popleft()
             drawn = None
             if any(r.prompt is None for r in batch):
@@ -550,6 +570,12 @@ class LiveReplica:
         True while the replica holds unfinished SERVING work (training
         progress is the Launcher's to poll, not a reason to spin the
         trace loop)."""
+        if self.injector is not None:
+            # chaos hooks: an injected crash raises out of this pump
+            # (the fabric tick converts it into a detected failure); a
+            # stall sleeps here, inflating this tick's latency into the
+            # straggler watch
+            self.injector.before_pump(self.replica_id, now)
         self._ingest(now)
         sess = self._session
         train_due = sess is not None and not sess.done
@@ -573,6 +599,9 @@ class LiveReplica:
                 m = self.batcher.last_train_metrics
                 sess.losses.append(m["ce_loss"])
                 self._observe_noise(m, sess)
+                if self.injector is not None and self.injector \
+                        .poison_grads(self.replica_id, now):
+                    self._poison_shadow()
         self._busy_frac = self._measured_busy_frac()
         return bool(self._queue or self._inflight
                     or not self.batcher.idle())
@@ -720,7 +749,15 @@ class LiveReplica:
         deployment).  A new global landing mid-session ABORTS the
         session outright — shadow and progress discarded — rather than
         silently retargeting the remaining ticks at the served tree
-        (which would break the within-round snapshot isolation)."""
+        (which would break the within-round snapshot isolation).
+
+        Publish gate: a non-finite incoming tree (e.g. a FedAvg merge
+        over a poisoned member that slipped past the member gates) is
+        REJECTED — the served adapter stays at its current finite
+        version and the rejection is counted."""
+        if not tree_finite(adapter):
+            self.batcher.stats.nan_publishes_blocked += 1
+            return
         if self._session is not None:
             self.abort_round(0.0)
         self.lora = adapter
@@ -765,6 +802,14 @@ class LiveReplica:
         if sess is None:
             raise RuntimeError(f"{self.replica_id}: no active round")
         self._session = None
+        # publish gate, round edition: a NaN/Inf shadow (poisoned
+        # gradients) aborts the round HERE — the shadow is dropped so
+        # the subsequent publish_adapter is a no-op and serving stays
+        # at the last finite published version
+        if self.batcher.train_lora is not None \
+                and not tree_finite(self.batcher.train_lora):
+            self.batcher.train_lora = None
+            self.batcher.stats.nan_publishes_blocked += 1
         self.batcher.train_grad_accum = 1
         # no training co-runs past this point: results emitted before
         # the next begin_round must not carry a stale interference
@@ -774,12 +819,15 @@ class LiveReplica:
         dt = sess.busy_time / max(sess.steps_done, 1)
         noise = self._noise_ema.value if self._noise_ema.initialized \
             else 8.0    # prior until the first even-batch round measures
+        # poisoned ticks log NaN CE — report only the finite losses so
+        # the Coordinator's Eq. 8 fits never ingest NaN
+        fin = [l for l in sess.losses if math.isfinite(l)]
         return TrainRoundStats(
             replica_id=self.replica_id, steps=sess.steps_done,
             train_batch=sess.train_batch, infer_batch=sess.infer_batch,
             avg_step_time=dt,
-            loss_before=sess.losses[0] if sess.losses else float("nan"),
-            loss_after=sess.losses[-1] if sess.losses else float("nan"),
+            loss_before=fin[0] if fin else float("nan"),
+            loss_after=fin[-1] if fin else float("nan"),
             noise_scale=noise,
             samples=sess.train_batch * sess.steps_done)
 
@@ -787,8 +835,16 @@ class LiveReplica:
         """Round boundary: atomically swap the trained shadow into the
         published slot.  Host-side pointer swap — in-flight decodes read
         whichever tree the next tick's program is handed, never a
-        half-updated one."""
+        half-updated one.
+
+        Publish gate: a non-finite shadow is REJECTED — dropped without
+        the swap, so the served adapter (and its registry mirror) stays
+        bit-identical at the last published finite version."""
         shadow = self.batcher.train_lora
+        if shadow is not None and not tree_finite(shadow):
+            self.batcher.train_lora = None
+            self.batcher.stats.nan_publishes_blocked += 1
+            return self.adapter_version
         if shadow is not None:
             self.lora = shadow          # resets the cached CE probe
             self.batcher.train_lora = None
@@ -819,6 +875,18 @@ class LiveReplica:
         self.batcher.train_lora = None
         self.batcher.train_grad_accum = 1
         self.train_batch = 0
+
+    def _poison_shadow(self) -> None:
+        """Chaos: NaN-fill the session's shadow tree (an injected
+        gradient blow-up).  Serving is untouched — the published
+        snapshot is a different tree — and the publish gates must
+        refuse to ever swap this one in."""
+        import jax
+        import jax.numpy as jnp
+        if self.batcher.train_lora is not None:
+            self.batcher.train_lora = jax.tree.map(
+                lambda x: jnp.full_like(x, jnp.nan),
+                self.batcher.train_lora)
 
     def _observe_noise(self, metrics: Dict[str, float],
                        sess: TrainSession) -> None:

@@ -204,6 +204,10 @@ class ServeStats:
     # until the replica has trained at all
     adapter_version: int = 0
     train_loss: float = float("nan")
+    # publish-gate telemetry: rounds whose shadow (or incoming global)
+    # tree was non-finite and therefore REJECTED instead of swapped
+    # into serving (runtime/fault.py publish-gate contract)
+    nan_publishes_blocked: int = 0
     # multi-tenant telemetry: per-adapter finished-request counts and
     # the version each tenant's adapter was serving at last touch (the
     # legacy scalar above tracks only the co-training tenant)
@@ -377,6 +381,13 @@ class AdapterRegistry:
         (in-flight rows read the new weights on their next tick)."""
         if not self.is_registered(adapter_id):
             raise AdapterError(f"{adapter_id}: not registered")
+        # registry-seam publish gate: refusing a non-finite tree here
+        # keeps every resident slot servable even if a caller skipped
+        # the LiveReplica-level gates
+        from repro.runtime.replica import tree_finite
+        if not tree_finite(tree):
+            raise AdapterError(
+                f"{adapter_id}: refusing non-finite adapter publish")
         self._host[adapter_id] = tree
         if version is not None:
             self._version[adapter_id] = version
