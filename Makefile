@@ -1,6 +1,13 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test collect bench bench-smoke serve
+.PHONY: test collect bench bench-smoke serve lint sanitize
+
+lint:
+	python tools/analysis/reprolint.py
+	python tools/analysis/run_typecheck.py
+
+sanitize:
+	REPRO_SANITIZE=1 PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
 
 collect:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest --collect-only -q

@@ -1,18 +1,29 @@
 #!/usr/bin/env bash
-# CI entry: collection health gate first (import errors surface as a
-# clean failure instead of a half-run suite), then the tier-1 suite,
-# then the serving perf smokes (BENCH_paged_kv.json tracks the paged
-# KV cache's memory/throughput trajectory per PR).
+# CI entry: static-analysis gate first (reprolint + gated typecheck —
+# a lint finding fails CI before any test runs), then the collection
+# health gate (import errors surface as a clean failure instead of a
+# half-run suite), then the tier-1 suite — once plain and once with
+# REPRO_SANITIZE=1 arming the shadow-state sanitizers (reprosan), so
+# every allocator/registry/lifecycle invariant is cross-checked on the
+# full suite — then the serving perf smokes (BENCH_paged_kv.json
+# tracks the paged KV cache's memory/throughput trajectory per PR).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== lint gate (reprolint + typecheck) =="
+python tools/analysis/reprolint.py
+python tools/analysis/run_typecheck.py
 
 echo "== collection gate =="
 python -m pytest --collect-only -q
 
 echo "== tier-1 =="
 python -m pytest -x -q
+
+echo "== tier-1 (REPRO_SANITIZE=1 shadow-state sanitizers) =="
+REPRO_SANITIZE=1 python -m pytest -x -q
 
 echo "== perf smoke =="
 python benchmarks/paged_kv.py --smoke
@@ -21,4 +32,4 @@ python benchmarks/continuous_batching.py --smoke
 python benchmarks/multi_replica.py --smoke
 python benchmarks/combined_fabric.py --smoke
 python benchmarks/multi_lora.py --smoke
-python benchmarks/chaos.py --smoke
+REPRO_SANITIZE=1 python benchmarks/chaos.py --smoke

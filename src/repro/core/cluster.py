@@ -26,7 +26,7 @@ class StreamReplicaView(collections.abc.Mapping):
     snapshot meant late-added replicas never received traffic and
     removed ones lingered in ``d.replicas``."""
 
-    def __init__(self, registry: Dict[str, ReplicaHandle], model_id: str):
+    def __init__(self, registry: Dict[str, ReplicaHandle], model_id: str) -> None:
         self._registry = registry
         self._model_id = model_id
 
@@ -57,7 +57,7 @@ class ClusterConfig:
 
 
 class ClusterController:
-    def __init__(self, cfg: ClusterConfig):
+    def __init__(self, cfg: ClusterConfig) -> None:
         self.cfg = cfg
         cfg.dispatcher.slo = cfg.slo
         cfg.launcher.slo = cfg.slo

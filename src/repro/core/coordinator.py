@@ -50,7 +50,7 @@ class InferenceTrainingCoordinator:
     """Owns per-replica interference-aware models + batch planning."""
 
     def __init__(self, session_id: str, replica_ids: Sequence[str],
-                 slo: float, cfg: Optional[CoordinatorConfig] = None):
+                 slo: float, cfg: Optional[CoordinatorConfig] = None) -> None:
         self.session_id = session_id
         self.cfg = cfg or CoordinatorConfig()
         self.slo = slo

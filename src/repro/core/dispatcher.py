@@ -89,7 +89,7 @@ class SubflowDispatcher:
                  promote_idle: Callable[[float], Optional[str]],
                  combined_plan: Callable[
                      [str], Optional[Tuple[int, BivariateLatencyModel]]]
-                 = lambda rid: None):
+                 = lambda rid: None) -> None:
         self.stream_id = stream_id
         self.cfg = cfg
         self.replicas = replicas

@@ -27,7 +27,8 @@ class Engine:
     optimizer: AdamW
 
     # ----------------------------------------------------------- training --
-    def train_step(self, params, lora, opt_state: AdamWState, batch,
+    def train_step(self, params: Any, lora: Any, opt_state: AdamWState,
+                   batch: Any,
                    *, skip_masked_blocks: bool = False,
                    ce_chunk: int = 512, grad_accum: int = 1
                    ) -> Tuple[Any, AdamWState, Dict[str, jax.Array]]:
@@ -83,20 +84,25 @@ class Engine:
         return new_lora, new_opt, metrics
 
     # ------------------------------------------------------------ serving --
-    def prefill_step(self, params, lora, batch):
+    def prefill_step(self, params: Any, lora: Any,
+                     batch: Any) -> Tuple[jax.Array, Any]:
         return self.model.prefill(params, lora, batch)
 
-    def decode_step(self, params, lora, caches, token, pos):
+    def decode_step(self, params: Any, lora: Any, caches: Any,
+                    token: jax.Array,
+                    pos: jax.Array) -> Tuple[jax.Array, Any]:
         return self.model.decode_step(params, lora, caches, token, pos)
 
-    def encoder_serve_step(self, params, lora, batch):
+    def encoder_serve_step(self, params: Any, lora: Any,
+                           batch: Any) -> jax.Array:
         """Encoder-only 'serving': full-sequence frame classification."""
         hidden, _, _ = self.model.hidden_states(params, lora, batch)
         return hidden @ params["lm_head"]
 
     # ------------------------------------------------- the paper's fusion --
-    def combined_step(self, params, lora, opt_state: AdamWState,
-                      train_batch, caches, token, pos, *,
+    def combined_step(self, params: Any, lora: Any, opt_state: AdamWState,
+                      train_batch: Any, caches: Any, token: jax.Array,
+                      pos: jax.Array, *,
                       serve_lora: Any = None,
                       attn_backend: Optional[str] = None,
                       grad_accum: int = 1,
@@ -125,8 +131,10 @@ class Engine:
             params, lora, opt_state, train_batch, grad_accum=grad_accum)
         return new_lora, new_opt, logits, new_caches, metrics
 
-    def combined_step_paged(self, params, lora, opt_state: AdamWState,
-                            train_batch, caches, token, pos, block_tables,
+    def combined_step_paged(self, params: Any, lora: Any,
+                            opt_state: AdamWState, train_batch: Any,
+                            caches: Any, token: jax.Array,
+                            pos: jax.Array, block_tables: jax.Array,
                             *, ring_len: int = 0,
                             serve_lora: Any = None,
                             attn_backend: Optional[str] = None,
@@ -147,8 +155,11 @@ class Engine:
             params, lora, opt_state, train_batch, grad_accum=grad_accum)
         return new_lora, new_opt, logits, new_caches, metrics
 
-    def combined_prefill_step(self, params, lora, opt_state: AdamWState,
-                              train_batch, infer_batch):
+    def combined_prefill_step(self, params: Any, lora: Any,
+                              opt_state: AdamWState, train_batch: Any,
+                              infer_batch: Any
+                              ) -> Tuple[Any, AdamWState, jax.Array,
+                                         Any, Dict[str, jax.Array]]:
         """Fused train + prefill variant (used when the co-located
         inference work is prompt processing rather than decode)."""
         logits, caches = self.model.prefill(params, lora, infer_batch)

@@ -62,7 +62,7 @@ class EarlyStopper:
     patience: int = 2
     min_delta: float = 1e-3
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         self.best: float = float("inf")
         self.bad_rounds: int = 0
 
@@ -95,7 +95,7 @@ class FederatedSession:
 
     def __init__(self, model_id: str, members: Sequence[str],
                  server: str, global_adapter: Any, *,
-                 min_cohort: int = 3):
+                 min_cohort: int = 3) -> None:
         self.model_id = model_id
         self.members: List[str] = list(members)
         self.server = server

@@ -34,7 +34,7 @@ class LinearLatencyModel:
     max_samples: int = 512
     ridge: float = 1e-6
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         self._samples: Deque[Tuple[float, float]] = collections.deque(
             maxlen=self.max_samples)
 
@@ -82,7 +82,7 @@ class BivariateLatencyModel:
     max_samples: int = 512
     ridge: float = 1e-6
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         self._samples: Deque[Tuple[float, float, float]] = collections.deque(
             maxlen=self.max_samples)
 

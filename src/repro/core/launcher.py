@@ -65,7 +65,7 @@ class FineTuneTaskLauncher:
                  states: ClusterStateManager,
                  global_adapters: Dict[str, Any],
                  on_adapter_update: Callable[[str, Any, int], None]
-                 = lambda model_id, adapter, version: None):
+                 = lambda model_id, adapter, version: None) -> None:
         self.cfg = cfg
         self.replicas = replicas
         self.states = states

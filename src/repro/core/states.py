@@ -36,7 +36,7 @@ class EWMAWindow:
     window: int = 12            # T
     decay: float = 0.35         # λ
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         self._values: List[float] = []
 
     def observe(self, value: float) -> None:
@@ -90,7 +90,7 @@ class ReplicaStateTracker:
     policy: StatePolicy
     state: ReplicaState = ReplicaState.SERVING
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         self.util_ewma = EWMAWindow(self.policy.window, self.policy.decay)
         self.queue_ewma = EWMAWindow(self.policy.window, self.policy.decay)
         self.unselected_rounds = 0
@@ -113,7 +113,7 @@ class ClusterStateManager:
     """Evaluates Eq. 1–4 across the cluster each monitoring tick and owns
     every replica's state variable."""
 
-    def __init__(self, policy: Optional[StatePolicy] = None):
+    def __init__(self, policy: Optional[StatePolicy] = None) -> None:
         self.policy = policy or StatePolicy()
         self.trackers: Dict[str, ReplicaStateTracker] = {}
 

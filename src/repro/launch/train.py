@@ -57,9 +57,16 @@ def run_training(arch: str, *, smoke: bool = True, steps: int = 100,
                 print(f"restored step {lat}")
 
     jit_step = jax.jit(engine.train_step, donate_argnums=(1, 2))
+
+    def _snap(tree):
+        # the rollback snapshot must own its buffers: jit_step DONATES
+        # lora/opt_state, so an aliasing snapshot would hold deleted
+        # device memory on any backend that honors donation
+        return jax.tree.map(jnp.copy, tree)
+
     noise = NoiseScaleEMA()
     losses = []
-    last_good = (lora, opt_state, start_step)
+    last_good = (_snap(lora), _snap(opt_state), start_step)
     t0 = time.time()
     step = start_step
     while step < steps:
@@ -94,7 +101,7 @@ def run_training(arch: str, *, smoke: bool = True, steps: int = 100,
         if ckpt and step % ckpt_every == 0:
             ckpt.save(step, (lora, opt_state),
                       extra={"arch": arch, "loss": loss})
-            last_good = (lora, opt_state, step)
+            last_good = (_snap(lora), _snap(opt_state), step)
         if verbose and step % log_every == 0:
             print(f"step {step:5d} loss {loss:.4f} "
                   f"gnorm {float(metrics['grad_norm']):.3f} "

@@ -420,12 +420,17 @@ class RetryPolicy:
     def __post_init__(self):
         self.retried = 0
         self.rejected: List[Request] = []
+        # terminal-stays-terminal FSM shadow, armed by REPRO_SANITIZE=1
+        from repro.runtime.sanitize import request_sanitizer
+        self._san = request_sanitizer()
 
     def on_requeue(self, req: Request, now: float, *,
                    replica_died: bool) -> bool:
         """Charge one re-admission.  Returns True if the request may be
         requeued; False marks it terminally failed (the caller must NOT
         requeue it)."""
+        if self._san is not None:
+            self._san.check_requeue(req)
         if replica_died:
             req.failures += 1
         req.retries += 1

@@ -42,6 +42,8 @@ from typing import (
 
 import numpy as np
 
+from repro.runtime.sanitize import block_sanitizer
+
 
 def blocks_for(n_tokens: int, block_size: int) -> int:
     """Blocks needed to hold ``n_tokens`` cache rows."""
@@ -72,7 +74,7 @@ class BlockAllocator:
     """
 
     def __init__(self, n_blocks: int, block_size: int,
-                 n_scratch: int = 1):
+                 n_scratch: int = 1) -> None:
         if n_blocks <= n_scratch:
             raise ValueError(
                 f"n_blocks {n_blocks} must exceed scratch count "
@@ -95,6 +97,9 @@ class BlockAllocator:
         # called with a block id when a retained block is reclaimed by
         # ``take`` — the prefix cache drops its entry there
         self.on_reclaim: Optional[Callable[[int], None]] = None
+        # shadow refcount/reservation mirror, armed by REPRO_SANITIZE=1
+        # (None otherwise — every hook below is one is-not-None test)
+        self.san = block_sanitizer(self)
 
     # ------------------------------------------------------------ queries --
     @property
@@ -130,11 +135,15 @@ class BlockAllocator:
                 f"reserve({n}): only {self.available()} unreserved "
                 f"blocks available")
         self.reserved += n
+        if self.san is not None:
+            self.san.on_reserve(n)
 
     def release(self, n: int) -> None:
         assert 0 <= n <= self.reserved, \
             f"release({n}) exceeds outstanding reservation {self.reserved}"
         self.reserved -= n
+        if self.san is not None:
+            self.san.on_release(n)
 
     def take(self, n: int) -> List[int]:
         """Convert ``n`` reserved blocks into concrete pool block ids,
@@ -162,6 +171,8 @@ class BlockAllocator:
             ids.append(bid)
         self.reserved -= n
         self.peak_used = max(self.peak_used, self.n_used)
+        if self.san is not None:
+            self.san.on_take(ids)
         return ids
 
     def share(self, ids: Sequence[int]) -> None:
@@ -174,6 +185,8 @@ class BlockAllocator:
                     f"share of unreferenced block {b} (refcount "
                     f"{self._ref[b]})")
             self._ref[b] += 1
+        if self.san is not None:
+            self.san.on_share(list(ids))
 
     def acquire(self, ids: Sequence[int]) -> None:
         """Take one reference on each block for a prefix-cache hit:
@@ -190,6 +203,8 @@ class BlockAllocator:
                     f"acquire of free block {b}: prefix cache points "
                     "at reclaimed content")
         self.peak_used = max(self.peak_used, self.n_used)
+        if self.san is not None:
+            self.san.on_acquire(list(ids))
 
     def n_would_revive(self, ids: Sequence[int]) -> int:
         """How many of ``ids`` would come out of the retained pool on
@@ -215,6 +230,8 @@ class BlockAllocator:
                     self._free.append(b)
         assert len(self._free) + len(self._retained) <= self.capacity, \
             "free-list overflow: refcount accounting broken"
+        if self.san is not None:
+            self.san.on_free(list(ids))
 
     # -------------------------------------------------------------- pinning -
     def pin(self, bid: int) -> None:
@@ -265,7 +282,7 @@ class PrefixCache:
     ``unregister_block`` before writing a registered block in place
     (ring wrap on a refcount-1 block)."""
 
-    def __init__(self, allocator: BlockAllocator):
+    def __init__(self, allocator: BlockAllocator) -> None:
         self.alloc = allocator
         self.block_size = allocator.block_size
         allocator.on_reclaim = self._on_reclaim

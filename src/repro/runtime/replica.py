@@ -925,6 +925,6 @@ class LiveReplica:
             # serving-only replica with no training signal yet: probe
             # the current adapter's CE on a held-out-style batch so
             # BatchResult.quality tracks the real model, not a constant
-            self._last_loss = float(self._jit_loss(
+            self._last_loss = float(self._jit_loss(  # lint: host-sync-ok cold quality probe, cached in _last_loss — not per-token
                 self.params, self.lora, self.data_fn(4)))
         return 1.0 / max(self._last_loss, 1e-6)

@@ -82,6 +82,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.runtime.paging import BlockAllocator, PrefixCache, blocks_for
+from repro.runtime.sanitize import adapter_sanitizer, lifecycle_sanitizer
 
 
 @functools.lru_cache(maxsize=16)
@@ -280,6 +281,9 @@ class AdapterRegistry:
         self.hits = 0
         self.loads = 0
         self.evictions = 0
+        # shadow residency/refcount/version mirror, armed by
+        # REPRO_SANITIZE=1 (None otherwise)
+        self.san = adapter_sanitizer()
 
     # ---------------------------------------------------------- tenants --
     def register(self, adapter_id: str, tree: Any,
@@ -291,12 +295,16 @@ class AdapterRegistry:
                 "update() to change a live tenant's weights")
         self._host[adapter_id] = tree
         self._version[adapter_id] = version
+        if self.san is not None:
+            self.san.on_register(adapter_id, version)
 
     def unregister(self, adapter_id: str) -> None:
         if self.refcount(adapter_id) > 0:
             raise AdapterError(
                 f"{adapter_id}: unregister with {self.refcount(adapter_id)} "
                 "in-flight refs")
+        if self.san is not None:
+            self.san.on_unregister(adapter_id)
         if adapter_id in self._slot:
             self._free.append(self._slot.pop(adapter_id))
             self._refs.pop(adapter_id, None)
@@ -344,11 +352,15 @@ class AdapterRegistry:
             self.hits += 1
             self._lru.pop(adapter_id, None)
             self._refs[adapter_id] = self._refs.get(adapter_id, 0) + 1
+            if self.san is not None:
+                self.san.on_acquire(adapter_id)
             return slot
         if self._free:
             slot = self._free.pop()
         elif self._lru:
             cold, slot = self._lru.popitem(last=False)
+            if self.san is not None:
+                self.san.on_evict(cold)
             del self._slot[cold]
             self._refs.pop(cold, None)
             self.evictions += 1
@@ -362,12 +374,16 @@ class AdapterRegistry:
         self.loads += 1
         self._slot[adapter_id] = slot
         self._refs[adapter_id] = 1
+        if self.san is not None:
+            self.san.on_acquire(adapter_id)
         return slot
 
     def release(self, adapter_id: str) -> None:
         refs = self._refs.get(adapter_id, 0)
         if refs <= 0:
             raise AdapterError(f"{adapter_id}: release without acquire")
+        if self.san is not None:
+            self.san.on_release(adapter_id)
         refs -= 1
         self._refs[adapter_id] = refs
         if refs == 0:
@@ -388,6 +404,8 @@ class AdapterRegistry:
         if not tree_finite(tree):
             raise AdapterError(
                 f"{adapter_id}: refusing non-finite adapter publish")
+        if self.san is not None:
+            self.san.begin_publish(adapter_id, version)
         self._host[adapter_id] = tree
         if version is not None:
             self._version[adapter_id] = version
@@ -395,6 +413,8 @@ class AdapterRegistry:
         if slot is not None:
             self._stack = _write_adapter_slot(
                 self._stack, tree, jnp.asarray(slot, jnp.int32))
+        if self.san is not None:
+            self.san.end_publish(adapter_id, version)
 
     def device_lora(self) -> Any:
         """The stacked device tree the segmented decode paths consume."""
@@ -549,6 +569,9 @@ class ContinuousBatcher:
         # registry mode: the adapter id each slot's request pinned at
         # admission (None = base-only row, decode slot index -1)
         self.slot_aid: List[Optional[str]] = [None] * n_slots
+        # request-lifecycle FSM shadow, armed by REPRO_SANITIZE=1
+        # (None otherwise — hooks cost one is-not-None test)
+        self._lsan = lifecycle_sanitizer()
         self.stats = ServeStats()
         self.train_losses: List[float] = []
         # shadow adapter for double-buffered train sessions (None = train
@@ -592,6 +615,8 @@ class ContinuousBatcher:
         # a slot holds prompt + generation; clamp so writes stay in-pool
         budget = self.max_seq - len(req.prompt)
         req.max_new_tokens = max(1, min(req.max_new_tokens, budget))
+        if self._lsan is not None:
+            self._lsan.on_submit(req)
         self.queue.append(req)
 
     def active_slots(self) -> List[int]:
@@ -634,6 +659,8 @@ class ContinuousBatcher:
             jnp.int32)
 
     def _record_finish(self, req: GenRequest, now: float) -> None:
+        if self._lsan is not None:
+            self._lsan.on_finish(req)
         req.finished_at = now
         req.finished_wall = time.perf_counter()
         self.stats.finished += 1
@@ -659,9 +686,11 @@ class ContinuousBatcher:
             outs = [self._jit_prefill_exact(
                 self.params, self.lora,
                 {"tokens": jnp.asarray(r.prompt[None])}) for r in reqs]
-            firsts = np.array([int(jnp.argmax(logits[0, -1]))
-                               for logits, _ in outs], np.int32)
             last = [logits[0, -1] for logits, _ in outs]
+            # stack the wave's last-position logits on device so the
+            # wave costs ONE argmax transfer, not one per request
+            firsts = np.asarray(  # lint: host-sync-ok one batched argmax pull per prefill wave
+                jnp.argmax(jnp.stack(last), axis=-1), np.int32)
             return firsts, [(pre, 0) for _, pre in outs], last
         lens = np.array([len(r.prompt) for r in reqs], np.int32)
         matched = [m for m, _ in plans] if plans else [[] for _ in reqs]
@@ -690,8 +719,8 @@ class ContinuousBatcher:
                 jnp.asarray(suf_lens), jnp.asarray(pre_lens),
                 self.caches, jnp.asarray(pre_tables),
                 self._wave_adapter_idx(reqs))
-            firsts = np.asarray(jnp.argmax(logits[:, -1], axis=-1),
-                                np.int32)
+            firsts = np.asarray(  # lint: host-sync-ok one batched argmax pull per prefill wave
+                jnp.argmax(logits[:, -1], axis=-1), np.int32)
             return firsts, [(pre, j) for j in range(len(reqs))], \
                 logits[:, -1]
         padded = np.zeros((len(reqs), self.prompt_pad), np.int32)
@@ -701,7 +730,8 @@ class ContinuousBatcher:
             self.params, self._serve_lora(),
             {"tokens": jnp.asarray(padded)}, jnp.asarray(lens),
             adapter_idx=self._wave_adapter_idx(reqs))
-        firsts = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+        firsts = np.asarray(  # lint: host-sync-ok one batched argmax pull per prefill wave
+            jnp.argmax(logits[:, -1], axis=-1), np.int32)
         return firsts, [(pre, j) for j in range(len(reqs))], logits[:, -1]
 
     def admit(self, now: float = 0.0) -> List[GenRequest]:
@@ -765,6 +795,8 @@ class ContinuousBatcher:
                         namespace=req.adapter_id)
                 plans.append((matched, need))
             req = self.queue.popleft()
+            if self._lsan is not None:
+                self._lsan.on_admit(req)
             if self.adapters is not None and req.adapter_id is not None:
                 # pin the tenant's device slot for the request lifetime
                 # (loads from host on a miss; can_acquire gated above)
@@ -962,6 +994,8 @@ class ContinuousBatcher:
                     self.block_tables[:, :width])
                 self._dev_tables_width = width
             tables = self._dev_tables
+        if self._lsan is not None:
+            self._sanitize_wave(active)
         if train_batch is not None:
             if self.paged:
                 (new_tl, self.opt_state, logits, self.caches,
@@ -991,13 +1025,14 @@ class ContinuousBatcher:
                 self.params, self._serve_lora(), self.caches, toks, pos,
                 attn_backend=self.attn_backend, **dec_kw)
         self.stats.decode_steps += 1
-        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+        nxt = np.asarray(  # lint: host-sync-ok one batched argmax pull per decode wave
+            jnp.argmax(logits[:, -1], axis=-1), np.int32)
         if any(self.slot_req[i].samples for i in active):
             # ONE batched host fetch of the last-position logits for the
             # whole tick; greedy-only ticks keep the transfer-free
             # device argmax path
             nxt = nxt.copy()    # device-backed arrays are read-only
-            host_rows = np.asarray(logits[:, -1])
+            host_rows = np.asarray(logits[:, -1])  # lint: host-sync-ok one batched logits pull per sampling tick
             for i in active:
                 req = self.slot_req[i]
                 if req.samples:
@@ -1017,6 +1052,19 @@ class ContinuousBatcher:
                 self._evict(i)
                 finished.append(req)
         return finished
+
+    def _sanitize_wave(self, active: List[int]) -> None:
+        """REPRO_SANITIZE=1 only (``_lsan`` gates the call): verify the
+        wave the decode program is about to consume — every slot holds
+        an ACTIVE request, every gathered block is live, every write
+        target is private and non-scratch, reservations balance, and
+        every routed adapter slot is pinned, resident and not
+        mid-publish."""
+        self._lsan.check_decode_wave(self, active)
+        if self.paged and self.allocator.san is not None:
+            self.allocator.san.check_decode_wave(self, active)
+        if self.adapters is not None and self.adapters.san is not None:
+            self.adapters.san.check_decode_wave(self, active)
 
     def _evict(self, i: int) -> None:
         """Free slot ``i`` completely: request pointer, ragged position
@@ -1038,6 +1086,8 @@ class ContinuousBatcher:
             self.slot_reserved[i] = 0
             self.block_tables[i, :] = 0   # back to scratch block 0
             self._dev_tables = None
+            if self.allocator.san is not None:
+                self.allocator.san.check_evicted(self, i)
 
     def drain_all(self) -> List[GenRequest]:
         """Failover teardown: evict every active slot, clear the queue,
@@ -1055,6 +1105,10 @@ class ContinuousBatcher:
             r.tokens.clear()
             r.prefill_at = None
             r.rng = None
+            if self._lsan is not None:
+                self._lsan.on_drain(r)
+        if self.paged and self.allocator.san is not None:
+            self.allocator.san.check_quiescent(self)
         return out
 
     def _train_adapter(self) -> Any:
@@ -1081,10 +1135,11 @@ class ContinuousBatcher:
     def _record_train(self, metrics: Dict[str, Any]) -> None:
         """One host sync per train tick: loss history + the scalar
         gradient stats the noise-scale estimator consumes."""
+        host = jax.device_get(metrics)  # lint: host-sync-ok one batched metrics pull per train tick
         self.last_train_metrics = {
-            "ce_loss": float(metrics["ce_loss"]),
-            "micro_grad_sqnorm": float(metrics["micro_grad_sqnorm"]),
-            "grad_sqnorm": float(metrics["grad_sqnorm"]),
+            "ce_loss": float(host["ce_loss"]),
+            "micro_grad_sqnorm": float(host["micro_grad_sqnorm"]),
+            "grad_sqnorm": float(host["grad_sqnorm"]),
         }
         loss = self.last_train_metrics["ce_loss"]
         self.train_losses.append(loss)
@@ -1162,7 +1217,8 @@ def static_batch_serve(engine, params, lora, requests: Sequence[GenRequest],
             lambda pool, p: jax.lax.dynamic_update_slice(
                 pool, p.astype(pool.dtype), (0,) * pool.ndim),
             caches, {"kv": pre["kv"]})
-        toks = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+        toks = np.asarray(  # lint: host-sync-ok one batched argmax pull per prefill batch
+            jnp.argmax(logits[:, -1], axis=-1), np.int32)
         pos = lens.copy()
         stats.admitted += bsz
         stats.prefill_tokens += int(lens.sum())
@@ -1179,7 +1235,8 @@ def static_batch_serve(engine, params, lora, requests: Sequence[GenRequest],
                                         jnp.asarray(toks[:, None]),
                                         jnp.asarray(pos))
             stats.decode_steps += 1
-            toks = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+            toks = np.asarray(  # lint: host-sync-ok one batched argmax pull per decode step
+                jnp.argmax(logits[:, -1], axis=-1), np.int32)
             pos += 1
             for i, r in enumerate(batch):
                 if r.done:

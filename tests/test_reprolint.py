@@ -1,0 +1,278 @@
+"""reprolint regression tests: each rule class must FIRE on a seeded
+violation and stay SILENT on the shipped tree, the pragma escape hatch
+must suppress (and demand a reason), and the interface-conformance rule
+must catch a real drift — a method removed from a copy of the real
+``SimReplica``."""
+import importlib.util
+import pathlib
+import sys
+import textwrap
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+_spec = importlib.util.spec_from_file_location(
+    "reprolint", REPO / "tools" / "analysis" / "reprolint.py")
+reprolint = importlib.util.module_from_spec(_spec)
+sys.modules["reprolint"] = reprolint      # dataclasses needs the module
+_spec.loader.exec_module(reprolint)
+
+
+def _tree(tmp_path, files):
+    """Materialize a minimal repo tree from {relpath: source}."""
+    for rel, src in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src))
+    return str(tmp_path)
+
+
+def _rules(findings):
+    return sorted({f.rule for f in findings})
+
+
+# ------------------------------------------------------- shipped tree ------
+def test_shipped_tree_is_clean():
+    """The gate CI enforces: zero findings on the repo as committed."""
+    findings = reprolint.lint_root(str(REPO))
+    assert findings == [], "\n".join(f.render(str(REPO)) for f in findings)
+
+
+# ------------------------------------------------------ JAX hazard rules ---
+def test_host_sync_in_hot_path_fires(tmp_path):
+    root = _tree(tmp_path, {"src/repro/runtime/serving_loop.py": """\
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+
+        class ContinuousBatcher:
+            def step(self, logits):
+                x = logits.item()
+                y = float(jnp.argmax(logits))
+                z = np.asarray(jnp.exp(logits))
+                w = jax.device_get(logits)
+                return x, y, z, w
+        """})
+    findings = reprolint.lint_root(root, rules={"RL001"})
+    assert len(findings) == 4
+    assert _rules(findings) == ["RL001"]
+    assert all("ContinuousBatcher.step" in f.msg for f in findings)
+
+
+def test_host_sync_reaches_through_helpers(tmp_path):
+    """The closure walks helper calls: a sync buried two frames below
+    ``step`` is still a hot-path sync."""
+    root = _tree(tmp_path, {"src/repro/runtime/serving_loop.py": """\
+        import jax.numpy as jnp
+
+        def _inner(logits):
+            return logits.item()
+
+        def _helper(logits):
+            return _inner(logits)
+
+        class ContinuousBatcher:
+            def step(self, logits):
+                return _helper(logits)
+        """})
+    findings = reprolint.lint_root(root, rules={"RL001"})
+    assert len(findings) == 1 and findings[0].rule == "RL001"
+
+
+def test_time_in_jitted_closure_fires(tmp_path):
+    root = _tree(tmp_path, {"src/repro/runtime/kern.py": """\
+        import time
+        import jax
+
+        def _traced(a):
+            return a * time.time()
+
+        _jit_traced = jax.jit(_traced)
+        """})
+    findings = reprolint.lint_root(root, rules={"RL002"})
+    assert len(findings) == 1 and findings[0].rule == "RL002"
+    assert "wall-clock" in findings[0].msg
+
+
+def test_unhashable_static_arg_fires(tmp_path):
+    root = _tree(tmp_path, {"src/repro/runtime/kern.py": """\
+        import jax
+
+        def _traced(a, *, mode=None):
+            return a
+
+        _jit_traced = jax.jit(_traced, static_argnames=("mode",))
+
+        def caller(buf):
+            return _jit_traced(buf, mode=["not", "hashable"])
+        """})
+    findings = reprolint.lint_root(root, rules={"RL003"})
+    assert len(findings) == 1 and findings[0].rule == "RL003"
+
+
+def test_donated_buffer_reuse_fires(tmp_path):
+    root = _tree(tmp_path, {"src/repro/runtime/kern.py": """\
+        import jax
+
+        def _traced(a):
+            return a * 2
+
+        _jit_donor = jax.jit(_traced, donate_argnums=(0,))
+
+        def caller(buf):
+            y = _jit_donor(buf)
+            return buf + y
+        """})
+    findings = reprolint.lint_root(root, rules={"RL004"})
+    assert len(findings) == 1 and findings[0].rule == "RL004"
+    assert "donat" in findings[0].msg.lower()
+
+
+def test_donated_buffer_rebound_is_clean(tmp_path):
+    """Rebinding the name to the result (the standard donate idiom)
+    must NOT be flagged."""
+    root = _tree(tmp_path, {"src/repro/runtime/kern.py": """\
+        import jax
+
+        def _traced(a):
+            return a * 2
+
+        _jit_donor = jax.jit(_traced, donate_argnums=(0,))
+
+        def caller(buf):
+            buf = _jit_donor(buf)
+            return buf + 1
+        """})
+    assert reprolint.lint_root(root, rules={"RL004"}) == []
+
+
+# --------------------------------------------------------- pragma ----------
+def test_pragma_suppresses_with_reason(tmp_path):
+    root = _tree(tmp_path, {"src/repro/runtime/serving_loop.py": """\
+        class ContinuousBatcher:
+            def step(self, logits):
+                return logits.item()  # lint: host-sync-ok single scalar per request, measured
+        """})
+    assert reprolint.lint_root(root, rules={"RL001"}) == []
+
+
+def test_pragma_without_reason_fires_rl000(tmp_path):
+    root = _tree(tmp_path, {"src/repro/runtime/serving_loop.py": """\
+        class ContinuousBatcher:
+            def step(self, logits):
+                return logits.item()  # lint: host-sync-ok
+        """})
+    findings = reprolint.lint_root(root, rules={"RL001"})
+    assert _rules(findings) == ["RL000"]
+    assert "reason" in findings[0].msg
+
+
+# -------------------------------------------------- conformance rules ------
+def _strip_method(src: str, meth: str) -> str:
+    """Delete one method (header + body) from a class, textually —
+    every other line stays identical to the shipped file."""
+    lines = src.splitlines(keepends=True)
+    start = next(i for i, ln in enumerate(lines)
+                 if ln.startswith(f"    def {meth}("))
+    end = start + 1
+    while end < len(lines):
+        ln = lines[end]
+        if ln.strip() and not ln.startswith("        "):
+            break
+        end += 1
+    return "".join(lines[:start] + lines[end:])
+
+
+def test_replica_conformance_catches_removed_method(tmp_path):
+    """The satellite-mandated regression: copy the REAL interfaces and
+    SimReplica into a scratch tree, remove one ``ReplicaHandle`` method
+    from the copy, and assert reprolint names exactly that drift."""
+    interfaces = (REPO / "src/repro/core/interfaces.py").read_text()
+    replica = (REPO / "src/repro/runtime/replica.py").read_text()
+    mutated = _strip_method(replica, "begin_round")
+    assert "def begin_round" in replica
+    assert mutated.count("def begin_round") \
+        == replica.count("def begin_round") - 1
+    root = _tree(tmp_path, {
+        "src/repro/core/interfaces.py": interfaces,
+        "src/repro/runtime/replica.py": mutated,
+    })
+    findings = reprolint.lint_root(root, rules={"RL101"})
+    assert len(findings) == 1 and findings[0].rule == "RL101"
+    assert "begin_round" in findings[0].msg \
+        and "SimReplica" in findings[0].msg
+
+    # the unmutated copies are conformant — the finding is the drift,
+    # not an artifact of the scratch tree
+    clean = _tree(tmp_path / "clean", {
+        "src/repro/core/interfaces.py": interfaces,
+        "src/repro/runtime/replica.py": replica,
+    })
+    assert reprolint.lint_root(clean, rules={"RL101"}) == []
+
+
+def test_stats_coverage_fires_on_unfolded_field(tmp_path):
+    root = _tree(tmp_path, {"src/repro/runtime/metrics.py": """\
+        import dataclasses
+
+        @dataclasses.dataclass
+        class ServeStats:
+            admitted: int = 0
+            ghost_field: int = 0
+
+        def aggregate_serve_stats(per):
+            return {"admitted": sum(p.admitted for p in per)}
+        """})
+    findings = reprolint.lint_root(root, rules={"RL102"})
+    assert len(findings) == 1 and findings[0].rule == "RL102"
+    assert "ghost_field" in findings[0].msg
+
+
+def test_request_threading_fires_on_dead_field(tmp_path):
+    root = _tree(tmp_path, {"src/repro/runtime/serving_loop.py": """\
+        import dataclasses
+
+        @dataclasses.dataclass
+        class GenRequest:
+            request_id: int
+            dead_knob: float = 0.0
+
+        def submit(req):
+            return req.request_id
+        """})
+    findings = reprolint.lint_root(root, rules={"RL103"})
+    assert len(findings) == 1 and findings[0].rule == "RL103"
+    assert "dead_knob" in findings[0].msg
+
+
+def test_bench_registration_fires_then_clears(tmp_path):
+    files = {
+        "benchmarks/rogue.py": 'OUT = "BENCH_rogue.json"\n',
+        "scripts/ci.sh": "set -e\n",
+    }
+    root = _tree(tmp_path, files)
+    findings = reprolint.lint_root(root, rules={"RL104"})
+    assert len(findings) == 1 and findings[0].rule == "RL104"
+    assert "rogue.py" in findings[0].msg
+    (tmp_path / "scripts/ci.sh").write_text(
+        "set -e\npython benchmarks/rogue.py --smoke\n")
+    assert reprolint.lint_root(root, rules={"RL104"}) == []
+
+
+# ------------------------------------------------------------- CLI ---------
+def test_main_exit_codes(tmp_path, capsys):
+    dirty = _tree(tmp_path / "dirty", {
+        "src/repro/runtime/serving_loop.py": """\
+        class ContinuousBatcher:
+            def step(self, logits):
+                return logits.item()
+        """})
+    assert reprolint.main(["--root", dirty]) == 1
+    out = capsys.readouterr().out
+    assert "RL001[host-sync]" in out
+
+    clean = _tree(tmp_path / "clean",
+                  {"src/repro/runtime/ok.py": "x = 1\n"})
+    assert reprolint.main(["--root", clean]) == 0
+    assert "reprolint: clean" in capsys.readouterr().out

@@ -1,0 +1,225 @@
+"""reprosan mutation tests: deliberately break each hand-maintained
+runtime invariant and assert the shadow sanitizers catch it with a
+precise diagnostic — plus a clean end-to-end sanitized run proving the
+instrumentation reports nothing on the real runtime.
+
+Factories read ``REPRO_SANITIZE`` once at construction, so every test
+arms the env var BEFORE building its objects."""
+import types
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import sample_prompts as _prompts
+from repro.configs.registry import get_config
+from repro.core.engine import make_engine
+from repro.core.interfaces import Request
+from repro.runtime import sanitize
+from repro.runtime.fault import RetryPolicy
+from repro.runtime.sanitize import (
+    AdapterSanitizer, RequestLifecycle, SanitizeError,
+)
+from repro.runtime.serving_loop import (
+    AdapterRegistry, ContinuousBatcher, GenRequest,
+)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("qwen1.5-0.5b").scaled()
+    engine = make_engine(cfg, lr=3e-3)
+    model = engine.model
+    params = model.init(jax.random.key(0))
+    lora = jax.tree.map(lambda x: x + 0.01,
+                        model.init_lora(jax.random.key(1)))
+    return cfg, engine, model, params, lora
+
+
+@pytest.fixture
+def armed(monkeypatch):
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    assert sanitize.enabled()
+
+
+def _batcher(engine, params, lora, **kw):
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("max_seq", 24)
+    kw.setdefault("prompt_pad", 8)
+    return ContinuousBatcher(engine, params, lora, paged=True,
+                             block_size=4, **kw)
+
+
+# ------------------------------------------------------ block sanitizer ----
+def test_use_after_free_gather_detected(setup, armed):
+    """Freeing a slot's blocks behind the batcher's back (the classic
+    lifetime bug) must fail the NEXT decode wave, not corrupt KV."""
+    cfg, engine, model, params, lora = setup
+    b = _batcher(engine, params, lora)
+    b.submit(GenRequest(request_id=0, prompt=_prompts(cfg, 1, [6])[0],
+                        max_new_tokens=8))
+    b.step()                                  # admit + first decode tick
+    victim = b.active_slots()[0]
+    b.allocator.free(list(b.slot_blocks[victim]))   # the mutation
+    with pytest.raises(SanitizeError, match="use-after-free-gather"):
+        b.step()
+
+
+def test_skipped_cow_shared_write_detected(setup, armed):
+    """A write targeting a refcount>1 prefix block means copy-on-write
+    was skipped — sharers would observe torn KV."""
+    cfg, engine, model, params, lora = setup
+    b = _batcher(engine, params, lora, prefix_cache=True)
+    common = _prompts(cfg, 1, [8])[0]         # two full 4-token blocks
+    r0 = GenRequest(request_id=0, prompt=common.copy(), max_new_tokens=6)
+    b.run([r0])                               # registers the prefix
+    r1 = GenRequest(request_id=1, prompt=common.copy(), max_new_tokens=6)
+    r2 = GenRequest(request_id=2, prompt=common.copy(), max_new_tokens=6)
+    b.submit(r1)
+    b.submit(r2)
+    b.step()                                  # both share prefix blocks
+    a0 = b.active_slots()[0]
+    shared = [k for k, bk in enumerate(b.slot_blocks[a0])
+              if b.allocator.ref(bk) > 1]
+    assert shared, "fixture bug: no shared prefix block materialized"
+    # the mutation: skip the COW pre-pass (prefix_cache gates it) and
+    # point the slot's write cursor into the still-shared block
+    b.prefix_cache = None
+    b.slot_pos[a0] = shared[0] * b.block_size
+    with pytest.raises(SanitizeError, match="shared-write"):
+        b.step()
+
+
+def test_reservation_leak_detected(setup, armed):
+    """Reserved headroom no slot accounts for is a leak that slowly
+    starves admission."""
+    cfg, engine, model, params, lora = setup
+    b = _batcher(engine, params, lora)
+    b.submit(GenRequest(request_id=0, prompt=_prompts(cfg, 1, [6])[0],
+                        max_new_tokens=8))
+    b.step()
+    b.allocator.reserve(2)                    # the mutation
+    with pytest.raises(SanitizeError, match="reservation-leak"):
+        b.step()
+
+
+def test_refcount_drift_detected(setup, armed):
+    """The mirror cross-check pinpoints accounting bugs INSIDE the
+    allocator: a refcount bumped without going through a hook."""
+    cfg, engine, model, params, lora = setup
+    b = _batcher(engine, params, lora)
+    b.submit(GenRequest(request_id=0, prompt=_prompts(cfg, 1, [6])[0],
+                        max_new_tokens=8))
+    b.step()
+    blk = b.slot_blocks[b.active_slots()[0]][0]
+    b.allocator._ref[blk] += 1                # the mutation: silent bump
+    with pytest.raises(SanitizeError, match="refcount-drift"):
+        b.step()
+
+
+# ---------------------------------------------------- adapter sanitizer ----
+def _tenant_registry(model, n, capacity, armed_env=True):
+    from repro.runtime.fabric import make_tenant_adapters
+    reg = AdapterRegistry(model, capacity=capacity)
+    for t, tree in enumerate(make_tenant_adapters(model, n, seed=1)):
+        reg.register(f"tenant{t}", tree, version=1)
+    return reg
+
+
+def test_adapter_evict_with_live_refs_detected(setup, armed):
+    """A pinned tenant leaking into the LRU cold list (a lost-refcount
+    bug) must be caught at eviction, before its slot is reused."""
+    cfg, engine, model, params, lora = setup
+    reg = _tenant_registry(model, 2, capacity=1)
+    reg.acquire("tenant0")                    # pinned: 1 live ref
+    reg._lru["tenant0"] = reg._slot["tenant0"]   # the mutation
+    with pytest.raises(SanitizeError, match="evict-live-refs"):
+        reg.acquire("tenant1")                # needs the slot -> evicts
+
+
+def test_adapter_version_regression_detected(setup, armed):
+    """Publishing an older version after a newer one was served rolls
+    tenants back silently — the sanitizer makes it loud."""
+    cfg, engine, model, params, lora = setup
+    reg = _tenant_registry(model, 1, capacity=1)
+    tree = reg.host_tree("tenant0")
+    reg.update("tenant0", tree, version=5)
+    with pytest.raises(SanitizeError, match="version-regression"):
+        reg.update("tenant0", tree, version=3)
+
+
+def test_adapter_mid_publish_read_detected(setup, armed):
+    """A decode wave reading a slot whose in-place publish is still in
+    flight would see torn weights."""
+    cfg, engine, model, params, lora = setup
+    reg = _tenant_registry(model, 1, capacity=1)
+    reg.acquire("tenant0")
+    san = AdapterSanitizer()
+    san.on_acquire("tenant0")
+    san.begin_publish("tenant0", 2)           # publish never completed
+    fake = types.SimpleNamespace(adapters=reg, slot_aid=["tenant0"])
+    with pytest.raises(SanitizeError, match="mid-publish-read"):
+        san.check_decode_wave(fake, [0])
+
+
+def test_adapter_release_without_acquire_detected(setup, armed):
+    cfg, engine, model, params, lora = setup
+    san = AdapterSanitizer()
+    with pytest.raises(SanitizeError, match="release-without-acquire"):
+        san.on_release("tenant0")
+
+
+# --------------------------------------------------- lifecycle sanitizer ---
+def test_terminal_replay_detected(setup, armed):
+    """Resubmitting a FINISHED request must fail at submit — its tokens
+    would be regenerated and double-counted."""
+    cfg, engine, model, params, lora = setup
+    b = _batcher(engine, params, lora)
+    req = GenRequest(request_id=0, prompt=_prompts(cfg, 1, [6])[0],
+                     max_new_tokens=3)
+    b.run([req])
+    assert req.done
+    with pytest.raises(SanitizeError, match="terminal-replay"):
+        b.submit(req)
+
+
+def test_evicted_slot_decoding_detected():
+    """A decode wave advancing a slot whose request is not ACTIVE means
+    the runtime generates tokens into freed state."""
+    lsan = RequestLifecycle()
+    req = GenRequest(request_id=7, prompt=np.zeros(4, np.int32))
+    lsan.on_submit(req)
+    lsan.on_admit(req)
+    lsan.on_finish(req)                       # slot was evicted...
+    fake = types.SimpleNamespace(slot_req=[req])   # ...but still decodes
+    with pytest.raises(SanitizeError, match="evicted-decoding"):
+        lsan.check_decode_wave(fake, [0])
+
+
+def test_terminal_request_retried_detected(armed):
+    """A served Request handed back to RetryPolicy.on_requeue is a
+    control-plane lifecycle bug (the SLO clock must never restart)."""
+    pol = RetryPolicy()
+    req = Request(request_id=0, stream_id="s", arrival=0.0, deadline=9.0)
+    req.completed_at = 1.0                    # terminal: already served
+    with pytest.raises(SanitizeError, match="terminal-retried"):
+        pol.on_requeue(req, now=2.0, replica_died=True)
+
+
+# --------------------------------------------------------- clean run -------
+def test_clean_sanitized_run_reports_nothing(setup, armed):
+    """The full paged + prefix-cache + multi-tenant serving path runs
+    under REPRO_SANITIZE=1 with zero reports — the sanitizers flag only
+    injected mutations, never the real runtime."""
+    cfg, engine, model, params, lora = setup
+    baseline = len(sanitize.reports())
+    reg = _tenant_registry(model, 2, capacity=2)
+    b = _batcher(engine, params, lora, n_slots=2, prefix_cache=True,
+                 adapters=reg)
+    prompts = _prompts(cfg, 4, [6, 6, 7, 5])
+    reqs = [GenRequest(request_id=i, prompt=p, max_new_tokens=4,
+                       adapter_id=f"tenant{i % 2}")
+            for i, p in enumerate(prompts)]
+    b.run(reqs)
+    assert all(r.done for r in reqs)
+    assert len(sanitize.reports()) == baseline

@@ -1,0 +1,760 @@
+#!/usr/bin/env python
+"""reprolint — repository-specific AST lint for the CoLLM serving stack.
+
+Static rules over hazards this codebase maintains by hand (see
+tools/analysis/README.md for the full catalogue and pragma format):
+
+  JAX hazards
+    RL001 host-sync     host-device sync (``.item()`` / ``float(...)`` /
+                        ``np.asarray`` / ``jax.device_get`` of device
+                        values) reachable from a per-token hot root
+                        (``ContinuousBatcher.step``,
+                        ``LiveReplica.pump_once``, ...)
+    RL002 time-in-jit   impure ``time.*`` clock calls reachable from a
+                        jit-traced function (baked in at trace time)
+    RL003 static-args   ``jax.jit``/``pallas_call`` static arguments
+                        that are unhashable/mutable (list/dict/set
+                        displays, comprehensions, array constructors)
+    RL004 donation      a buffer passed to a donating jit wrapper
+                        (``donate_argnums``) and read again afterwards
+                        instead of being rebound from the call's result
+
+  architectural conformance
+    RL101 replica-conformance   every public ``ReplicaHandle`` protocol
+                                method implemented by BOTH SimReplica
+                                and LiveReplica
+    RL102 stats-coverage        every ``ServeStats`` field folded by
+                                ``aggregate_serve_stats``
+    RL103 request-threading     every ``GenRequest``/``Request`` field
+                                actually consumed outside its dataclass
+                                (dead fields = dropped threading)
+    RL104 bench-registration    every benchmark writing ``BENCH_*.json``
+                                registered in ``scripts/ci.sh``
+
+Per-line allowlisting: ``# lint: <alias>-ok <reason>`` on any line of
+the flagged statement suppresses that rule there; a pragma with no
+reason is itself an error (RL000).  Conformance findings (RL10x) for
+field definitions accept the pragma on the definition line.
+
+Usage: ``python tools/analysis/reprolint.py [--root PATH]`` — prints
+``path:line: RULE[alias] message`` per finding, exit 1 if any.
+``lint_root(path)`` is the API the regression tests drive.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import dataclasses
+import os
+import re
+import sys
+from typing import Any, Dict, Iterable, List, Optional, Set, Tuple
+
+ALIAS = {
+    "RL000": "pragma",
+    "RL001": "host-sync",
+    "RL002": "time-in-jit",
+    "RL003": "static-args",
+    "RL004": "donation",
+    "RL101": "replica-conformance",
+    "RL102": "stats-coverage",
+    "RL103": "request-threading",
+    "RL104": "bench-registration",
+}
+
+PRAGMA_RE = re.compile(r"#\s*lint:\s*([a-z][a-z0-9-]*)-ok(?:\s+(\S.*))?")
+
+# per-token hot roots: everything reachable from these is a decode /
+# pump hot path and must not host-sync without a pragma
+HOT_ROOTS = (
+    ("ContinuousBatcher", "step"),
+    ("ContinuousBatcher", "run"),
+    ("LiveReplica", "pump_once"),
+    ("ServingFabric", "tick"),
+    (None, "static_batch_serve"),
+)
+
+# module roots whose attribute calls never resolve to repo functions
+_EXTERNAL_ROOTS = {
+    "np", "numpy", "jnp", "jax", "lax", "os", "time", "math", "json",
+    "re", "sys", "collections", "functools", "dataclasses", "hashlib",
+    "itertools", "logging", "ast", "pl", "plgpu", "optax",
+}
+
+_CLOCK_CALLS = {"time.time", "time.perf_counter", "time.monotonic",
+                "datetime.datetime.now", "datetime.now"}
+
+
+@dataclasses.dataclass
+class Finding:
+    path: str
+    line: int
+    rule: str
+    msg: str
+
+    def render(self, root: str) -> str:
+        rel = os.path.relpath(self.path, root)
+        return f"{rel}:{self.line}: {self.rule}[{ALIAS[self.rule]}] " \
+            f"{self.msg}"
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """'a.b.c' for a Name/Attribute chain, None for anything else."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+class Mod:
+    """One parsed source file plus its pragma table."""
+
+    def __init__(self, path: str):
+        self.path = path
+        with open(path, "r") as f:
+            self.src = f.read()
+        self.tree = ast.parse(self.src, filename=path)
+        self.pragmas: Dict[int, Tuple[str, Optional[str]]] = {}
+        for i, ln in enumerate(self.src.splitlines(), 1):
+            m = PRAGMA_RE.search(ln)
+            if m:
+                self.pragmas[i] = (m.group(1), m.group(2))
+
+
+@dataclasses.dataclass
+class Func:
+    qualname: str            # "Class.method" or "func"
+    cls: Optional[str]
+    name: str
+    node: ast.AST            # FunctionDef
+    mod: Mod
+
+
+class Linter:
+    def __init__(self, root: str):
+        self.root = root
+        self.findings: List[Finding] = []
+        self.mods: List[Mod] = []
+        self.runtime_mods: List[Mod] = []
+        self.funcs: Dict[str, Func] = {}      # qualname -> Func
+        self.by_name: Dict[str, List[str]] = {}     # bare -> qualnames
+        self.methods: Dict[str, List[str]] = {}     # attr -> qualnames
+        self._load()
+        self._index()
+
+    # ------------------------------------------------------------- load --
+    def _load(self) -> None:
+        src = os.path.join(self.root, "src")
+        for base, _dirs, files in os.walk(src):
+            for f in sorted(files):
+                if not f.endswith(".py"):
+                    continue
+                path = os.path.join(base, f)
+                try:
+                    mod = Mod(path)
+                except SyntaxError as e:
+                    self._emit(path, e.lineno or 1, "RL000",
+                               f"syntax error: {e.msg}")
+                    continue
+                self.mods.append(mod)
+                if os.sep + os.path.join("repro", "runtime") + os.sep \
+                        in path:
+                    self.runtime_mods.append(mod)
+
+    def _index(self) -> None:
+        for mod in self.mods:
+            for node in mod.tree.body:
+                if isinstance(node, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)):
+                    self._add_func(None, node, mod)
+                elif isinstance(node, ast.ClassDef):
+                    for sub in node.body:
+                        if isinstance(sub, (ast.FunctionDef,
+                                            ast.AsyncFunctionDef)):
+                            self._add_func(node.name, sub, mod)
+
+    def _add_func(self, cls: Optional[str], node: ast.AST,
+                  mod: Mod) -> None:
+        qual = f"{cls}.{node.name}" if cls else node.name
+        if qual in self.funcs:        # first definition wins
+            return
+        fn = Func(qual, cls, node.name, node, mod)
+        self.funcs[qual] = fn
+        if cls is None:
+            self.by_name.setdefault(node.name, []).append(qual)
+        else:
+            self.methods.setdefault(node.name, []).append(qual)
+
+    # ---------------------------------------------------------- pragmas --
+    def _suppressed(self, mod: Mod, node: ast.AST, rule: str) -> bool:
+        lo = getattr(node, "lineno", None)
+        hi = getattr(node, "end_lineno", lo)
+        if lo is None:
+            return False
+        want = ALIAS[rule]
+        for ln in range(lo, (hi or lo) + 1):
+            got = mod.pragmas.get(ln)
+            if got and got[0] == want:
+                if not got[1]:
+                    self._emit(mod.path, ln, "RL000",
+                               f"pragma '{want}-ok' has no reason — "
+                               "state why the violation is safe")
+                return True
+        return False
+
+    def _emit(self, path: str, line: int, rule: str, msg: str) -> None:
+        self.findings.append(Finding(path, line, rule, msg))
+
+    def _flag(self, mod: Mod, node: ast.AST, rule: str,
+              msg: str) -> None:
+        if not self._suppressed(mod, node, rule):
+            self._emit(mod.path, node.lineno, rule, msg)
+
+    # ------------------------------------------------------- call graph --
+    def _edges(self, fn: Func) -> Set[str]:
+        out: Set[str] = set()
+        for node in ast.walk(fn.node):
+            if not isinstance(node, ast.Call):
+                continue
+            f = node.func
+            if isinstance(f, ast.Name):
+                for q in self.by_name.get(f.id, ()):
+                    out.add(q)
+            elif isinstance(f, ast.Attribute):
+                dn = _dotted(f)
+                if dn and dn.split(".", 1)[0] in _EXTERNAL_ROOTS:
+                    continue
+                if isinstance(f.value, ast.Name) and f.value.id == "self" \
+                        and fn.cls is not None \
+                        and f"{fn.cls}.{f.attr}" in self.funcs:
+                    out.add(f"{fn.cls}.{f.attr}")
+                    continue
+                for q in self.methods.get(f.attr, ()):
+                    out.add(q)
+                for q in self.by_name.get(f.attr, ()):
+                    out.add(q)
+        return out
+
+    def _closure(self, roots: Iterable[str]) -> Set[str]:
+        seen: Set[str] = set()
+        work = [q for q in roots if q in self.funcs]
+        while work:
+            q = work.pop()
+            if q in seen:
+                continue
+            seen.add(q)
+            work.extend(self._edges(self.funcs[q]) - seen)
+        return seen
+
+    # =================================================== RL001 host-sync --
+    def _device_call(self, node: ast.Call) -> bool:
+        """A call that returns device-backed values."""
+        dn = _dotted(node.func)
+        if dn is None:
+            return False
+        if dn == "jax.device_get":
+            return False          # device_get IS the sync; output is host
+        root = dn.split(".", 1)[0]
+        if root in ("jnp", "jax", "lax"):
+            return True
+        return any(p.startswith("_jit") for p in dn.split("."))
+
+    def _tainted_names(self, fn: Func) -> Set[str]:
+        """Flow-insensitive: dotted names assigned from device calls."""
+        tainted: Set[str] = set()
+        for node in ast.walk(fn.node):
+            if not isinstance(node, (ast.Assign, ast.AnnAssign)):
+                continue
+            value = node.value
+            if value is None:
+                continue
+            if not any(isinstance(sub, ast.Call)
+                       and self._device_call(sub)
+                       for sub in ast.walk(value)):
+                continue
+            targets = node.targets if isinstance(node, ast.Assign) \
+                else [node.target]
+            for t in targets:
+                for el in ast.walk(t):
+                    dn = _dotted(el)
+                    if dn:
+                        tainted.add(dn)
+        return tainted
+
+    def _mentions_device(self, node: ast.AST, tainted: Set[str]) -> bool:
+        for sub in ast.walk(node):
+            dn = _dotted(sub)
+            if dn is None:
+                continue
+            root = dn.split(".", 1)[0]
+            if root in ("jnp", "lax"):
+                return True
+            if root == "jax" and dn != "jax.device_get":
+                return True
+            if dn in tainted:
+                return True
+            if any(p.startswith("_jit") for p in dn.split(".")):
+                return True
+        return False
+
+    def check_host_sync(self) -> None:
+        hot = self._closure(
+            f"{c}.{m}" if c else m for c, m in HOT_ROOTS)
+        for q in sorted(hot):
+            fn = self.funcs[q]
+            tainted = self._tainted_names(fn)
+            for node in ast.walk(fn.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                f = node.func
+                if isinstance(f, ast.Attribute) and f.attr == "item" \
+                        and not node.args:
+                    self._flag(fn.mod, node, "RL001",
+                               f"{q}: .item() forces a host-device sync "
+                               "in a per-token hot path")
+                    continue
+                dn = _dotted(f)
+                if dn == "jax.device_get":
+                    self._flag(fn.mod, node, "RL001",
+                               f"{q}: jax.device_get in a per-token hot "
+                               "path — batch it to one pull per wave")
+                    continue
+                if isinstance(f, ast.Name) and f.id == "float" \
+                        and node.args \
+                        and self._mentions_device(node.args[0], tainted):
+                    self._flag(fn.mod, node, "RL001",
+                               f"{q}: float() of a device value blocks "
+                               "on the accelerator per call")
+                    continue
+                if dn in ("np.asarray", "np.array", "numpy.asarray",
+                          "numpy.array") and node.args \
+                        and self._mentions_device(node.args[0], tainted):
+                    self._flag(fn.mod, node, "RL001",
+                               f"{q}: {dn}() of a device value is a "
+                               "host transfer in a per-token hot path")
+
+    # ================================================= RL002 time-in-jit --
+    def _jitted_roots(self) -> List[str]:
+        roots: List[str] = []
+        for mod in self.mods:
+            for node in ast.walk(mod.tree):
+                if isinstance(node, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)):
+                    for dec in node.decorator_list:
+                        dd = _dotted(dec) or (
+                            _dotted(dec.func)
+                            if isinstance(dec, ast.Call) else None)
+                        if dd == "jax.jit" or (
+                                isinstance(dec, ast.Call)
+                                and _dotted(dec.func)
+                                == "functools.partial" and dec.args
+                                and _dotted(dec.args[0]) == "jax.jit"):
+                            roots.extend(self._resolve_ref(node.name))
+                if isinstance(node, ast.Call) \
+                        and _dotted(node.func) == "jax.jit" and node.args:
+                    wrapped = node.args[0]
+                    if isinstance(wrapped, ast.Name):
+                        roots.extend(self._resolve_ref(wrapped.id))
+                    elif isinstance(wrapped, ast.Attribute):
+                        roots.extend(self._resolve_ref(wrapped.attr))
+        return roots
+
+    def _resolve_ref(self, name: str) -> List[str]:
+        return list(self.by_name.get(name, ())) \
+            + list(self.methods.get(name, ()))
+
+    def check_time_in_jit(self) -> None:
+        for q in sorted(self._closure(self._jitted_roots())):
+            fn = self.funcs[q]
+            for node in ast.walk(fn.node):
+                if isinstance(node, ast.Call) \
+                        and _dotted(node.func) in _CLOCK_CALLS:
+                    self._flag(fn.mod, node, "RL002",
+                               f"{q}: wall-clock call reachable from a "
+                               "jitted function — the value is baked in "
+                               "at trace time, not read per call")
+
+    # ================================================ RL003 static args --
+    _HASHABLE_KINDS = (ast.Constant, ast.Name, ast.Attribute,
+                       ast.UnaryOp)
+
+    def _hashable_expr(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Tuple):
+            return all(self._hashable_expr(e) for e in node.elts)
+        if isinstance(node, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                             ast.DictComp, ast.SetComp,
+                             ast.GeneratorExp)):
+            return False
+        if isinstance(node, ast.Call):
+            dn = _dotted(node.func) or ""
+            return dn not in ("list", "dict", "set", "np.array",
+                              "np.asarray", "jnp.array", "jnp.asarray")
+        return True
+
+    def _jit_props(self, call: ast.Call) -> Dict[str, Any]:
+        props: Dict[str, Any] = {"static": (), "donate": ()}
+        for kw in call.keywords:
+            if kw.arg == "static_argnames":
+                try:
+                    props["static"] = tuple(ast.literal_eval(kw.value)) \
+                        if not isinstance(kw.value, ast.Constant) \
+                        else (kw.value.value,)
+                except (ValueError, SyntaxError):
+                    props["static"] = ()
+            elif kw.arg == "donate_argnums":
+                try:
+                    v = ast.literal_eval(kw.value)
+                    props["donate"] = tuple(v) if isinstance(
+                        v, (tuple, list)) else (v,)
+                except (ValueError, SyntaxError):
+                    props["donate"] = ()
+        return props
+
+    def _jit_wrappers(self) -> Dict[str, Dict[str, Any]]:
+        """Symbol -> jit props, for wrappers reachable by name.
+
+        Covers: decorated defs, ``X = jax.jit(f, ...)`` bindings, and
+        the jit-dict idiom — a function returning a dict literal of
+        ``jax.jit`` calls, unpacked elsewhere as
+        ``jits = _engine_jits(...); self._jit_x = jits["key"]``."""
+        wrappers: Dict[str, Dict[str, Any]] = {}
+        jitdicts: Dict[str, Dict[str, Dict[str, Any]]] = {}
+        for mod in self.mods:
+            for node in ast.walk(mod.tree):
+                if isinstance(node, ast.FunctionDef):
+                    for dec in node.decorator_list:
+                        if isinstance(dec, ast.Call) \
+                                and _dotted(dec.func) \
+                                == "functools.partial" and dec.args \
+                                and _dotted(dec.args[0]) == "jax.jit":
+                            wrappers[node.name] = self._jit_props(dec)
+                    for sub in ast.walk(node):
+                        if isinstance(sub, ast.Return) \
+                                and isinstance(sub.value, ast.Dict):
+                            entries = {}
+                            for k, v in zip(sub.value.keys,
+                                            sub.value.values):
+                                if isinstance(k, ast.Constant) \
+                                        and isinstance(v, ast.Call) \
+                                        and _dotted(v.func) == "jax.jit":
+                                    entries[k.value] = self._jit_props(v)
+                            if entries:
+                                jitdicts[node.name] = entries
+                if isinstance(node, ast.Assign) \
+                        and isinstance(node.value, ast.Call) \
+                        and _dotted(node.value.func) == "jax.jit":
+                    for t in node.targets:
+                        dn = _dotted(t)
+                        if dn:
+                            wrappers[dn.split(".")[-1]] = \
+                                self._jit_props(node.value)
+        # second pass: jits = <jitdict-func>(...); name = jits["key"]
+        for mod in self.mods:
+            for node in ast.walk(mod.tree):
+                if not isinstance(node, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef)):
+                    continue
+                dict_vars: Dict[str, Dict[str, Dict[str, Any]]] = {}
+                for sub in ast.walk(node):
+                    if not isinstance(sub, ast.Assign):
+                        continue
+                    v = sub.value
+                    if isinstance(v, ast.Call) \
+                            and isinstance(v.func, ast.Name) \
+                            and v.func.id in jitdicts:
+                        for t in sub.targets:
+                            if isinstance(t, ast.Name):
+                                dict_vars[t.id] = jitdicts[v.func.id]
+                    if isinstance(v, ast.Subscript) \
+                            and isinstance(v.value, ast.Name) \
+                            and v.value.id in dict_vars \
+                            and isinstance(v.slice, ast.Constant) \
+                            and v.slice.value in dict_vars[v.value.id]:
+                        for t in sub.targets:
+                            dn = _dotted(t)
+                            if dn:
+                                wrappers[dn.split(".")[-1]] = \
+                                    dict_vars[v.value.id][v.slice.value]
+        return wrappers
+
+    def check_static_args(self) -> None:
+        wrappers = self._jit_wrappers()
+        for mod in self.mods:
+            for node in ast.walk(mod.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                dn = _dotted(node.func)
+                if dn in ("jax.jit",) or (dn or "").endswith(
+                        "pallas_call"):
+                    for kw in node.keywords:
+                        if kw.arg in ("static_argnames",
+                                      "static_argnums", "grid") \
+                                and not self._hashable_expr(kw.value):
+                            self._flag(
+                                mod, node, "RL003",
+                                f"{dn}: {kw.arg} must be a hashable "
+                                "tuple, not a mutable "
+                                f"{type(kw.value).__name__}")
+                sym = (dn or "").split(".")[-1]
+                props = wrappers.get(sym)
+                if not props or not props["static"]:
+                    continue
+                for kw in node.keywords:
+                    if kw.arg in props["static"] \
+                            and not self._hashable_expr(kw.value):
+                        self._flag(
+                            mod, node, "RL003",
+                            f"{sym}: static arg {kw.arg!r} gets a "
+                            f"mutable {type(kw.value).__name__} — "
+                            "unhashable static args retrace or crash")
+
+    # ================================================== RL004 donation --
+    def check_donation(self) -> None:
+        wrappers = self._jit_wrappers()
+        for q, fn in sorted(self.funcs.items()):
+            # SIMPLE statements only: a compound statement (for/if/...)
+            # contains its children, so matching calls through it would
+            # double-count every nested call against empty targets
+            stmts = sorted(
+                (s for s in ast.walk(fn.node)
+                 if isinstance(s, ast.stmt)),
+                key=lambda s: s.lineno)
+            simple = [s for s in stmts
+                      if isinstance(s, (ast.Assign, ast.AnnAssign,
+                                        ast.AugAssign, ast.Expr,
+                                        ast.Return))]
+            for st in simple:
+                for call in ast.walk(st):
+                    if not isinstance(call, ast.Call):
+                        continue
+                    sym = (_dotted(call.func) or "").split(".")[-1]
+                    props = wrappers.get(sym)
+                    if not props or not props["donate"]:
+                        continue
+                    targets: Set[str] = set()
+                    if isinstance(st, ast.Assign):
+                        for t in st.targets:
+                            for el in ast.walk(t):
+                                dn = _dotted(el)
+                                if dn:
+                                    targets.add(dn)
+                    for idx in props["donate"]:
+                        if idx >= len(call.args):
+                            continue
+                        dn = _dotted(call.args[idx])
+                        if dn is None or dn in targets:
+                            continue
+                        reuse = self._later_load(
+                            simple, st, dn)
+                        if reuse is not None:
+                            self._flag(
+                                fn.mod, reuse, "RL004",
+                                f"{q}: reads {dn!r} after it was "
+                                f"DONATED to {sym} (arg {idx}) — the "
+                                "buffer is invalidated; rebind it from "
+                                "the call's result")
+
+    def _later_load(self, stmts: List[ast.stmt], after: ast.stmt,
+                    dotted: str) -> Optional[ast.AST]:
+        for st in stmts:
+            if st.lineno <= (after.end_lineno or after.lineno):
+                continue
+            stored = False
+            if isinstance(st, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+                targets = st.targets if isinstance(st, ast.Assign) \
+                    else [st.target]
+                for t in targets:
+                    for el in ast.walk(t):   # tuple-unpack targets too
+                        if _dotted(el) == dotted:
+                            stored = True
+            for sub in ast.walk(st):
+                if isinstance(sub, (ast.Name, ast.Attribute)) \
+                        and isinstance(getattr(sub, "ctx", None),
+                                       ast.Load) \
+                        and _dotted(sub) == dotted:
+                    return sub
+            if stored:
+                return None
+        return None
+
+    # ========================================== RL101 replica protocol --
+    def check_replica_conformance(self) -> None:
+        proto = self._class_methods("ReplicaHandle")
+        if proto is None:
+            return
+        names = {n for n in proto if not n.startswith("_")}
+        for impl in ("SimReplica", "LiveReplica"):
+            have = self._class_methods(impl)
+            if have is None:
+                self._emit(self._class_path("ReplicaHandle") or "",
+                           1, "RL101", f"{impl}: class not found")
+                continue
+            for missing in sorted(names - set(have)):
+                mod, node = self._class_node(impl)
+                self._flag(mod, node, "RL101",
+                           f"{impl} does not implement "
+                           f"ReplicaHandle.{missing} — both replica "
+                           "kinds must cover the whole protocol")
+
+    def _class_node(self, name: str):
+        for mod in self.mods:
+            for node in mod.tree.body:
+                if isinstance(node, ast.ClassDef) and node.name == name:
+                    return mod, node
+        return None, None
+
+    def _class_methods(self, name: str) -> Optional[List[str]]:
+        _mod, node = self._class_node(name)
+        if node is None:
+            return None
+        out = []
+        for sub in node.body:
+            if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                out.append(sub.name)
+        return out
+
+    def _class_path(self, name: str) -> Optional[str]:
+        mod, _ = self._class_node(name)
+        return mod.path if mod else None
+
+    # ============================================ RL102 stats coverage --
+    def check_stats_coverage(self) -> None:
+        mod, stats = self._class_node("ServeStats")
+        agg = self.funcs.get("aggregate_serve_stats")
+        if stats is None or agg is None:
+            return
+        mentioned: Set[str] = set()
+        for node in ast.walk(agg.node):
+            if isinstance(node, ast.Name):
+                mentioned.add(node.id)
+            elif isinstance(node, ast.Attribute):
+                mentioned.add(node.attr)
+            elif isinstance(node, ast.Constant) \
+                    and isinstance(node.value, str):
+                mentioned.add(node.value)
+        # a Name in the fold body may refer to a module-level literal
+        # (the _SERVE_COUNTERS idiom) — its strings count as folded
+        for node in agg.mod.tree.body:
+            if isinstance(node, ast.Assign) \
+                    and any(isinstance(t, ast.Name)
+                            and t.id in mentioned
+                            for t in node.targets):
+                try:
+                    val = ast.literal_eval(node.value)
+                except (ValueError, SyntaxError):
+                    continue
+                if isinstance(val, (tuple, list, set)):
+                    mentioned.update(
+                        v for v in val if isinstance(v, str))
+        for sub in stats.body:
+            if isinstance(sub, ast.AnnAssign) \
+                    and isinstance(sub.target, ast.Name) \
+                    and sub.target.id not in mentioned:
+                self._flag(mod, sub, "RL102",
+                           f"ServeStats.{sub.target.id} is never folded "
+                           "by aggregate_serve_stats — cluster rollups "
+                           "silently drop it")
+
+    # ========================================== RL103 field threading --
+    def check_request_threading(self) -> None:
+        for cls in ("GenRequest", "Request"):
+            mod, node = self._class_node(cls)
+            if node is None:
+                continue
+            fields = [sub for sub in node.body
+                      if isinstance(sub, ast.AnnAssign)
+                      and isinstance(sub.target, ast.Name)]
+            span = (node.lineno, node.end_lineno or node.lineno)
+            used: Set[str] = set()
+            for m in self.mods:
+                for sub in ast.walk(m.tree):
+                    if m is mod and span[0] <= getattr(
+                            sub, "lineno", 0) <= span[1]:
+                        continue
+                    if isinstance(sub, ast.Attribute):
+                        used.add(sub.attr)
+                    elif isinstance(sub, ast.Call):
+                        used.update(kw.arg for kw in sub.keywords
+                                    if kw.arg)
+            for f in fields:
+                if f.target.id not in used:
+                    self._flag(mod, f, "RL103",
+                               f"{cls}.{f.target.id} is never read or "
+                               "written outside its dataclass — the "
+                               "admission->tick->eviction threading "
+                               "dropped it")
+
+    # ======================================= RL104 bench registration --
+    def check_bench_registration(self) -> None:
+        ci = os.path.join(self.root, "scripts", "ci.sh")
+        bench_dir = os.path.join(self.root, "benchmarks")
+        if not os.path.isfile(ci) or not os.path.isdir(bench_dir):
+            return
+        with open(ci) as f:
+            ci_text = f.read()
+        for f_name in sorted(os.listdir(bench_dir)):
+            if not f_name.endswith(".py"):
+                continue
+            path = os.path.join(bench_dir, f_name)
+            with open(path) as fh:
+                src = fh.read()
+            if not re.search(r"BENCH_\w+\.json", src):
+                continue
+            if f_name not in ci_text:
+                self._emit(path, 1, "RL104",
+                           f"benchmarks/{f_name} writes a BENCH_*.json "
+                           "trajectory but is not registered in "
+                           "scripts/ci.sh")
+
+    # -------------------------------------------------------------- run --
+    def run(self, rules: Optional[Set[str]] = None) -> List[Finding]:
+        checks = {
+            "RL001": self.check_host_sync,
+            "RL002": self.check_time_in_jit,
+            "RL003": self.check_static_args,
+            "RL004": self.check_donation,
+            "RL101": self.check_replica_conformance,
+            "RL102": self.check_stats_coverage,
+            "RL103": self.check_request_threading,
+            "RL104": self.check_bench_registration,
+        }
+        for rule, check in checks.items():
+            if rules is None or rule in rules:
+                check()
+        self.findings.sort(key=lambda f: (f.path, f.line, f.rule))
+        return self.findings
+
+
+def lint_root(root: str,
+              rules: Optional[Iterable[str]] = None) -> List[Finding]:
+    """Lint a repo tree; returns findings (empty = clean)."""
+    return Linter(os.path.abspath(root)).run(
+        set(rules) if rules is not None else None)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    default_root = os.path.abspath(
+        os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                     "..", ".."))
+    ap.add_argument("--root", default=default_root,
+                    help="repo root to lint (default: this repo)")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule ids (default: all)")
+    args = ap.parse_args(argv)
+    rules = set(args.rules.split(",")) if args.rules else None
+    findings = lint_root(args.root, rules)
+    for f in findings:
+        print(f.render(args.root))
+    n = len(findings)
+    print(f"reprolint: {n} finding{'s' if n != 1 else ''}"
+          if n else "reprolint: clean")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,33 @@
+#!/usr/bin/env python
+"""Gated typecheck runner for `make lint`.
+
+Runs mypy (basic mode, pinned in mypy.ini) over the scoped targets when
+mypy is importable; prints a skip notice and exits 0 when it is not.
+The serving container does not bake mypy in, so the lint gate must not
+hard-depend on it — same stub-or-gate pattern as the optional
+accelerator deps.
+"""
+from __future__ import annotations
+
+import importlib.util
+import pathlib
+import subprocess
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parents[2]
+TARGETS = ["src/repro/core", "src/repro/runtime/paging.py"]
+
+
+def main() -> int:
+    if importlib.util.find_spec("mypy") is None:
+        print("typecheck: mypy not installed in this environment; "
+              "skipping (config pinned in mypy.ini)")
+        return 0
+    cmd = [sys.executable, "-m", "mypy",
+           "--config-file", str(REPO / "mypy.ini"), *TARGETS]
+    print("typecheck:", " ".join(cmd[2:]))
+    return subprocess.call(cmd, cwd=REPO)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
