@@ -12,11 +12,21 @@ One trace, two N=2-replica fabrics over the same smoke model:
               the published snapshot) and aggregation publishes the
               merged adapter at round boundaries.
 
+BOTH fabrics run token-level co-scheduling: chunked prefill (prompts
+prefill in fixed-token chunks riding the decode wave) under a per-tick
+SLO budget derived from the decode TPOT target.  The budget is what
+closes the historical 0.31x goodput gap: serving-busy ticks skip or
+shrink the train microbatch (decode is first-class), and training
+drains through the idle tail after the trace completes — so the
+combined fabric must now retain >= GOODPUT_FLOOR of serve-only
+throughput, the TRUE co-execution target, not a documented-regression
+floor.
+
 Gates: the combined run completes 100% of the trace while finishing
 >= MIN_ROUNDS FL rounds, per-member train CE falls from its first to
-its last fused step, the merged adapter version is coherent across the
-pool, and serve goodput stays within a bounded hit of serve-only
-(co-running training is not free — the bound documents the cost).
+its last fused step, per-round avg member CE falls across rounds, the
+merged adapter version is coherent across the pool, and combined
+goodput >= GOODPUT_FLOOR x serve-only.
 
 Results land in ``BENCH_combined_fabric.json``.
 """
@@ -37,23 +47,33 @@ OUT_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                         "..", "BENCH_combined_fabric.json")
 
 ARCH = "qwen1.5-0.5b"
-SLOTS, PROMPT_PAD, MAX_GEN = 4, 16, 8
+SLOTS, PROMPT_PAD, MAX_GEN = 4, 48, 8
 MIN_ROUNDS = 2
-# serve-only tok/s the combined fabric must retain: training steals
-# device time by design (§8.2 suspends it under real surges) — a fused
-# train+decode tick costs ~3x a pure decode tick on the smoke model, so
-# ~0.3x is the observed steady state; the floor documents that the hit
-# stays bounded instead of pretending co-execution is free
-GOODPUT_FLOOR = 0.2
+# combined tok/s must stay within this fraction of serve-only: with the
+# token-budget scheduler deferring train work off serving-busy ticks
+# (decode first-class, training drains in the idle tail), co-execution
+# is no longer allowed to tax goodput 3x — this is the paper's target,
+# not a documented-regression floor
+GOODPUT_FLOOR = 0.8
+# token-level co-scheduling knobs, identical on BOTH fabrics so the
+# ratio isolates the cost of co-running training
+PREFILL_CHUNK = 16
+TPOT_TARGET = 0.004         # s/token decode SLO -> per-tick budget
 STREAM = None
 
 
 def _trace(cfg, n, seed=0):
+    """Heavy-tailed prompt lengths: ~80% short conversational prompts,
+    ~20% long-context stragglers near PROMPT_PAD.  The long tail is
+    what chunked prefill exists for — a monolithic 48-token prefill
+    would stall every decoding slot for the whole prompt."""
     rng = np.random.default_rng(seed)
     data = SyntheticDataset("alpaca", vocab_size=cfg.vocab_size,
                             seq_len=PROMPT_PAD, seed=seed)
     toks = data.sample_tokens(n)
-    lens = rng.integers(PROMPT_PAD // 2, PROMPT_PAD + 1, size=n)
+    short = rng.integers(6, 17, size=n)
+    long = rng.integers(36, PROMPT_PAD + 1, size=n)
+    lens = np.where(rng.random(n) < 0.8, short, long)
     gens = rng.integers(2, MAX_GEN + 1, size=n)
     return [(toks[i, :lens[i]].astype(np.int32), int(gens[i]))
             for i in range(n)]
@@ -65,6 +85,12 @@ def _requests(trace):
             for i, (prompt, gen) in enumerate(trace)]
 
 
+def _serve_cfg(**kw):
+    """FabricConfig with the co-scheduling knobs both fabrics share."""
+    return FabricConfig(prefill_chunk=PREFILL_CHUNK,
+                        tpot_target=TPOT_TARGET, **kw)
+
+
 def _row(summary, reqs):
     c = summary["cluster"]
     return {
@@ -73,11 +99,15 @@ def _row(summary, reqs):
         "generated_tokens": c["generated_tokens"],
         "decode_steps": c["decode_steps"],
         "train_steps": c["train_steps"],
+        "train_skipped_ticks": c["train_skipped_ticks"],
         "tokens_per_s_aggregate": round(c["throughput_sum_tok_s"], 1),
         "tokens_per_s_shared_device": round(
             c["throughput_wall_tok_s"], 1),
         "adapter_version": c["adapter_version_max"],
         "train_loss": c["train_loss"],
+        "budget_utilization": c["budget_utilization"],
+        "ttft": c["ttft"],
+        "tpot": c["tpot"],
     }
 
 
@@ -95,23 +125,24 @@ def run() -> str:
     # model, so whichever run went first would eat them).  The serve
     # warmup runs the FULL trace — admission-wave programs compile per
     # wave width, so a shorter trace would leave cold shapes — and the
-    # combined warmup compiles the fused/plain train programs.
+    # combined warmup compiles the fused/plain train programs at every
+    # train_tokens bucket the budget scheduler can pick (full/half).
     fab, cfg = build_fabric(ARCH, 2, n_slots=SLOTS,
                             prompt_len=PROMPT_PAD, gen_tokens=MAX_GEN,
-                            cfg=FabricConfig())
+                            cfg=_serve_cfg())
     STREAM = cfg.name
     fab.run(_requests(trace))
     fab, _ = build_fabric(
         ARCH, 2, n_slots=SLOTS, prompt_len=PROMPT_PAD,
         gen_tokens=MAX_GEN, train_pool=4,
-        cfg=FabricConfig(enable_finetuning=True, bootstrap_steps=2,
-                         steps_per_round=2, decision_interval=0.1))
+        cfg=_serve_cfg(enable_finetuning=True, bootstrap_steps=2,
+                       steps_per_round=2, decision_interval=0.1))
     fab.run(_requests(trace[:4]), min_rounds=1, timeout=120.0)
 
     # ---- serve-only baseline fabric --------------------------------------
     fab, _ = build_fabric(ARCH, 2, n_slots=SLOTS,
                           prompt_len=PROMPT_PAD, gen_tokens=MAX_GEN,
-                          cfg=FabricConfig())
+                          cfg=_serve_cfg())
     reqs = _requests(trace)
     base = _row(fab.run(reqs), reqs)
     assert base["completed"] == n_req, "serve-only baseline incomplete"
@@ -124,8 +155,8 @@ def run() -> str:
     fab, _ = build_fabric(
         ARCH, 2, n_slots=SLOTS, prompt_len=PROMPT_PAD,
         gen_tokens=MAX_GEN, train_pool=4,
-        cfg=FabricConfig(enable_finetuning=True, bootstrap_steps=steps,
-                         steps_per_round=steps, decision_interval=0.1))
+        cfg=_serve_cfg(enable_finetuning=True, bootstrap_steps=steps,
+                       steps_per_round=steps, decision_interval=0.1))
     reqs = _requests(trace)
     summary = fab.run(reqs, min_rounds=MIN_ROUNDS, timeout=300.0)
     comb = _row(summary, reqs)
@@ -156,7 +187,9 @@ def run() -> str:
     out = {
         "trace": {"n_requests": n_req, "slots": SLOTS,
                   "prompt_pad": PROMPT_PAD, "max_gen": MAX_GEN,
-                  "steps_per_round": steps, "arch": ARCH},
+                  "steps_per_round": steps, "arch": ARCH,
+                  "prefill_chunk": PREFILL_CHUNK,
+                  "tpot_target": TPOT_TARGET},
         "serve_only": base,
         "combined": comb,
         "goodput_ratio_combined_vs_serve_only": round(ratio, 3),

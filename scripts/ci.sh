@@ -31,5 +31,17 @@ python benchmarks/prefix_cache.py --smoke
 python benchmarks/continuous_batching.py --smoke
 python benchmarks/multi_replica.py --smoke
 python benchmarks/combined_fabric.py --smoke
+# token-level co-scheduling gate: the combined fabric must retain
+# >= 0.8x serve-only goodput (chunked prefill + SLO tick budgets defer
+# train work off busy ticks) while round avg train loss still falls
+python - <<'EOF'
+import json
+d = json.load(open("BENCH_combined_fabric.json"))
+ratio = d["goodput_ratio_combined_vs_serve_only"]
+losses = d["round_avg_loss"]
+assert ratio >= 0.8, f"combined/serve-only goodput {ratio} < 0.8"
+assert losses[-1] < losses[0], f"round avg loss not falling: {losses}"
+print(f"co-scheduling gate: ratio={ratio} loss={losses[0]}->{losses[-1]}")
+EOF
 python benchmarks/multi_lora.py --smoke
 REPRO_SANITIZE=1 python benchmarks/chaos.py --smoke

@@ -41,7 +41,7 @@ import math
 from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.interfaces import (
-    BatchResult, ReplicaHandle, ReplicaPressure, Request,
+    BatchResult, ReplicaHandle, ReplicaPressure, Request, deadline_slack,
 )
 from repro.core.latency_model import BivariateLatencyModel, LinearLatencyModel
 from repro.core.states import ReplicaState
@@ -269,7 +269,7 @@ class SubflowDispatcher:
                 # retry backoff gate: the request stays queued (keeps
                 # its place) but is not dispatchable yet
                 continue
-            if r.deadline < now + pred:
+            if deadline_slack(r.deadline, now) < pred:
                 self._shed(r)
                 taken.add(i)
                 continue
@@ -361,7 +361,7 @@ class SubflowDispatcher:
     def _expire_requests(self, now: float) -> None:
         """Requests past their deadline cannot contribute (Eq. 13c) —
         count and drop so they stop occupying capacity."""
-        while self.queue and self.queue[0].deadline < now:
+        while self.queue and deadline_slack(self.queue[0].deadline, now) < 0:
             self._shed(self.queue.popleft())
 
     # ------------------------------------------------------------ macro ----

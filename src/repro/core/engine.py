@@ -30,7 +30,8 @@ class Engine:
     def train_step(self, params: Any, lora: Any, opt_state: AdamWState,
                    batch: Any,
                    *, skip_masked_blocks: bool = False,
-                   ce_chunk: int = 512, grad_accum: int = 1
+                   ce_chunk: int = 512, grad_accum: int = 1,
+                   train_tokens: int = 0
                    ) -> Tuple[Any, AdamWState, Dict[str, jax.Array]]:
         """LoRA-only gradient step: base weights frozen (PEFT).
 
@@ -40,7 +41,21 @@ class Engine:
         live per-microbatch; LoRA grads are tiny so the accumulator is
         nearly free).  The per-microbatch |g|² is also what the
         gradient-noise-scale estimator (Eq. 8's p_t) consumes.
+
+        ``train_tokens`` > 0 caps the step at roughly that many train
+        tokens by slicing whole batch rows (compile-time static, so
+        each cap compiles once): the token-budget scheduler's lever for
+        shrinking a microbatch into the tick's leftover SLO slack
+        instead of skipping training outright.  0 = full batch.
         """
+        if train_tokens > 0:
+            ref = batch.get("tokens", batch.get("embeds"))
+            b, s = int(ref.shape[0]), int(ref.shape[1])
+            rows = max(1, min(b, train_tokens // max(s, 1)))
+            if rows < b:
+                batch = jax.tree.map(lambda x: x[:rows], batch)
+                if grad_accum > 1 and rows % grad_accum:
+                    grad_accum = 1
         def loss_fn(lora_, microbatch):
             loss, metrics = self.model.forward_loss(
                 params, lora_, microbatch, ce_chunk=ce_chunk,
@@ -106,6 +121,7 @@ class Engine:
                       serve_lora: Any = None,
                       attn_backend: Optional[str] = None,
                       grad_accum: int = 1,
+                      train_tokens: int = 0,
                       serve_adapter_idx: Any = None
                       ) -> Tuple[Any, AdamWState, jax.Array, Any,
                                  Dict[str, jax.Array]]:
@@ -128,7 +144,8 @@ class Engine:
             caches, token, pos, attn_backend=attn_backend,
             adapter_idx=serve_adapter_idx)
         new_lora, new_opt, metrics = self.train_step(
-            params, lora, opt_state, train_batch, grad_accum=grad_accum)
+            params, lora, opt_state, train_batch, grad_accum=grad_accum,
+            train_tokens=train_tokens)
         return new_lora, new_opt, logits, new_caches, metrics
 
     def combined_step_paged(self, params: Any, lora: Any,
@@ -139,6 +156,7 @@ class Engine:
                             serve_lora: Any = None,
                             attn_backend: Optional[str] = None,
                             grad_accum: int = 1,
+                            train_tokens: int = 0,
                             serve_adapter_idx: Any = None
                             ) -> Tuple[Any, AdamWState, jax.Array, Any,
                                        Dict[str, jax.Array]]:
@@ -152,7 +170,8 @@ class Engine:
             ring_len=ring_len, attn_backend=attn_backend,
             adapter_idx=serve_adapter_idx)
         new_lora, new_opt, metrics = self.train_step(
-            params, lora, opt_state, train_batch, grad_accum=grad_accum)
+            params, lora, opt_state, train_batch, grad_accum=grad_accum,
+            train_tokens=train_tokens)
         return new_lora, new_opt, logits, new_caches, metrics
 
     def combined_prefill_step(self, params: Any, lora: Any,

@@ -71,6 +71,26 @@ class Request:
         return self.completed_at is not None or self.status == "failed"
 
 
+def deadline_slack(deadline: float, now: float) -> float:
+    """Remaining SLO slack d_r - now (Eq. 13c's feasibility margin).
+
+    Negative means the deadline has already passed.  Shared by the
+    dispatcher's feasibility shedding and the batcher's chunked-prefill
+    scheduler so the two rank urgency identically."""
+    return deadline - now
+
+
+def slack_order(items: Sequence[Any], now: float,
+                key: Any = None) -> List[Any]:
+    """``items`` sorted most-urgent-first by deadline slack.
+
+    ``key`` extracts the deadline from an item (default: its
+    ``deadline`` attribute).  Ties keep the input (FCFS) order —
+    ``sorted`` is stable."""
+    get = key if key is not None else (lambda it: it.deadline)
+    return sorted(items, key=lambda it: deadline_slack(get(it), now))
+
+
 @dataclasses.dataclass
 class BatchResult:
     """Completion record for a dispatched batch."""

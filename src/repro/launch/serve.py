@@ -41,6 +41,10 @@ Usage:
   ... --adapters 3   # multi-LoRA multi-tenant serving: requests tagged
                      # round-robin across 3 registered tenants, decoded
                      # through the batched segmented LoRA paths
+  ... --chunked-prefill 16 --tpot-target 0.004   # token-level
+                     # co-scheduling: prompts prefill in 16-token chunks
+                     # riding the decode wave, each tick budgeted to the
+                     # decode TPOT SLO (leftover slack admits train work)
   ... --temperature 0.8 --top-k 40 --top-p 0.95   # sampled decoding
   ... --replicas 2 --chaos --chaos-crashes 1 --chaos-stalls 1
                      # seeded fault injection against the fabric:
@@ -95,6 +99,7 @@ def run_serving(arch: str, *, smoke: bool = True, n_requests: int = 16,
                 n_blocks: int = 0, prefix_cache: bool = False,
                 temperature: float = 0.0, top_k: int = 0,
                 top_p: float = 1.0, n_adapters: int = 0,
+                prefill_chunk: int = 0, tpot_target: float = 0.0,
                 verbose: bool = True) -> dict:
     """Serve ``n_requests`` prompts on a ``batch_size``-slot continuous
     batcher; returns throughput + (combined mode) train losses.
@@ -133,7 +138,8 @@ def run_serving(arch: str, *, smoke: bool = True, n_requests: int = 16,
         max_seq=prompt_len + gen_tokens, prompt_pad=prompt_len,
         opt_state=opt_state, paged=paged, block_size=block_size,
         n_blocks=n_blocks or None, prefix_cache=prefix_cache,
-        adapters=registry)
+        adapters=registry, prefill_chunk=prefill_chunk,
+        tpot_target=tpot_target)
     prompts = data.sample_tokens(n_requests)[:, :prompt_len]
     requests = [GenRequest(request_id=i, prompt=prompts[i],
                            max_new_tokens=gen_tokens,
@@ -198,6 +204,7 @@ def run_multi_replica_serving(
         block_size: int = 16, n_blocks: int = 0,
         prefix_cache: bool = False, temperature: float = 0.0,
         top_k: int = 0, top_p: float = 1.0, n_adapters: int = 0,
+        prefill_chunk: int = 0, tpot_target: float = 0.0,
         chaos: dict = None, verbose: bool = True) -> dict:
     """Serve ``n_requests`` prompts through the dispatcher-routed
     multi-replica fabric; returns the aggregate cluster summary.
@@ -207,15 +214,17 @@ def run_multi_replica_serving(
     of seed/horizon/crashes/stalls/ooms/nan_rounds) arms a seeded
     ``FaultInjector`` against the pool."""
     from repro.core.interfaces import Request
-    from repro.runtime.fabric import build_fabric
+    from repro.runtime.fabric import FabricConfig, build_fabric
 
+    fcfg = FabricConfig(prefill_chunk=prefill_chunk,
+                        tpot_target=tpot_target)
     injector = _make_injector(n_replicas, chaos) if chaos else None
     fabric, cfg = build_fabric(
         arch, n_replicas, smoke=smoke, n_slots=batch_size,
         prompt_len=prompt_len, gen_tokens=gen_tokens, paged=paged,
         block_size=block_size, n_blocks=n_blocks or None,
         prefix_cache=prefix_cache, seed=seed, n_adapters=n_adapters,
-        injector=injector)
+        cfg=fcfg, injector=injector)
     data = SyntheticDataset("alpaca", vocab_size=cfg.vocab_size,
                             seq_len=prompt_len, seed=seed)
     prompts = data.sample_tokens(n_requests)[:, :prompt_len]
@@ -263,6 +272,7 @@ def run_combined_fabric_serving(
         rounds: int = 2, steps_per_round: int = 4, train_pool: int = 8,
         temperature: float = 0.0, top_k: int = 0, top_p: float = 1.0,
         n_adapters: int = 0, timeout: float = 300.0,
+        prefill_chunk: int = 0, tpot_target: float = 0.0,
         chaos: dict = None, verbose: bool = True) -> dict:
     """Live co-execution: serve the trace through the multi-replica
     fabric WHILE the launcher drives incremental FL train sessions over
@@ -277,7 +287,8 @@ def run_combined_fabric_serving(
     fcfg = FabricConfig(
         enable_finetuning=True, train_batch=train_batch,
         bootstrap_steps=steps_per_round, steps_per_round=steps_per_round,
-        min_cohort=min(2, n_replicas))
+        min_cohort=min(2, n_replicas),
+        prefill_chunk=prefill_chunk, tpot_target=tpot_target)
     injector = _make_injector(n_replicas, chaos) if chaos else None
     fabric, cfg = build_fabric(
         arch, n_replicas, smoke=smoke, n_slots=batch_size,
@@ -352,6 +363,19 @@ def main() -> None:
                          "--replicas mode")
     ap.add_argument("--train-batch", type=int, default=4,
                     help="co-running train batch (combined modes)")
+    ap.add_argument("--chunked-prefill", type=int, default=0,
+                    help="prefill chunk size in tokens (default 0 = "
+                         "monolithic prefill); > 0 splits each prompt "
+                         "into fixed-token chunks interleaved with "
+                         "decode ticks (paged mode rounds the chunk up "
+                         "to a block multiple); greedy output is "
+                         "bit-identical to monolithic prefill")
+    ap.add_argument("--tpot-target", type=float, default=0.0,
+                    help="decode TPOT SLO target in seconds/token "
+                         "(default 0 = no tick budget); > 0 budgets "
+                         "each tick: decode first, then prefill chunks "
+                         "in deadline-slack order, leftover slack "
+                         "admits (possibly shrunk) train microbatches")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature (0 = greedy, the default)")
     ap.add_argument("--top-k", type=int, default=0,
@@ -405,6 +429,8 @@ def main() -> None:
                 steps_per_round=args.steps_per_round,
                 temperature=args.temperature, top_k=args.top_k,
                 top_p=args.top_p, n_adapters=args.adapters,
+                prefill_chunk=args.chunked_prefill,
+                tpot_target=args.tpot_target,
                 seed=args.seed, chaos=chaos)
             return
         run_multi_replica_serving(
@@ -414,7 +440,9 @@ def main() -> None:
             paged=args.paged, block_size=args.block_size,
             n_blocks=args.n_blocks, prefix_cache=args.prefix_cache,
             temperature=args.temperature, top_k=args.top_k,
-            top_p=args.top_p, n_adapters=args.adapters, seed=args.seed,
+            top_p=args.top_p, n_adapters=args.adapters,
+            prefill_chunk=args.chunked_prefill,
+            tpot_target=args.tpot_target, seed=args.seed,
             chaos=chaos)
         return
     run_serving(args.arch, n_requests=args.requests,
@@ -425,7 +453,8 @@ def main() -> None:
                 n_blocks=args.n_blocks, prefix_cache=args.prefix_cache,
                 temperature=args.temperature, top_k=args.top_k,
                 top_p=args.top_p, n_adapters=args.adapters,
-                seed=args.seed)
+                prefill_chunk=args.chunked_prefill,
+                tpot_target=args.tpot_target, seed=args.seed)
 
 
 if __name__ == "__main__":

@@ -130,7 +130,11 @@ def main() -> None:
                        batch=args.batch, seq=args.seq,
                        ckpt_dir=args.ckpt, restore=args.restore,
                        lr=args.lr)
-    print(f"done: {out['steps']} steps, final loss {out['final_loss']:.4f}")
+    fl = out["final_loss"]
+    # final_loss is None when a restore lands at step >= --steps (no
+    # new step runs, so there is no loss to report)
+    print(f"done: {out['steps']} steps, final loss "
+          + (f"{fl:.4f}" if fl is not None else "n/a (already complete)"))
 
 
 if __name__ == "__main__":

@@ -454,6 +454,86 @@ class Model:
         logits = last @ params["lm_head"]
         return logits, {"kv": kvs}
 
+    def prefill_ragged_continue(self, params, lora, batch, suffix_lens,
+                                prefix_lens, caches, slot_ids,
+                                adapter_idx=None):
+        """Resumable chunked prefill over CONTIGUOUS slot caches: one
+        fixed-budget chunk per call, attending over the K/V the slot's
+        earlier chunks already wrote.
+
+        ``batch["tokens"]`` [W, CPad] holds each row's right-padded
+        chunk tokens (absolute positions ``prefix_lens[w] + i``);
+        ``slot_ids`` [W] int32 names each row's decode slot, whose cache
+        rows ``0 .. prefix_lens[w]-1`` hold the prefix written by chunks
+        1..K-1 (rows past that are stale and masked).  Same dense-mirror
+        softmax as ``prefill_ragged_suffix``, so chunked prefill
+        reproduces the monolithic logits bit-for-bit.  Returns (logits
+        at each row's last real chunk token [W,1,V], {"kv": chunk K/V
+        [L, W, CPad, Hkv, Dh]}) for ``write_prefill_rows`` back into the
+        slots at offset ``prefix_lens``."""
+        cfg = self.cfg
+        assert cfg.has_attention and not cfg.has_ssm \
+            and cfg.family is not Family.VLM, \
+            f"{cfg.name}: chunked prefill needs an attention-only stack"
+        tokens = batch["tokens"]
+        x = jnp.take(params["embed"], tokens, axis=0)
+        x = shard(x, "batch", "act_seq", "embed")
+        prefix_lens = jnp.asarray(prefix_lens, jnp.int32)
+        suffix_lens = jnp.asarray(suffix_lens, jnp.int32)
+        positions = prefix_lens[:, None] + jnp.arange(tokens.shape[1])
+        rope_cs = rope_tables(positions, cfg.head_dim, cfg.rope_theta)
+        slots = jnp.asarray(slot_ids, jnp.int32)
+
+        def gather(cache):
+            # [L, B, S, Hkv, Dh] -> this wave's slot rows [L, W, S, ...]
+            return jnp.take(cache, slots, axis=1)
+
+        prefix_kv = (gather(caches["kv"][0]), gather(caches["kv"][1]))
+
+        def body(xc, xs):
+            bp, lsl, pre = xs
+            y, kv = tfm.block_prefill_suffix(bp, xc, cfg, pre,
+                                             prefix_lens, rope_cs,
+                                             lora=lsl,
+                                             adapter_idx=adapter_idx)
+            return y, kv
+
+        scan = _scan_or_loop if not cfg.scan_layers else lax.scan
+        x, kvs = scan(body, x, (params["blocks"], lora, prefix_kv))
+        hidden = rms_norm(x, params["final_norm"])
+        idx = (suffix_lens - 1).astype(jnp.int32)[:, None, None]
+        last = jnp.take_along_axis(
+            hidden, jnp.broadcast_to(idx, (hidden.shape[0], 1,
+                                           hidden.shape[2])), axis=1)
+        logits = last @ params["lm_head"]
+        return logits, {"kv": kvs}
+
+    def write_prefill_rows(self, pool_caches, prefill_caches, slots,
+                           offsets, lens):
+        """Scatter one chunked-prefill wave's K/V into contiguous slot
+        caches at each row's resume offset, in ONE program.
+
+        ``slots``/``offsets``/``lens`` [W] int32: row j's chunk K/V
+        [L, W, CPad, Hkv, Dh] lands at cache rows
+        ``offsets[j] .. offsets[j]+lens[j]-1`` of slot ``slots[j]``;
+        pad positions past ``lens[j]`` are pushed out of range and
+        dropped, as are rows flagged with slot id >= n_slots."""
+        slots = jnp.asarray(slots, jnp.int32)
+        offsets = jnp.asarray(offsets, jnp.int32)
+        lens = jnp.asarray(lens, jnp.int32)
+
+        def write(pool, pre):
+            c, s = pre.shape[2], pool.shape[2]
+            pos = offsets[:, None] + jnp.arange(c)            # [W, C]
+            pos = jnp.where(jnp.arange(c)[None, :] < lens[:, None],
+                            pos, s)                           # pads -> drop
+            # slots[:,None] broadcasts with pos at adjacent axes 1,2, so
+            # the result matches pre's [L, W, C, Hkv, Dh] layout
+            return pool.at[:, slots[:, None], pos].set(
+                pre.astype(pool.dtype), mode="drop")
+
+        return jax.tree.map(write, pool_caches, prefill_caches)
+
     def copy_blocks(self, paged_caches, src_ids, dst_ids):
         """Copy-on-write: duplicate whole pool blocks ``dst := src`` in
         ONE gather+scatter per K/V leaf.  The runtime batches every COW

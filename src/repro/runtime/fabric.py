@@ -82,6 +82,13 @@ class FabricConfig:
     max_retries: int = 4            # re-admissions per request
     max_request_failures: int = 3   # replica deaths before poison verdict
     retry_backoff: float = 0.05     # base of the exponential backoff
+    # token-level co-scheduling (chunked prefill + SLO tick budgets):
+    # prefill_chunk > 0 splits prompt prefill into fixed-token chunks
+    # interleaved with decode ticks; tpot_target > 0 (seconds/token)
+    # budgets each tick — decode first, prefill chunks in slack order,
+    # leftover slack admits (possibly shrunk) train microbatches
+    prefill_chunk: int = 0
+    tpot_target: float = 0.0
 
 
 class ServingFabric:
@@ -415,28 +422,42 @@ def build_fabric(arch: str, n_replicas: int, *, smoke: bool = True,
     data = SyntheticDataset("alpaca", vocab_size=mcfg.vocab_size,
                             seq_len=max(prompt_len, 16), seed=seed)
     pools: Dict[int, List[Dict[str, Any]]] = {}
-    cursors: Dict[int, int] = {}
 
-    def data_fn(b: int) -> Dict[str, Any]:
-        import jax.numpy as jnp
+    def make_data_fn() -> Callable[[int], Dict[str, Any]]:
+        """Per-replica cursor over the SHARED batch pool: every member
+        walks the same finite corpus in the same epoch order (the FL
+        local-dataset pass), independent of how the fabric interleaves
+        replica ticks — pool consumption stays deterministic."""
+        cursors: Dict[int, int] = {}
 
-        def fresh():
-            return {k: jnp.asarray(v) for k, v in data.batch(b).items()}
+        def data_fn(b: int) -> Dict[str, Any]:
+            import jax.numpy as jnp
 
-        if train_pool <= 0:
-            return fresh()
-        if b not in pools:
-            pools[b] = [fresh() for _ in range(train_pool)]
-            cursors[b] = 0
-        i = cursors[b]
-        cursors[b] = i + 1
-        return pools[b][i % train_pool]
+            def fresh():
+                return {k: jnp.asarray(v)
+                        for k, v in data.batch(b).items()}
+
+            if train_pool <= 0:
+                return fresh()
+            if b not in pools:
+                pools[b] = [fresh() for _ in range(train_pool)]
+            i = cursors.get(b, 0)
+            cursors[b] = i + 1
+            return pools[b][i % train_pool]
+
+        return data_fn
 
     tenant_trees: List[Any] = []
     if n_adapters > 0:
         tenant_trees = make_tenant_adapters(model, n_adapters,
                                             seed=seed + 1)
     fabric = ServingFabric(cfg)
+    if train_pool > 0:
+        # prewarm the shared pool at build time: materializing
+        # train_pool device batches lazily would land on the first
+        # train-due tick — usually a SERVING tick — and charge data
+        # prep to measured serving wall time
+        make_data_fn()(fabric.cfg.train_batch)
     fabric.injector = injector
     for i in range(n_replicas):
         if n_adapters > 0:
@@ -458,10 +479,12 @@ def build_fabric(arch: str, n_replicas: int, *, smoke: bool = True,
             train_tenant = "tenant0"
         fabric.add_replica(LiveReplica(
             f"r{i}", mcfg.name, engine, params, lora, opt_state,
-            on_result=fabric.on_result, data_fn=data_fn,
+            on_result=fabric.on_result, data_fn=make_data_fn(),
             serve_slots=n_slots, serve_prompt_len=prompt_len,
             max_gen_tokens=gen_tokens, serve_paged=paged,
             serve_block_size=block_size, serve_n_blocks=n_blocks,
             serve_prefix_cache=prefix_cache, adapters=registry,
-            train_tenant=train_tenant))
+            train_tenant=train_tenant,
+            serve_prefill_chunk=fabric.cfg.prefill_chunk,
+            serve_tpot_target=fabric.cfg.tpot_target))
     return fabric, mcfg

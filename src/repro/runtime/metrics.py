@@ -88,7 +88,18 @@ class MetricsCollector:
 _SERVE_COUNTERS = ("admitted", "finished", "prefill_tokens",
                    "cached_prefix_tokens", "generated_tokens",
                    "decode_steps", "train_steps",
-                   "nan_publishes_blocked")
+                   "nan_publishes_blocked",
+                   "budget_ticks", "budget_spent_s", "budget_target_s",
+                   "train_skipped_ticks")
+
+
+def _pctl(vals: List[float]) -> Dict[str, float]:
+    """p50/p99 summary of a latency sample list (empty -> None)."""
+    if not vals:
+        return {"p50": None, "p99": None}
+    a = np.asarray(vals, dtype=float)
+    return {"p50": float(np.quantile(a, 0.50)),
+            "p99": float(np.quantile(a, 0.99))}
 
 
 def aggregate_serve_stats(per_replica: Dict[str, "object"]) -> Dict:
@@ -109,11 +120,27 @@ def aggregate_serve_stats(per_replica: Dict[str, "object"]) -> Dict:
     walls: List[float] = []
     versions: List[int] = []
     train_losses: List[float] = []
+    all_ttft: List[float] = []
+    all_tpot: List[float] = []
     for rid in sorted(per_replica):
         s = per_replica[rid]
         row = {f: getattr(s, f, 0) for f in _SERVE_COUNTERS}
         row["wall_time"] = float(s.wall_time)
         row["throughput_tok_s"] = float(s.throughput())
+        # SLO latency distributions: per-request ttft (arrival ->
+        # first token) and tpot (mean seconds/token after the first)
+        r_ttft = list(getattr(s, "ttft", []) or [])
+        r_tpot = list(getattr(s, "tpot", []) or [])
+        row["ttft"] = _pctl(r_ttft)
+        row["tpot"] = _pctl(r_tpot)
+        all_ttft.extend(r_ttft)
+        all_tpot.extend(r_tpot)
+        # token-budget scheduler: fraction of each tick's SLO budget
+        # actually spent (None when the budget planner is off)
+        tgt = float(getattr(s, "budget_target_s", 0.0))
+        row["budget_utilization"] = \
+            float(getattr(s, "budget_spent_s", 0.0)) / tgt if tgt > 0 \
+            else None
         # quality progression: which adapter the replica serves and the
         # latest train CE its fused steps saw (None until it trained)
         row["adapter_version"] = int(getattr(s, "adapter_version", 0))
@@ -146,6 +173,13 @@ def aggregate_serve_stats(per_replica: Dict[str, "object"]) -> Dict:
     cluster["adapter_version_max"] = int(max(versions, default=0))
     cluster["train_loss"] = float(np.mean(train_losses)) \
         if train_losses else None
+    # cluster latency distributions over the CONCATENATED per-request
+    # samples (every request counts once, whichever replica served it)
+    cluster["ttft"] = _pctl(all_ttft)
+    cluster["tpot"] = _pctl(all_tpot)
+    tgt = float(cluster["budget_target_s"])
+    cluster["budget_utilization"] = \
+        float(cluster["budget_spent_s"]) / tgt if tgt > 0 else None
     # per-adapter cluster rollup: requests summed across replicas,
     # version spread per tenant (min < max flags a replica serving a
     # stale copy of that tenant's adapter)

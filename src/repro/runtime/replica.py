@@ -362,6 +362,8 @@ class TrainSession:
     grad_accum: int = 1             # microbatch split for the p_t probe
     steps_done: int = 0
     busy_time: float = 0.0          # wall seconds inside session ticks
+    samples_done: int = 0           # train rows actually stepped (budget
+    #                                 scheduler may shrink a tick's batch)
     losses: List[float] = dataclasses.field(default_factory=list)
 
     @property
@@ -398,7 +400,9 @@ class LiveReplica:
                  serve_prefix_cache: bool = False,
                  adapters: Any = None,
                  train_tenant: Optional[str] = None,
-                 injector: Any = None):
+                 injector: Any = None,
+                 serve_prefill_chunk: int = 0,
+                 serve_tpot_target: float = 0.0):
         from repro.runtime.serving_loop import ContinuousBatcher
         self.replica_id = replica_id
         self.model_id = model_id
@@ -423,6 +427,7 @@ class LiveReplica:
         self._last_loss = float("nan")
         # incremental COMBINED round state
         self._session: Optional[TrainSession] = None
+        self._pending_tb: Optional[Dict[str, Any]] = None
         self._noise_ema = NoiseScaleEMA()
         # per-tick busy-time accounting: (wall stamp at tick end, tick
         # seconds) over a trailing window — the replica's REAL busy
@@ -447,7 +452,8 @@ class LiveReplica:
             prompt_pad=serve_prompt_len, opt_state=opt_state,
             paged=serve_paged, block_size=serve_block_size,
             n_blocks=serve_n_blocks, prefix_cache=serve_prefix_cache,
-            adapters=adapters)
+            adapters=adapters, prefill_chunk=serve_prefill_chunk,
+            tpot_target=serve_tpot_target)
         from repro.runtime.serving_loop import _engine_jits
         self._jit_loss = _engine_jits(engine)["loss"]
 
@@ -504,6 +510,7 @@ class LiveReplica:
                     request_id=self._gen_counter, prompt=prompt,
                     max_new_tokens=min(r.tokens, self.max_gen_tokens),
                     arrival=now, adapter_id=r.adapter_id,
+                    deadline=r.deadline,
                     temperature=r.temperature,
                     top_k=r.top_k, top_p=r.top_p,
                     # seed from the CONTROL-plane id, never the
@@ -581,7 +588,15 @@ class LiveReplica:
         train_due = sess is not None and not sess.done
         serving = not self.batcher.idle()
         if serving or train_due:
-            tb = self.data_fn(sess.train_batch) if train_due else None
+            # sticky train batch: a budget-skipped tick re-offers the
+            # SAME drawn batch next tick, so the trained sequence walks
+            # the finite pool in deterministic epoch order no matter
+            # which wall-clock ticks had slack
+            tb = None
+            if train_due:
+                tb = self._pending_tb
+                if tb is None:
+                    tb = self.data_fn(sess.train_batch)
             t0 = _time.perf_counter()
             self.batcher.step(train_batch=tb, now=now)
             dt = _time.perf_counter() - t0
@@ -594,14 +609,25 @@ class LiveReplica:
                 self._emit_finished(now)
             self._account_busy(dt)
             if train_due:
+                self._pending_tb = None \
+                    if self.batcher.last_tick_trained else tb
+            if train_due and self.batcher.last_tick_trained:
+                # budget-gated co-scheduling: the batcher may SKIP the
+                # train leg on a tick whose SLO slack is spent (tt is
+                # None) — a skipped tick advances neither steps_done nor
+                # the loss log, so rounds report only real steps
                 sess.steps_done += 1
                 sess.busy_time += dt
+                sess.samples_done += self.batcher.last_tick_train_rows
                 m = self.batcher.last_train_metrics
                 sess.losses.append(m["ce_loss"])
-                self._observe_noise(m, sess)
-                if self.injector is not None and self.injector \
-                        .poison_grads(self.replica_id, now):
-                    self._poison_shadow()
+                if self.batcher.last_tick_train_rows >= sess.train_batch:
+                    # shrunk microbatches fold grad_accum to 1 — their
+                    # |g|² is not the probe's microbatch statistic
+                    self._observe_noise(m, sess)
+            if train_due and self.injector is not None and self.injector \
+                    .poison_grads(self.replica_id, now):
+                self._poison_shadow()
         self._busy_frac = self._measured_busy_frac()
         return bool(self._queue or self._inflight
                     or not self.batcher.idle())
@@ -786,6 +812,7 @@ class LiveReplica:
         self.batcher.train_lora = self.lora
         self.batcher.train_grad_accum = accum
         self.train_batch = train_batch
+        self._pending_tb = None     # batch size may change per round
         self._session = TrainSession(
             train_batch=train_batch, infer_batch=infer_batch,
             steps=steps, started_at=now, grad_accum=accum)
@@ -829,7 +856,8 @@ class LiveReplica:
             loss_before=fin[0] if fin else float("nan"),
             loss_after=fin[-1] if fin else float("nan"),
             noise_scale=noise,
-            samples=sess.train_batch * sess.steps_done)
+            samples=sess.samples_done if sess.samples_done
+            else sess.train_batch * sess.steps_done)
 
     def publish_adapter(self) -> int:
         """Round boundary: atomically swap the trained shadow into the

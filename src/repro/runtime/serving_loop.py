@@ -81,6 +81,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core.interfaces import slack_order
 from repro.runtime.paging import BlockAllocator, PrefixCache, blocks_for
 from repro.runtime.sanitize import adapter_sanitizer, lifecycle_sanitizer
 
@@ -105,15 +106,20 @@ def _engine_jits(engine) -> Dict[str, Callable]:
         "write_blocks": jax.jit(model.write_prefill_blocks,
                                 donate_argnums=(0,)),
         "prefill_suffix": jax.jit(model.prefill_ragged_suffix),
+        "prefill_continue": jax.jit(model.prefill_ragged_continue),
+        "write_rows": jax.jit(model.write_prefill_rows,
+                              donate_argnums=(0,)),
         "copy_blocks": jax.jit(model.copy_blocks, donate_argnums=(0,)),
         "combined": jax.jit(
             engine.combined_step, donate_argnums=(2, 4),
-            static_argnames=("attn_backend", "grad_accum")),
+            static_argnames=("attn_backend", "grad_accum",
+                             "train_tokens")),
         "combined_paged": jax.jit(
             engine.combined_step_paged, donate_argnums=(2, 4),
-            static_argnames=("ring_len", "attn_backend", "grad_accum")),
+            static_argnames=("ring_len", "attn_backend", "grad_accum",
+                             "train_tokens")),
         "train": jax.jit(engine.train_step, donate_argnums=(2,),
-                         static_argnames=("grad_accum",)),
+                         static_argnames=("grad_accum", "train_tokens")),
         "loss": jax.jit(
             lambda p, l, b: engine.model.forward_loss(p, l, b)[0]),
     }
@@ -127,6 +133,10 @@ class GenRequest:
     prompt: np.ndarray                  # [P] int32 token ids
     max_new_tokens: int = 16
     arrival: float = 0.0
+    # SLO deadline (same clock as ``arrival``): the chunked-prefill
+    # scheduler spends each tick's leftover budget in deadline-slack
+    # order (core/interfaces.slack_order, shared with the dispatcher)
+    deadline: float = float("inf")
     # multi-tenant serving: which registered adapter this request's
     # tokens flow through (None = the base model / single-adapter mode)
     adapter_id: Optional[str] = None
@@ -141,6 +151,9 @@ class GenRequest:
     # filled by the runtime
     tokens: List[int] = dataclasses.field(default_factory=list)
     prefill_at: Optional[float] = None
+    # when the FIRST generated token landed — equals ``prefill_at`` on
+    # monolithic prefill, later under chunking (the TTFT stamp)
+    first_token_at: Optional[float] = None
     finished_at: Optional[float] = None
     # wall-clock (perf_counter) finish stamp — ``finished_at`` carries
     # whatever clock the caller's ``now`` uses, which may be sim time
@@ -216,9 +229,92 @@ class ServeStats:
         default_factory=dict)
     adapter_versions: Dict[str, int] = dataclasses.field(
         default_factory=dict)
+    # token-budget scheduler telemetry (tpot_target > 0 only): ticks
+    # planned under a budget, measured seconds of work spent vs the
+    # summed per-tick target, and ticks whose train microbatch was
+    # dropped outright to protect the decode TPOT SLO
+    budget_ticks: int = 0
+    budget_spent_s: float = 0.0
+    budget_target_s: float = 0.0
+    train_skipped_ticks: int = 0
+    # per-finished-request latency samples (caller's ``now`` clock):
+    # time to first token and seconds per subsequent output token —
+    # aggregate_serve_stats folds these into p50/p99
+    ttft: List[float] = dataclasses.field(default_factory=list)
+    tpot: List[float] = dataclasses.field(default_factory=list)
 
     def throughput(self) -> float:
         return self.generated_tokens / max(self.wall_time, 1e-9)
+
+
+class _TickBudget:
+    """Per-tick token-budget planner for a decode-TPOT SLO target.
+
+    Keeps EMA cost estimates of the three kinds of work a tick can
+    carry — the decode wave, prefill-chunk tokens, train tokens — from
+    measured wall times, then plans each tick FlexLLM-style: decode is
+    first-class, leftover budget goes to prefill chunks (the caller
+    picks rows in deadline-slack order), and whatever slack remains
+    admits train tokens.  Unknown costs plan optimistically so each
+    work type gets measured once before it is regulated."""
+
+    def __init__(self, target_s: float):
+        self.target_s = target_s
+        self.decode_tick_s: Optional[float] = None
+        self.prefill_tok_s: Optional[float] = None
+        self.train_tok_s: Optional[float] = None
+
+    @staticmethod
+    def _ema(old: Optional[float], new: float) -> float:
+        return new if old is None else 0.75 * old + 0.25 * new
+
+    def observe_decode(self, dt: float) -> None:
+        self.decode_tick_s = self._ema(self.decode_tick_s, dt)
+
+    def observe_prefill(self, tokens: int, dt: float) -> None:
+        if tokens > 0:
+            self.prefill_tok_s = self._ema(self.prefill_tok_s,
+                                           dt / tokens)
+
+    def observe_train(self, tokens: int, dt: float) -> None:
+        if tokens > 0 and dt > 0:
+            self.train_tok_s = self._ema(self.train_tok_s, dt / tokens)
+
+    def prefill_allowance(self, n_decoding: int) -> float:
+        """Prefill tokens this tick may spend after decode's share.
+        With no decoding slots prefill owns the whole tick — there is
+        no TPOT to protect, only TTFT to win."""
+        if n_decoding == 0:
+            return float("inf")
+        rem = self.target_s - (self.decode_tick_s or 0.0)
+        if rem <= 0:
+            return 0.0
+        if self.prefill_tok_s is None:
+            return float("inf")
+        return rem / self.prefill_tok_s
+
+    def train_tokens(self, b: int, s: int,
+                     prefill_spent_s: float) -> Optional[int]:
+        """Token cap for a [B, S] train microbatch in this tick's
+        remaining slack: 0 = run the full batch, a positive cap shrinks
+        it, None = skip training this tick.  Bucketed to {full, half,
+        skip} so the fused program compiles at most twice."""
+        rem = self.target_s - (self.decode_tick_s or 0.0) \
+            - prefill_spent_s
+        if self.train_tok_s is None:
+            # unknown train cost: never stack an unmeasured train
+            # program on a tick carrying serving work — one mispriced
+            # probe can blow several ticks' budget.  Fully idle ticks
+            # (no decode wave, no prefill) train unconditionally via
+            # the caller, so the cost gets measured the moment serving
+            # drains and later ticks can price half/full correctly.
+            return None
+        if rem >= b * s * self.train_tok_s:
+            return 0
+        half = (b // 2) * s
+        if b >= 2 and rem >= half * self.train_tok_s:
+            return half
+        return None
 
 
 class AdapterError(RuntimeError):
@@ -459,7 +555,8 @@ class ContinuousBatcher:
                  n_blocks: Optional[int] = None,
                  prefix_cache: bool = False,
                  attn_backend: Optional[str] = None,
-                 adapters: Optional[AdapterRegistry] = None):
+                 adapters: Optional[AdapterRegistry] = None,
+                 prefill_chunk: int = 0, tpot_target: float = 0.0):
         cfg = engine.model.cfg
         if n_slots < 1:
             # run() makes progress only through slots; zero would spin
@@ -562,6 +659,47 @@ class ContinuousBatcher:
                     "on pool block aliasing)")
             self.prefix_cache = None
             self.caches = self.model.init_caches(n_slots, max_seq)
+        # ------------------------------------------- chunked prefill --
+        # prefill_chunk > 0: prompts prefill in fixed token-budget
+        # chunks across successive ticks (chunk K attends over chunks
+        # 1..K-1's K/V via the suffix/continuation programs), so
+        # partially-prefilled slots coexist with decoding slots
+        self.prefill_chunk = int(prefill_chunk)
+        if self.prefill_chunk > 0:
+            if cfg.has_ssm or not cfg.has_attention:
+                raise NotImplementedError(
+                    f"{cfg.name}: chunked prefill needs an "
+                    "attention-only stack (SSM state threads through "
+                    "every token in order)")
+            from repro.models.transformer import use_dense_prefill
+            if not use_dense_prefill(cfg, self.prompt_pad):
+                raise NotImplementedError(
+                    f"{cfg.name}: chunked prefill needs the dense "
+                    "prefill path — the continuation programs mirror "
+                    "its softmax formulation bit-for-bit, while "
+                    "blockwise/unrolled prefill accumulates online and "
+                    "would break chunked-vs-monolithic greedy identity")
+            if paged:
+                # chunk boundaries must stay block-aligned mid-prefill:
+                # write_prefill_blocks scatters whole blocks, so round
+                # the chunk up to a block multiple (only a prompt's
+                # FINAL chunk may be ragged)
+                self.prefill_chunk = self.block_size * blocks_for(
+                    self.prefill_chunk, self.block_size)
+        self.tpot_target = float(tpot_target)
+        self.budget = _TickBudget(self.tpot_target) \
+            if self.tpot_target > 0 else None
+        # per-slot prefill progress: prompt tokens already in cache
+        # (== len(prompt) once the slot is decoding) and how many of
+        # those were prefix-cache hits rather than computed chunks
+        self.slot_prefilled = np.zeros(n_slots, np.int32)
+        self.slot_cached = np.zeros(n_slots, np.int32)
+        # what the latest step() actually trained (the token-budget
+        # scheduler may shrink or skip a tick's microbatch) — the
+        # replica's session bookkeeping reads these instead of assuming
+        # one full train step per tick
+        self.last_tick_trained = False
+        self.last_tick_train_rows = 0
         self.queue: Deque[GenRequest] = collections.deque()
         self.slot_req: List[Optional[GenRequest]] = [None] * n_slots
         self.slot_pos = np.zeros(n_slots, np.int32)   # next write position
@@ -592,6 +730,8 @@ class ContinuousBatcher:
         self._jit_write_slots = jits["write_slots"]
         self._jit_write_blocks = jits["write_blocks"]
         self._jit_prefill_suffix = jits["prefill_suffix"]
+        self._jit_prefill_continue = jits["prefill_continue"]
+        self._jit_write_rows = jits["write_rows"]
         self._jit_copy_blocks = jits["copy_blocks"]
         self._jit_combined = jits["combined"]
         self._jit_combined_paged = jits["combined_paged"]
@@ -622,6 +762,21 @@ class ContinuousBatcher:
     def active_slots(self) -> List[int]:
         return [i for i in range(self.n_slots)
                 if self.slot_req[i] is not None]
+
+    def _is_prefilling(self, i: int) -> bool:
+        """Slot ``i`` holds a request whose prompt is not fully in
+        cache yet (chunked prefill in flight — parked out of the decode
+        wave)."""
+        req = self.slot_req[i]
+        return req is not None \
+            and int(self.slot_prefilled[i]) < len(req.prompt)
+
+    def decoding_slots(self) -> List[int]:
+        return [i for i in self.active_slots()
+                if not self._is_prefilling(i)]
+
+    def prefilling_slots(self) -> List[int]:
+        return [i for i in self.active_slots() if self._is_prefilling(i)]
 
     def idle(self) -> bool:
         return not self.queue and not self.active_slots()
@@ -664,6 +819,13 @@ class ContinuousBatcher:
         req.finished_at = now
         req.finished_wall = time.perf_counter()
         self.stats.finished += 1
+        first = req.first_token_at if req.first_token_at is not None \
+            else req.prefill_at
+        if first is not None:
+            self.stats.ttft.append(max(first - req.arrival, 0.0))
+            if len(req.tokens) > 1:
+                self.stats.tpot.append(
+                    max(now - first, 0.0) / (len(req.tokens) - 1))
         if req.adapter_id is not None:
             self.stats.adapter_requests[req.adapter_id] = \
                 self.stats.adapter_requests.get(req.adapter_id, 0) + 1
@@ -751,20 +913,23 @@ class ContinuousBatcher:
         reqs: List[GenRequest] = []
         # per admitted request: (matched block chain, blocks reserved)
         plans: List = []
-        while len(reqs) < len(free) and self.queue:
-            head = self.queue[0]
+        picked: List[int] = []      # queue indices claimed this wave
+        idx = 0
+        while len(reqs) < len(free) and idx < len(self.queue):
+            head = self.queue[idx]
             if self.adapters is not None and head.adapter_id is not None \
                     and not self.adapters.can_acquire(head.adapter_id):
-                # every adapter slot is pinned by in-flight requests —
-                # FCFS waits for a release, mirroring the paged pool's
-                # preemption-free backpressure
-                break
+                # every slot of THIS tenant's adapter is pinned by
+                # in-flight requests — skip past it within the arrival
+                # wave (it keeps its queue position for the next one)
+                # instead of head-of-line blocking the whole FCFS scan
+                idx += 1
+                continue
             if self.paged:
-                req = self.queue[0]
                 matched = self.prefix_cache.match(
-                    req.prompt, namespace=req.adapter_id) \
+                    head.prompt, namespace=head.adapter_id) \
                     if self.prefix_cache is not None else []
-                worst = self._worst_blocks(req)
+                worst = self._worst_blocks(head)
 
                 # sliding windows wrap decode writes back into prompt
                 # blocks, so every aliased block may need a COW block;
@@ -786,23 +951,34 @@ class ContinuousBatcher:
                 need = need_for(matched)
                 if self.allocator.available() \
                         < need + self.allocator.n_would_revive(matched):
+                    # pool backpressure stays strict FCFS: nothing
+                    # behind the head may jump an exhausted pool
                     break
                 self.allocator.acquire(matched)
                 self.allocator.reserve(need)
                 if self.prefix_cache is not None:
                     self.prefix_cache.count_admitted(
-                        req.prompt, len(matched),
-                        namespace=req.adapter_id)
+                        head.prompt, len(matched),
+                        namespace=head.adapter_id)
                 plans.append((matched, need))
-            req = self.queue.popleft()
             if self._lsan is not None:
-                self._lsan.on_admit(req)
-            if self.adapters is not None and req.adapter_id is not None:
+                self._lsan.on_admit(head)
+            if self.adapters is not None and head.adapter_id is not None:
                 # pin the tenant's device slot for the request lifetime
                 # (loads from host on a miss; can_acquire gated above)
-                self.adapters.acquire(req.adapter_id)
-            reqs.append(req)
+                self.adapters.acquire(head.adapter_id)
+            reqs.append(head)
+            picked.append(idx)
+            idx += 1
+        for j in reversed(picked):
+            del self.queue[j]
         if not reqs:
+            return finished
+        if self.prefill_chunk > 0:
+            # chunked mode only ASSIGNS slots here; chunk 1 (and every
+            # continuation) runs through _advance_prefill under the
+            # tick's token budget
+            self._assign_chunked(free, reqs, plans, now)
             return finished
         firsts, entries, last_logits = self._prefill_wave(
             reqs, plans if self.paged else None)
@@ -837,6 +1013,7 @@ class ContinuousBatcher:
                                        else 0)
             req.tokens.append(first)
             req.prefill_at = now
+            req.first_token_at = now
             self.stats.admitted += 1
             self.stats.prefill_tokens += len(req.prompt) - n_cached
             self.stats.cached_prefix_tokens += n_cached
@@ -887,6 +1064,8 @@ class ContinuousBatcher:
             self.slot_aid[slot] = req.adapter_id
             self.slot_pos[slot] = len(req.prompt)
             self.slot_tok[slot] = first
+            self.slot_prefilled[slot] = len(req.prompt)
+            self.slot_cached[slot] = n_cached
         if admitted_rows and self.paged:
             self.caches = self._jit_write_blocks(
                 self.caches, wave_pre, jnp.asarray(wave_tables))
@@ -894,6 +1073,171 @@ class ContinuousBatcher:
             self.caches = self._jit_write_slots(
                 self.caches, wave_pre, jnp.asarray(wave_slots))
         return finished
+
+    # ------------------------------------------------- chunked prefill -
+    def _assign_chunked(self, free: List[int], reqs: List[GenRequest],
+                        plans: List, now: float) -> None:
+        """Chunked admission: bind each selected request to a slot in
+        PREFILLING state (no prefill program runs here).  The slot is
+        parked out of the decode wave — ``slot_prefilled < len(prompt)``
+        — until ``_advance_prefill`` lands its final chunk."""
+        for k, (slot, req) in enumerate(zip(free, reqs)):
+            matched, reserved = plans[k] if self.paged else ([], 0)
+            n_cached = len(matched) * (self.block_size if self.paged
+                                       else 0)
+            req.prefill_at = now
+            self.stats.admitted += 1
+            self.stats.cached_prefix_tokens += n_cached
+            self.slot_req[slot] = req
+            self.slot_aid[slot] = req.adapter_id
+            self.slot_prefilled[slot] = n_cached
+            self.slot_cached[slot] = n_cached
+            # parked: the decode wave's write for this row is garbage
+            # aimed at position ``slot_prefilled`` (contiguous — the
+            # next chunk overwrites it before it can be attended) or at
+            # scratch block 0 (paged — the dev-table row is zeroed)
+            self.slot_pos[slot] = n_cached
+            self.slot_tok[slot] = 0
+            if self.paged:
+                self.slot_blocks[slot] = list(matched)
+                self.slot_reserved[slot] = reserved
+                self.block_tables[slot, :] = 0
+                self.block_tables[slot, :len(matched)] = matched
+                self._dev_tables = None
+
+    def _advance_prefill(self, now: float, allowance: float):
+        """Spend up to ``allowance`` prefill tokens on the most urgent
+        partially-prefilled slots (deadline-slack order), one chunk per
+        slot, as ONE wave program + ONE batched cache write.  A slot
+        whose final chunk lands gets its first token from the wave's
+        logits and joins the decode wave this same tick.  Returns
+        (requests finished at prefill completion, measured seconds)."""
+        done: List[GenRequest] = []
+        pref = self.prefilling_slots()
+        if not pref or allowance <= 0:
+            return done, 0.0
+        order = slack_order(pref, now,
+                            key=lambda i: self.slot_req[i].deadline)
+        rows: List = []             # (slot, chunk_len)
+        used = 0
+        for i in order:
+            req = self.slot_req[i]
+            c = min(len(req.prompt) - int(self.slot_prefilled[i]),
+                    self.prefill_chunk)
+            if rows and used + c > allowance:
+                break               # first chunk always makes progress
+            rows.append((i, c))
+            used += c
+            if used >= allowance:
+                break
+        t0 = time.perf_counter()
+        w = len(rows)
+        slots_arr = [i for i, _ in rows]
+        slots_np = np.asarray(slots_arr, np.int32)
+        wave_reqs = [self.slot_req[i] for i in slots_arr]
+        chunk_lens = np.array([c for _, c in rows], np.int32)
+        pre_lens = self.slot_prefilled[slots_np]    # host counters
+        pad = self.prefill_chunk
+        tokens = np.zeros((w, pad), np.int32)
+        for j, (i, c) in enumerate(rows):
+            p = int(self.slot_prefilled[i])
+            tokens[j, :c] = wave_reqs[j].prompt[p:p + c]
+        if self.paged:
+            bs = self.block_size
+            # prefix tables: each slot's blocks so far, width bucketed
+            # to a power of two (extra lanes are scratch, masked by
+            # pre_lens inside the program)
+            npre = max(max(len(self.slot_blocks[i])
+                           for i in slots_arr), 1)
+            npre = min(1 << (npre - 1).bit_length(),
+                       self.blocks_per_slot)
+            pre_tables = np.zeros((w, npre), np.int32)
+            for j, i in enumerate(slots_arr):
+                blk = self.slot_blocks[i]
+                pre_tables[j, :len(blk)] = blk
+            logits, pre = self._jit_prefill_suffix(
+                self.params, self._serve_lora(),
+                {"tokens": jnp.asarray(tokens)},
+                jnp.asarray(chunk_lens), jnp.asarray(pre_lens),
+                self.caches, jnp.asarray(pre_tables),
+                self._wave_adapter_idx(wave_reqs))
+            # land the chunk in fresh blocks against each slot's
+            # admission-time reservation (chunks are block-aligned, so
+            # sum-over-chunks == the monolithic block count)
+            nbp = blocks_for(pad, bs)
+            wave_tables = np.full((w, nbp), self.n_blocks, np.int32)
+            for j, (i, c) in enumerate(rows):
+                need = blocks_for(c, bs)
+                assert self.slot_reserved[i] >= need, \
+                    f"slot {i}: chunk beyond admission reservation"
+                ids = self.allocator.take(need)
+                self.slot_reserved[i] -= need
+                base = len(self.slot_blocks[i])
+                self.slot_blocks[i].extend(ids)
+                self.block_tables[i, base:base + need] = ids
+                wave_tables[j, :need] = ids
+            self._dev_tables = None
+            self.caches = self._jit_write_blocks(
+                self.caches, pre, jnp.asarray(wave_tables))
+        else:
+            logits, pre = self._jit_prefill_continue(
+                self.params, self._serve_lora(),
+                {"tokens": jnp.asarray(tokens)},
+                jnp.asarray(chunk_lens), jnp.asarray(pre_lens),
+                self.caches, jnp.asarray(slots_arr, dtype=jnp.int32),
+                adapter_idx=self._wave_adapter_idx(wave_reqs))
+            self.caches = self._jit_write_rows(
+                self.caches, pre, slots_np, pre_lens, chunk_lens)
+        final_rows = [j for j, (i, c) in enumerate(rows)
+                      if int(self.slot_prefilled[i]) + c
+                      >= len(wave_reqs[j].prompt)]
+        nxt = None
+        host_rows = None
+        if final_rows:
+            nxt = np.asarray(  # lint: host-sync-ok one batched argmax pull per chunk wave
+                jnp.argmax(logits[:, -1], axis=-1), np.int32)
+            if any(wave_reqs[j].samples for j in final_rows):
+                host_rows = np.asarray(logits[:, -1])  # lint: host-sync-ok one batched logits pull per sampling chunk wave
+        for j, (i, c) in enumerate(rows):
+            req = wave_reqs[j]
+            p = int(self.slot_prefilled[i]) + c
+            self.slot_prefilled[i] = p
+            self.stats.prefill_tokens += c
+            if p < len(req.prompt):
+                self.slot_pos[i] = p    # stay parked at the frontier
+                continue
+            # final chunk: the wave's logits row IS the full prompt's
+            # last-token logits (bit-identical to monolithic prefill)
+            first = int(nxt[j])
+            if req.samples:
+                req.rng = np.random.default_rng(
+                    req.seed if req.seed is not None else req.request_id)
+                first = sample_token(
+                    host_rows[j], temperature=req.temperature,
+                    top_k=req.top_k, top_p=req.top_p, rng=req.rng)
+            req.tokens.append(first)
+            req.first_token_at = now
+            self.stats.generated_tokens += 1
+            if self.paged:
+                wraps = len(req.prompt) + req.max_new_tokens - 1 \
+                    > self.ring_len
+                if self.prefix_cache is not None and not wraps:
+                    self.prefix_cache.register(
+                        req.prompt, self.slot_blocks[i],
+                        int(self.slot_cached[i]) // self.block_size,
+                        namespace=req.adapter_id)
+            if len(req.tokens) >= req.max_new_tokens \
+                    or first == self.eos_id:
+                self._record_finish(req, now)
+                self._evict(i)
+                done.append(req)
+                continue
+            self.slot_pos[i] = len(req.prompt)
+            self.slot_tok[i] = first
+        dt = time.perf_counter() - t0
+        if self.budget is not None:
+            self.budget.observe_prefill(used, dt)
+        return done, dt
 
     # --------------------------------------------------------------- decode -
     def _grow_tables(self, active: List[int]) -> None:
@@ -954,18 +1298,51 @@ class ContinuousBatcher:
 
     def step(self, train_batch: Optional[Dict[str, Any]] = None,
              now: float = 0.0) -> List[GenRequest]:
-        """One runtime tick: admit, then advance every active slot one
-        token (fused with a LoRA training step when ``train_batch`` is
-        given).  Returns the requests that finished this tick."""
+        """One runtime tick under the token budget: admit, spend the
+        decode-TPOT slack on prefill chunks (deadline-slack order),
+        advance every DECODING slot one token, and fit a train
+        microbatch (full / halved / skipped) into whatever budget
+        remains.  Without chunking/budget knobs this reduces to the
+        original admit + full-wave tick.  Returns the requests that
+        finished this tick."""
         if train_batch is not None and self.opt_state is None:
             raise ValueError(
                 "step(train_batch=...) requires opt_state (pass it to "
                 "the ContinuousBatcher constructor)")
+        budget = self.budget
+        self.last_tick_trained = False
+        self.last_tick_train_rows = 0
         finished = self.admit(now)
-        active = self.active_slots()
+        prefill_spent = 0.0
+        if self.prefill_chunk > 0 and self.prefilling_slots():
+            allowance = float("inf") if budget is None else \
+                budget.prefill_allowance(len(self.decoding_slots()))
+            done, prefill_spent = self._advance_prefill(now, allowance)
+            finished.extend(done)
+        active = self.decoding_slots() if self.prefill_chunk > 0 \
+            else self.active_slots()
         if not active:
             if train_batch is not None:
-                self._plain_train(train_batch)
+                ref = train_batch.get("tokens",
+                                      train_batch.get("embeds"))
+                b, s = int(ref.shape[0]), int(ref.shape[1])
+                tt: Optional[int] = 0
+                if budget is not None and self.prefilling_slots():
+                    # mid-prefill slots are waiting on TTFT — only
+                    # train in whatever slack this tick has left
+                    tt = budget.train_tokens(b, s, prefill_spent)
+                if tt is None:
+                    self.stats.train_skipped_ticks += 1
+                else:
+                    t0 = time.perf_counter()
+                    self._plain_train(train_batch, train_tokens=tt)
+                    rows = b if tt == 0 else max(1, min(b, tt // s))
+                    if budget is not None:
+                        budget.observe_train(
+                            rows * s, time.perf_counter() - t0)
+                    self.last_tick_trained = True
+                    self.last_tick_train_rows = rows
+            self._record_budget(prefill_spent)
             return finished
         toks = jnp.asarray(self.slot_tok[:, None])
         pos = jnp.asarray(self.slot_pos)
@@ -990,13 +1367,36 @@ class ContinuousBatcher:
             width = self._table_width(active)
             if self._dev_tables is None \
                     or self._dev_tables_width != width:
-                self._dev_tables = jnp.asarray(
-                    self.block_tables[:, :width])
+                tbl = self.block_tables[:, :width]
+                pref = self.prefilling_slots()
+                if pref:
+                    # park mid-prefill slots on scratch block 0: the
+                    # paged write index CLAMPS out-of-range table
+                    # lookups, so a live row here would let the parked
+                    # slot's garbage decode write corrupt a real block
+                    tbl = tbl.copy()
+                    tbl[pref, :] = 0
+                self._dev_tables = jnp.asarray(tbl)
                 self._dev_tables_width = width
             tables = self._dev_tables
         if self._lsan is not None:
             self._sanitize_wave(active)
+        # budget the tick's leftover slack into the train microbatch:
+        # full batch / half batch / skipped (tt=None), a static knob so
+        # the fused program compiles at most twice per shape
+        tt: Optional[int] = 0
+        train_rows = 0
         if train_batch is not None:
+            ref = train_batch.get("tokens", train_batch.get("embeds"))
+            b, s = int(ref.shape[0]), int(ref.shape[1])
+            if budget is not None:
+                tt = budget.train_tokens(b, s, prefill_spent)
+            if tt is None:
+                self.stats.train_skipped_ticks += 1
+            else:
+                train_rows = b if tt == 0 else max(1, min(b, tt // s))
+        t0 = time.perf_counter()
+        if train_batch is not None and tt is not None:
             if self.paged:
                 (new_tl, self.opt_state, logits, self.caches,
                  metrics) = self._jit_combined_paged(
@@ -1004,7 +1404,8 @@ class ContinuousBatcher:
                     train_batch, self.caches, toks, pos, tables,
                     ring_len=self.ring_len, serve_lora=self._serve_lora(),
                     attn_backend=self.attn_backend,
-                    grad_accum=self.train_grad_accum, **comb_kw)
+                    grad_accum=self.train_grad_accum,
+                    train_tokens=tt, **comb_kw)
             else:
                 (new_tl, self.opt_state, logits, self.caches,
                  metrics) = self._jit_combined(
@@ -1012,9 +1413,12 @@ class ContinuousBatcher:
                     train_batch, self.caches, toks, pos,
                     serve_lora=self._serve_lora(),
                     attn_backend=self.attn_backend,
-                    grad_accum=self.train_grad_accum, **comb_kw)
+                    grad_accum=self.train_grad_accum,
+                    train_tokens=tt, **comb_kw)
             self._store_trained(new_tl)
             self._record_train(metrics)
+            self.last_tick_trained = True
+            self.last_tick_train_rows = train_rows
         elif self.paged:
             logits, self.caches = self._jit_decode_paged(
                 self.params, self._serve_lora(), self.caches, toks, pos,
@@ -1027,6 +1431,17 @@ class ContinuousBatcher:
         self.stats.decode_steps += 1
         nxt = np.asarray(  # lint: host-sync-ok one batched argmax pull per decode wave
             jnp.argmax(logits[:, -1], axis=-1), np.int32)
+        dt = time.perf_counter() - t0
+        if budget is not None:
+            if self.last_tick_trained:
+                # the fused tick's train share is what exceeded the
+                # known decode cost (conservative before it's known)
+                budget.observe_train(
+                    train_rows * s,
+                    max(dt - (budget.decode_tick_s or 0.0), 0.0))
+            else:
+                budget.observe_decode(dt)
+        self._record_budget(prefill_spent + dt)
         if any(self.slot_req[i].samples for i in active):
             # ONE batched host fetch of the last-position logits for the
             # whole tick; greedy-only ticks keep the transfer-free
@@ -1074,6 +1489,8 @@ class ContinuousBatcher:
         self.slot_req[i] = None
         self.slot_pos[i] = 0
         self.slot_tok[i] = 0
+        self.slot_prefilled[i] = 0
+        self.slot_cached[i] = 0
         if self.slot_aid[i] is not None:
             # unpin the request's adapter — without this the registry
             # leaks a ref per request and eventually deadlocks admission
@@ -1125,12 +1542,21 @@ class ContinuousBatcher:
         else:
             self.lora = new_tl
 
-    def _plain_train(self, train_batch) -> None:
+    def _plain_train(self, train_batch, train_tokens: int = 0) -> None:
         new_tl, self.opt_state, metrics = self._jit_train(
             self.params, self._train_adapter(), self.opt_state,
-            train_batch, grad_accum=self.train_grad_accum)
+            train_batch, grad_accum=self.train_grad_accum,
+            train_tokens=train_tokens)
         self._store_trained(new_tl)
         self._record_train(metrics)
+
+    def _record_budget(self, spent_s: float) -> None:
+        """Per-tick budget telemetry (tpot_target > 0 only)."""
+        if self.budget is None:
+            return
+        self.stats.budget_ticks += 1
+        self.stats.budget_target_s += self.budget.target_s
+        self.stats.budget_spent_s += spent_s
 
     def _record_train(self, metrics: Dict[str, Any]) -> None:
         """One host sync per train tick: loss history + the scalar

@@ -1,0 +1,188 @@
+"""Chunked prefill (token-level co-scheduling): resumable-continuation
+prefill must be BIT-IDENTICAL to monolithic prefill on greedy decode —
+chunk K attends over the K/V chunks 1..K-1 wrote, through the same
+``attention_prefix_suffix`` math the decode path uses — across the full
+attention contiguous path, sliding-window attention, the paged pool,
+and the paged prefix-cache suffix path.  Plus the lifecycle edges: a
+mid-prefill eviction frees every pool block and reservation (checked
+under the armed sanitizers), the SSM gate refuses chunking outright,
+and the per-tick budget planner's pricing buckets."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import sample_prompts as _prompts
+from repro.configs.registry import get_config
+from repro.core.engine import make_engine
+from repro.runtime.serving_loop import (
+    ContinuousBatcher, GenRequest, _TickBudget,
+)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("qwen1.5-0.5b").scaled()
+    engine = make_engine(cfg, lr=3e-3)
+    model = engine.model
+    params = model.init(jax.random.key(0))
+    lora = jax.tree.map(lambda x: x + 0.01,
+                        model.init_lora(jax.random.key(1)))
+    return cfg, engine, model, params, lora
+
+
+def _reqs(prompts, gen=6):
+    return [GenRequest(request_id=i, prompt=p.copy(), max_new_tokens=gen)
+            for i, p in enumerate(prompts)]
+
+
+def _tokens(engine, params, lora, prompts, chunk, **kw):
+    reqs = _reqs(prompts)
+    ContinuousBatcher(engine, params, lora, prefill_chunk=chunk,
+                      **kw).run(reqs)
+    return [list(r.tokens) for r in reqs]
+
+
+# ------------------------------------------------ greedy bit-identity -----
+def test_chunked_matches_monolithic_contiguous(setup):
+    cfg, engine, model, params, lora = setup
+    prompts = _prompts(cfg, 6, [7, 24, 13, 24, 6, 19])
+    kw = dict(n_slots=3, max_seq=32, prompt_pad=24)
+    mono = _tokens(engine, params, lora, prompts, 0, **kw)
+    for chunk in (8, 10):       # chunk dividing AND straddling prompts
+        assert _tokens(engine, params, lora, prompts, chunk,
+                       **kw) == mono
+
+
+def test_chunked_matches_monolithic_sliding_window(setup):
+    cfg, engine, model, params, lora = setup
+    wcfg = dataclasses.replace(cfg, sliding_window=16)
+    wengine = make_engine(wcfg, lr=3e-3)
+    wparams = wengine.model.init(jax.random.key(0))
+    wlora = jax.tree.map(lambda x: x + 0.01,
+                         wengine.model.init_lora(jax.random.key(1)))
+    prompts = _prompts(wcfg, 5, [5, 16, 9, 16, 12])
+    kw = dict(n_slots=3, max_seq=24, prompt_pad=16)
+    mono = _tokens(wengine, wparams, wlora, prompts, 0, **kw)
+    assert _tokens(wengine, wparams, wlora, prompts, 6, **kw) == mono
+
+
+def test_chunked_matches_monolithic_paged(setup):
+    cfg, engine, model, params, lora = setup
+    prompts = _prompts(cfg, 6, [7, 24, 13, 24, 6, 19])
+    kw = dict(n_slots=3, max_seq=32, prompt_pad=24, paged=True,
+              block_size=8)
+    mono = _tokens(engine, params, lora, prompts, 0, **kw)
+    # 8 = block-aligned; 12 exercises the ctor's round-up to 16
+    for chunk in (8, 12):
+        assert _tokens(engine, params, lora, prompts, chunk,
+                       **kw) == mono
+
+
+def test_chunked_matches_monolithic_prefix_cache(setup):
+    cfg, engine, model, params, lora = setup
+    rng = np.random.default_rng(7)
+    shared = rng.integers(0, cfg.vocab_size, size=16).astype(np.int32)
+    prompts = []
+    for i in range(6):
+        tail = rng.integers(0, cfg.vocab_size,
+                            size=int(rng.integers(4, 9))).astype(np.int32)
+        prompts.append(np.concatenate([shared, tail]) if i % 2 == 0
+                       else rng.integers(0, cfg.vocab_size,
+                                         size=int(rng.integers(6, 25)))
+                       .astype(np.int32))
+    kw = dict(n_slots=3, max_seq=32, prompt_pad=24, paged=True,
+              block_size=8, prefix_cache=True)
+    mono_reqs = _reqs(prompts)
+    b0 = ContinuousBatcher(engine, params, lora, prefill_chunk=0, **kw)
+    s0 = b0.run(mono_reqs)
+    ch_reqs = _reqs(prompts)
+    b1 = ContinuousBatcher(engine, params, lora, prefill_chunk=8, **kw)
+    s1 = b1.run(ch_reqs)
+    assert [list(r.tokens) for r in ch_reqs] \
+        == [list(r.tokens) for r in mono_reqs]
+    # chunked admission matches the same cached prefixes (suffix path
+    # continues FROM the matched blocks, it does not re-prefill them)
+    assert s1.cached_prefix_tokens == s0.cached_prefix_tokens > 0
+
+
+# ------------------------------------------------------ lifecycle edges ----
+def test_mid_chunk_eviction_frees_everything(setup, monkeypatch):
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    cfg, engine, model, params, lora = setup
+    prompts = _prompts(cfg, 2, [24, 24])
+    b = ContinuousBatcher(engine, params, lora, n_slots=2, max_seq=32,
+                          prompt_pad=24, paged=True, block_size=8,
+                          prefill_chunk=8)
+    for r in _reqs(prompts):
+        b.submit(r)
+    b.step()                    # one chunk in: slots parked mid-prefill
+    assert b.prefilling_slots(), "expected mid-prefill slots"
+    assert b.allocator.n_used > 0
+    b.drain_all()               # teardown while prefill is incomplete
+    assert b.allocator.n_used == 0
+    assert b.allocator.reserved == 0
+    assert not b.prefilling_slots()
+
+
+def test_ssm_arch_rejects_chunked_prefill():
+    cfg = get_config("mamba2-780m").scaled()
+    engine = make_engine(cfg, lr=3e-3)
+    params = engine.model.init(jax.random.key(0))
+    lora = engine.model.init_lora(jax.random.key(1))
+    with pytest.raises(NotImplementedError, match="attention-only"):
+        ContinuousBatcher(engine, params, lora, n_slots=2, max_seq=24,
+                          prompt_pad=16, prefill_chunk=8)
+
+
+def test_paged_chunk_rounds_up_to_block_multiple(setup):
+    cfg, engine, model, params, lora = setup
+    b = ContinuousBatcher(engine, params, lora, n_slots=2, max_seq=32,
+                          prompt_pad=24, paged=True, block_size=8,
+                          prefill_chunk=10)
+    assert b.prefill_chunk == 16        # blocks stay aligned mid-prefill
+    b2 = ContinuousBatcher(engine, params, lora, n_slots=2, max_seq=32,
+                           prompt_pad=24, prefill_chunk=10)
+    assert b2.prefill_chunk == 10       # contiguous: no alignment need
+
+
+# -------------------------------------------------- budget planner units ---
+def test_tick_budget_pricing():
+    bud = _TickBudget(0.010)
+    # unknown train cost: never probe on a tick carrying serving work
+    assert bud.train_tokens(4, 16, 0.0) is None
+    bud.observe_decode(0.004)
+    assert bud.train_tokens(4, 16, 0.0) is None
+    # measured cheap training fits full in the 6ms slack
+    bud.observe_train(64, 0.0016)       # 25us/token
+    assert bud.train_tokens(4, 16, 0.0) == 0
+    # prefill spend eats the slack: full costs 1.6ms > 1.0ms left but
+    # the 32-token half microbatch (0.8ms) still fits -> half
+    assert bud.train_tokens(4, 16, 0.005) == 32
+    # nothing left -> skip
+    assert bud.train_tokens(4, 16, 0.0092) is None
+    # prefill allowance: whole tick when nothing decodes, the residual
+    # budget otherwise, zero when decode alone exceeds the target
+    assert bud.prefill_allowance(0) == float("inf")
+    bud.observe_prefill(32, 0.0032)     # 100us/token
+    assert bud.prefill_allowance(2) == pytest.approx(60.0)
+    bud.observe_decode(0.030)           # EMA jumps past the target
+    assert bud.prefill_allowance(2) == 0.0
+
+
+def test_budget_stats_and_latency_distributions(setup):
+    cfg, engine, model, params, lora = setup
+    prompts = _prompts(cfg, 4, [7, 24, 13, 18])
+    reqs = _reqs(prompts)
+    b = ContinuousBatcher(engine, params, lora, n_slots=2, max_seq=32,
+                          prompt_pad=24, prefill_chunk=8,
+                          tpot_target=0.004)
+    stats = b.run(reqs)
+    assert stats.finished == 4
+    assert stats.budget_ticks > 0
+    assert stats.budget_target_s == pytest.approx(
+        0.004 * stats.budget_ticks)
+    assert stats.budget_spent_s > 0
+    assert len(stats.ttft) == 4 and all(t >= 0 for t in stats.ttft)
+    assert len(stats.tpot) == 4 and all(t >= 0 for t in stats.tpot)
