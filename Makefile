@@ -20,6 +20,7 @@ bench:
 
 bench-smoke:
 	PYTHONPATH=$(PYTHONPATH):. python benchmarks/paged_kv.py --smoke
+	PYTHONPATH=$(PYTHONPATH):. python benchmarks/preemption.py --smoke
 	PYTHONPATH=$(PYTHONPATH):. python benchmarks/prefix_cache.py --smoke
 	PYTHONPATH=$(PYTHONPATH):. python benchmarks/continuous_batching.py --smoke
 	PYTHONPATH=$(PYTHONPATH):. python benchmarks/multi_replica.py --smoke

@@ -99,6 +99,11 @@ def run() -> str:
                 cur["peak_used_bytes"] = (
                     b.allocator.peak_used * b.cache_bytes()
                     // max(b.n_blocks, 1))
+                # fraction of the allocated pool the trace ever touched
+                # — the headroom an oversubscribed pool could reclaim
+                cur["pool_utilization"] = round(
+                    b.allocator.peak_used
+                    / max(b.allocator.capacity, 1), 3)
             if mode not in results or cur["tokens_per_s"] \
                     > results[mode]["tokens_per_s"]:
                 results[mode] = cur
@@ -126,7 +131,8 @@ def run() -> str:
             f"contig={results['contiguous']['tokens_per_s']:.1f}tok_s "
             f"speedup={speedup:.2f}x "
             f"peak_blocks={results['paged']['peak_used_blocks']}"
-            f"/{results['paged']['pool_blocks']}")
+            f"/{results['paged']['pool_blocks']} "
+            f"util={results['paged']['pool_utilization']:.0%}")
 
 
 if __name__ == "__main__":

@@ -13,8 +13,8 @@ def main() -> None:
     from benchmarks import (
         component_ablation, continuous_batching, coordinator_ablation,
         dispatcher_stability, end_to_end_goodput, latency_model_fit,
-        model_sharing_cost, overhead, paged_kv, quality_sharing,
-        roofline, trace_stats, utilization,
+        model_sharing_cost, overhead, paged_kv, preemption,
+        quality_sharing, roofline, trace_stats, utilization,
     )
     print("name,us_per_call,derived")
     failures = []
@@ -22,7 +22,7 @@ def main() -> None:
                 quality_sharing, dispatcher_stability, coordinator_ablation,
                 end_to_end_goodput, utilization, overhead,
                 component_ablation, continuous_batching, paged_kv,
-                roofline):
+                preemption, roofline):
         try:
             mod.run()
         except Exception as e:

@@ -27,6 +27,11 @@ REPRO_SANITIZE=1 python -m pytest -x -q
 
 echo "== perf smoke =="
 python benchmarks/paged_kv.py --smoke
+# oversubscribed-pool gate: with the pool below worst-case demand,
+# preemption (host swap / drop+re-prefill) must complete 100% of the
+# trace bit-identically at >= 1.3x the preemption-free goodput — the
+# assertions live inside the benchmark
+python benchmarks/preemption.py --smoke
 python benchmarks/prefix_cache.py --smoke
 python benchmarks/continuous_batching.py --smoke
 python benchmarks/multi_replica.py --smoke

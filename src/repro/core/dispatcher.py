@@ -326,6 +326,12 @@ class SubflowDispatcher:
                     sf.next_fire = now + min(sf.interval, 0.05)
                     continue
                 target = min(target, p.admit_capacity)
+            if p is not None and p.preempted > 0:
+                # thrashing oversubscribed pool: requests are parked
+                # off-device waiting for capacity — feeding full fires
+                # here only deepens the swap churn, so halve the hand
+                # per parked request (floor 1 keeps the subflow alive)
+                target = max(1, target // (1 + p.preempted))
             # feasibility shedding (Eq. 13c): a request whose deadline
             # cannot be met by this batch contributes nothing — drop it
             # rather than burn capacity serving it late.

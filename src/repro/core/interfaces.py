@@ -152,6 +152,13 @@ class ReplicaPressure:
     # requests here to skip the host->device adapter load (empty on
     # single-adapter replicas and the simulator)
     resident_adapters: tuple = ()
+    # oversubscribed KV pool: the replica's configured oversubscription
+    # fraction (0 = preemption-free worst-case reservation) and how
+    # many requests it currently holds preempted off-device — a
+    # non-zero count means the pool is thrashing and new work should
+    # route elsewhere
+    oversubscribe: float = 0.0
+    preempted: int = 0
 
     @property
     def slot_headroom(self) -> float:
@@ -172,7 +179,11 @@ class ReplicaPressure:
         per-replica queue discounts both.  ``queue_len`` already counts
         admission-queue requests, so ``pending`` is not re-added."""
         h = min(self.block_headroom, 1.0) * (0.5 + 0.5 * self.slot_headroom)
-        return h / (1.0 + self.queue_len / max(self.total_slots, 1))
+        h /= 1.0 + self.queue_len / max(self.total_slots, 1)
+        # a thrashing oversubscribed pool (requests parked off-device)
+        # discounts hard: every parked request will reclaim capacity
+        # the free-block count is still advertising
+        return h / (1.0 + self.preempted)
 
 
 @runtime_checkable

@@ -45,6 +45,10 @@ Usage:
                      # co-scheduling: prompts prefill in 16-token chunks
                      # riding the decode wave, each tick budgeted to the
                      # decode TPOT SLO (leftover slack admits train work)
+  ... --paged --n-blocks 48 --oversubscribe 0.9   # oversubscribed KV
+                     # pool: reserve near-term need only, preempt on
+                     # exhaustion (host swap or drop + re-prefill),
+                     # greedy output bit-identical to never-preempted
   ... --temperature 0.8 --top-k 40 --top-p 0.95   # sampled decoding
   ... --replicas 2 --chaos --chaos-crashes 1 --chaos-stalls 1
                      # seeded fault injection against the fabric:
@@ -100,6 +104,7 @@ def run_serving(arch: str, *, smoke: bool = True, n_requests: int = 16,
                 temperature: float = 0.0, top_k: int = 0,
                 top_p: float = 1.0, n_adapters: int = 0,
                 prefill_chunk: int = 0, tpot_target: float = 0.0,
+                oversubscribe: float = 0.0, swap: bool = True,
                 verbose: bool = True) -> dict:
     """Serve ``n_requests`` prompts on a ``batch_size``-slot continuous
     batcher; returns throughput + (combined mode) train losses.
@@ -139,7 +144,8 @@ def run_serving(arch: str, *, smoke: bool = True, n_requests: int = 16,
         opt_state=opt_state, paged=paged, block_size=block_size,
         n_blocks=n_blocks or None, prefix_cache=prefix_cache,
         adapters=registry, prefill_chunk=prefill_chunk,
-        tpot_target=tpot_target)
+        tpot_target=tpot_target, oversubscribe=oversubscribe,
+        swap=swap)
     prompts = data.sample_tokens(n_requests)[:, :prompt_len]
     requests = [GenRequest(request_id=i, prompt=prompts[i],
                            max_new_tokens=gen_tokens,
@@ -171,6 +177,11 @@ def run_serving(arch: str, *, smoke: bool = True, n_requests: int = 16,
     if paged:
         out["peak_used_blocks"] = batcher.allocator.peak_used
         out["pool_blocks"] = batcher.allocator.capacity
+    if oversubscribe > 0:
+        out["preemptions"] = stats.preemptions
+        out["swap_out_blocks"] = stats.swap_out_blocks
+        out["swap_in_blocks"] = stats.swap_in_blocks
+        out["reprefill_tokens"] = stats.reprefill_tokens
     if prefix_cache:
         out["cached_prefix_tokens"] = stats.cached_prefix_tokens
         out["prefix_cache_hits"] = batcher.prefix_cache.hits
@@ -193,7 +204,11 @@ def run_serving(arch: str, *, smoke: bool = True, n_requests: int = 16,
                  if batcher.train_losses else "")
               + (f"; {n_adapters} tenants "
                  f"{dict(sorted(stats.adapter_requests.items()))}"
-                 if registry is not None else ""))
+                 if registry is not None else "")
+              + (f"; {stats.preemptions} preemptions "
+                 f"({stats.swap_out_blocks} blocks swapped, "
+                 f"{stats.reprefill_tokens} tokens re-prefilled)"
+                 if oversubscribe > 0 else ""))
     return out
 
 
@@ -205,6 +220,7 @@ def run_multi_replica_serving(
         prefix_cache: bool = False, temperature: float = 0.0,
         top_k: int = 0, top_p: float = 1.0, n_adapters: int = 0,
         prefill_chunk: int = 0, tpot_target: float = 0.0,
+        oversubscribe: float = 0.0, swap: bool = True,
         chaos: dict = None, verbose: bool = True) -> dict:
     """Serve ``n_requests`` prompts through the dispatcher-routed
     multi-replica fabric; returns the aggregate cluster summary.
@@ -217,7 +233,8 @@ def run_multi_replica_serving(
     from repro.runtime.fabric import FabricConfig, build_fabric
 
     fcfg = FabricConfig(prefill_chunk=prefill_chunk,
-                        tpot_target=tpot_target)
+                        tpot_target=tpot_target,
+                        oversubscribe=oversubscribe, swap=swap)
     injector = _make_injector(n_replicas, chaos) if chaos else None
     fabric, cfg = build_fabric(
         arch, n_replicas, smoke=smoke, n_slots=batch_size,
@@ -273,6 +290,7 @@ def run_combined_fabric_serving(
         temperature: float = 0.0, top_k: int = 0, top_p: float = 1.0,
         n_adapters: int = 0, timeout: float = 300.0,
         prefill_chunk: int = 0, tpot_target: float = 0.0,
+        oversubscribe: float = 0.0, swap: bool = True,
         chaos: dict = None, verbose: bool = True) -> dict:
     """Live co-execution: serve the trace through the multi-replica
     fabric WHILE the launcher drives incremental FL train sessions over
@@ -288,7 +306,8 @@ def run_combined_fabric_serving(
         enable_finetuning=True, train_batch=train_batch,
         bootstrap_steps=steps_per_round, steps_per_round=steps_per_round,
         min_cohort=min(2, n_replicas),
-        prefill_chunk=prefill_chunk, tpot_target=tpot_target)
+        prefill_chunk=prefill_chunk, tpot_target=tpot_target,
+        oversubscribe=oversubscribe, swap=swap)
     injector = _make_injector(n_replicas, chaos) if chaos else None
     fabric, cfg = build_fabric(
         arch, n_replicas, smoke=smoke, n_slots=batch_size,
@@ -376,6 +395,17 @@ def main() -> None:
                          "each tick: decode first, then prefill chunks "
                          "in deadline-slack order, leftover slack "
                          "admits (possibly shrunk) train microbatches")
+    ap.add_argument("--oversubscribe", type=float, default=0.0,
+                    help="oversubscribed KV pool watermark in (0, 1] "
+                         "(default 0 = preemption-free worst-case "
+                         "reservations); > 0 reserves only near-term "
+                         "need against that fraction of the pool and "
+                         "preempts on exhaustion (victims swap to host "
+                         "or drop + re-prefill); requires --paged")
+    ap.add_argument("--no-swap", dest="swap", action="store_false",
+                    help="disable host swap for preempted requests — "
+                         "every victim drops its private KV and "
+                         "re-prefills on restore (--oversubscribe only)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature (0 = greedy, the default)")
     ap.add_argument("--top-k", type=int, default=0,
@@ -406,6 +436,9 @@ def main() -> None:
     if args.prefix_cache and not args.paged:
         ap.error("--prefix-cache requires --paged (sharing rides on "
                  "pool block aliasing)")
+    if args.oversubscribe and not args.paged:
+        ap.error("--oversubscribe requires --paged (preemption swaps "
+                 "pool blocks)")
     if args.chaos and args.replicas < 2:
         ap.error("--chaos requires --replicas > 1 (fault tolerance is "
                  "a property of the pool)")
@@ -431,6 +464,7 @@ def main() -> None:
                 top_p=args.top_p, n_adapters=args.adapters,
                 prefill_chunk=args.chunked_prefill,
                 tpot_target=args.tpot_target,
+                oversubscribe=args.oversubscribe, swap=args.swap,
                 seed=args.seed, chaos=chaos)
             return
         run_multi_replica_serving(
@@ -442,8 +476,9 @@ def main() -> None:
             temperature=args.temperature, top_k=args.top_k,
             top_p=args.top_p, n_adapters=args.adapters,
             prefill_chunk=args.chunked_prefill,
-            tpot_target=args.tpot_target, seed=args.seed,
-            chaos=chaos)
+            tpot_target=args.tpot_target,
+            oversubscribe=args.oversubscribe, swap=args.swap,
+            seed=args.seed, chaos=chaos)
         return
     run_serving(args.arch, n_requests=args.requests,
                 prompt_len=args.prompt_len, gen_tokens=args.gen,
@@ -454,7 +489,9 @@ def main() -> None:
                 temperature=args.temperature, top_k=args.top_k,
                 top_p=args.top_p, n_adapters=args.adapters,
                 prefill_chunk=args.chunked_prefill,
-                tpot_target=args.tpot_target, seed=args.seed)
+                tpot_target=args.tpot_target,
+                oversubscribe=args.oversubscribe, swap=args.swap,
+                seed=args.seed)
 
 
 if __name__ == "__main__":

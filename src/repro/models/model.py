@@ -548,6 +548,35 @@ class Model:
         k, v = paged_caches["kv"]
         return {"kv": (cp(k), cp(v))}
 
+    def gather_blocks(self, paged_caches, ids):
+        """Preemption swap-out: pull whole pool blocks ``ids`` out of
+        the pool in ONE gather per K/V leaf — the device half of a
+        batched device->host copy (the caller ``device_get``s the
+        result).  Pad entries may repeat a real id (e.g. 0/scratch);
+        the host side slices the real rows off."""
+        ids = jnp.asarray(ids, jnp.int32)
+
+        def g(pool):
+            return jnp.take(pool, ids, axis=1)
+
+        k, v = paged_caches["kv"]
+        return {"kv": (g(k), g(v))}
+
+    def scatter_blocks(self, paged_caches, ids, host_kv):
+        """Preemption swap-in: land host-side block contents back into
+        freshly taken pool blocks ``ids`` in ONE scatter per K/V leaf.
+        Pad entries hold ``n_blocks`` and are dropped, so one bucketed
+        program shape serves every restore width."""
+        ids = jnp.asarray(ids, jnp.int32)
+
+        def s(pool, vals):
+            return pool.at[:, ids].set(
+                jnp.asarray(vals).astype(pool.dtype), mode="drop")
+
+        k, v = paged_caches["kv"]
+        hk, hv = host_kv
+        return {"kv": (s(k, hk), s(v, hv))}
+
     # --------------------------------------------------------------- decode -
     def decode_step(self, params, lora, caches, token, pos, *,
                     attn_backend: Optional[str] = None,

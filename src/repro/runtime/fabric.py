@@ -89,6 +89,13 @@ class FabricConfig:
     # leftover slack admits (possibly shrunk) train microbatches
     prefill_chunk: int = 0
     tpot_target: float = 0.0
+    # oversubscribed KV pool (paged only): oversubscribe in (0, 1]
+    # reserves only near-term need against that pool watermark and
+    # preempts on exhaustion (victims swap to host or drop+re-prefill,
+    # swap=False forces drop); 0 keeps preemption-free worst-case
+    # reservations
+    oversubscribe: float = 0.0
+    swap: bool = True
 
 
 class ServingFabric:
@@ -486,5 +493,7 @@ def build_fabric(arch: str, n_replicas: int, *, smoke: bool = True,
             serve_prefix_cache=prefix_cache, adapters=registry,
             train_tenant=train_tenant,
             serve_prefill_chunk=fabric.cfg.prefill_chunk,
-            serve_tpot_target=fabric.cfg.tpot_target))
+            serve_tpot_target=fabric.cfg.tpot_target,
+            serve_oversubscribe=fabric.cfg.oversubscribe,
+            serve_swap=fabric.cfg.swap))
     return fabric, mcfg

@@ -90,7 +90,9 @@ _SERVE_COUNTERS = ("admitted", "finished", "prefill_tokens",
                    "decode_steps", "train_steps",
                    "nan_publishes_blocked",
                    "budget_ticks", "budget_spent_s", "budget_target_s",
-                   "train_skipped_ticks")
+                   "train_skipped_ticks",
+                   "preemptions", "swap_out_blocks", "swap_in_blocks",
+                   "reprefill_tokens")
 
 
 def _pctl(vals: List[float]) -> Dict[str, float]:

@@ -7,13 +7,17 @@ module owns which pool blocks are free, which slot holds which blocks,
 and whether an admission's worst case fits — the policy half of paging,
 kept in plain Python/numpy so the decode program never depends on it.
 
-Reservation semantics (preemption-free admission): at admission the
-batcher reserves a request's WORST-CASE block count; blocks are then
-taken lazily — prompt blocks at admission, one more each time decode
-crosses a block boundary — always against the reservation.  A request
-is admitted only if its worst case fits the unreserved pool, so a slot
-can never stall mid-decode waiting for a block (no preemption/swap
-needed; that is the ROADMAP follow-on).
+Reservation semantics (preemption-free admission, the default): at
+admission the batcher reserves a request's WORST-CASE block count;
+blocks are then taken lazily — prompt blocks at admission, one more
+each time decode crosses a block boundary — always against the
+reservation.  A request is admitted only if its worst case fits the
+unreserved pool, so a slot can never stall mid-decode waiting for a
+block.  Oversubscribed admission (``ContinuousBatcher(oversubscribe=
+...)``) reserves only near-term need instead and handles mid-decode
+exhaustion by preempting a victim slot: the victim's private blocks
+either swap to host memory (``swap_out``/``swap_in`` below) or are
+dropped and re-prefilled on restore.
 
 Sharing semantics (prefix caching): every block carries a refcount.
 Full, immutable prompt blocks are registered in a ``PrefixCache``
@@ -233,11 +237,49 @@ class BlockAllocator:
         if self.san is not None:
             self.san.on_free(list(ids))
 
+    # ------------------------------------------------------------- swapping -
+    def swap_out(self, ids: Sequence[int]) -> None:
+        """Preemption swap-out: drop the SOLE reference on each private
+        block whose contents were just copied to host memory, returning
+        the block to the free list.  Only unpinned refcount-1 blocks
+        may swap — shared (COW prefix) and registered blocks stay
+        pool-resident, so swapping one is a hard error.  The sanitizer
+        marks the ids swapped-out: a decode-wave gather of one before a
+        ``swap_in`` restores fresh blocks is a use-after-swap."""
+        for b in ids:
+            if not (self.n_scratch <= b < self.n_blocks):
+                raise BlockError(f"swap-out of invalid block id {b}")
+            if self._ref[b] != 1:
+                raise BlockError(
+                    f"swap-out of block {b} with refcount "
+                    f"{self._ref[b]} (must be the sole reference)")
+            if b in self._pinned:
+                raise BlockError(
+                    f"swap-out of pinned (prefix-cached) block {b} — "
+                    "registered blocks stay pool-resident")
+            self._ref[b] = 0
+            self._free.append(b)
+        if self.san is not None:
+            self.san.on_swap_out(list(ids))
+
+    def swap_in(self, n: int) -> List[int]:
+        """Restore-side allocation: reserve AND take ``n`` fresh blocks
+        in one step for the host->device scatter of a swapped-out
+        chain.  Raises ``OutOfBlocks`` when the pool cannot cover the
+        restore (the caller defers the swap-in to a later tick)."""
+        self.reserve(n)
+        ids = self.take(n)
+        if self.san is not None:
+            self.san.on_swap_in(ids)
+        return ids
+
     # -------------------------------------------------------------- pinning -
     def pin(self, bid: int) -> None:
         """Mark ``bid`` as prefix-cached: its content outlives its last
         reference (retained LRU) until reclaimed or unpinned."""
         self._pinned.add(bid)
+        if self.san is not None:
+            self.san.on_pin(bid)
 
     def unpin(self, bid: int) -> None:
         """Drop the cache pin; an already-retained block moves straight
@@ -246,6 +288,8 @@ class BlockAllocator:
         if bid in self._retained:
             del self._retained[bid]
             self._free.append(bid)
+        if self.san is not None:
+            self.san.on_unpin(bid)
 
 
 # =========================================================================

@@ -402,7 +402,9 @@ class LiveReplica:
                  train_tenant: Optional[str] = None,
                  injector: Any = None,
                  serve_prefill_chunk: int = 0,
-                 serve_tpot_target: float = 0.0):
+                 serve_tpot_target: float = 0.0,
+                 serve_oversubscribe: float = 0.0,
+                 serve_swap: bool = True):
         from repro.runtime.serving_loop import ContinuousBatcher
         self.replica_id = replica_id
         self.model_id = model_id
@@ -453,7 +455,8 @@ class LiveReplica:
             paged=serve_paged, block_size=serve_block_size,
             n_blocks=serve_n_blocks, prefix_cache=serve_prefix_cache,
             adapters=adapters, prefill_chunk=serve_prefill_chunk,
-            tpot_target=serve_tpot_target)
+            tpot_target=serve_tpot_target,
+            oversubscribe=serve_oversubscribe, swap=serve_swap)
         from repro.runtime.serving_loop import _engine_jits
         self._jit_loss = _engine_jits(engine)["loss"]
 
@@ -677,7 +680,9 @@ class LiveReplica:
         # ingested); requests already in the batcher queue are committed
         # to this replica and show up in queue_len alone
         pending = sum(len(g) for _, _w, g in self._queue)
-        committed = pending + len(b.queue)
+        # parked (preempted) requests are committed work too: each one
+        # re-takes a slot and pool capacity on restore
+        committed = pending + len(b.queue) + b.n_preempted
         active = len(b.active_slots())
         p = ReplicaPressure(
             queue_len=self.queue_length(now),
@@ -694,6 +699,11 @@ class LiveReplica:
             p.pool_blocks = b.allocator.capacity
             if b.prefix_cache is not None:
                 p.cached_blocks = len(b.prefix_cache)
+            # oversubscribed pool: advertise the thrash signal so the
+            # dispatcher discounts this replica while requests sit
+            # parked off-device waiting for capacity
+            p.oversubscribe = b.oversubscribe
+            p.preempted = b.n_preempted
         return p
 
     def prefix_affinity(self, prompt: Any,

@@ -9,9 +9,11 @@ that are otherwise enforced only by convention and review:
                      advanced on every allocator mutation and
                      cross-checked against the allocator, plus
                      decode-wave checks over the batcher's block
-                     tables — use-after-free gather, write into a
-                     shared (refcount > 1) block without copy-on-write,
-                     an active slot writing scratch block 0, and
+                     tables — use-after-free gather, use-after-swap
+                     gather of a chain whose contents were swapped to
+                     host (preemption), write into a shared
+                     (refcount > 1) block without copy-on-write, an
+                     active slot writing scratch block 0, and
                      reservation leaks at eviction/drain.
   AdapterSanitizer   mirrors the ``AdapterRegistry`` residency state:
                      decode-wave reads of a refcount-0 / non-resident /
@@ -83,6 +85,12 @@ class BlockSanitizer:
         self.alloc = alloc
         self.ref = np.zeros(alloc.n_blocks, np.int64)
         self.reserved = 0
+        # blocks whose CONTENTS left the device (preemption swap-out):
+        # free-list members whose bytes live host-side until a swap_in
+        # re-takes fresh blocks — gathering one before then is a
+        # use-after-swap, distinct from plain use-after-free
+        self.swapped: set = set()
+        self.pinned: set = set()
 
     # ------------------------------------------------- allocator hooks --
     def on_reserve(self, n: int) -> None:
@@ -102,6 +110,12 @@ class BlockSanitizer:
                       f"take handed out block {b} with shadow refcount "
                       f"{int(self.ref[b])} (still referenced)")
             self.ref[b] = 1
+            # a re-taken block is a fresh allocation: its new owner
+            # overwrites the contents, so the swapped/pinned marks from
+            # its previous life are cleared (reclaim discards the
+            # allocator pin without an unpin hook)
+            self.swapped.discard(b)
+            self.pinned.discard(b)
         self.reserved -= len(ids)
         if self.reserved < 0:
             _fail("reservation-underflow",
@@ -126,6 +140,36 @@ class BlockSanitizer:
                       f"free of block {b} with shadow refcount 0")
             self.ref[b] -= 1
 
+    def on_swap_out(self, ids: List[int]) -> None:
+        for b in ids:
+            if self.ref[b] != 1:
+                _fail("swap-out-shared",
+                      f"swap-out of block {b} with shadow refcount "
+                      f"{int(self.ref[b])} — only a sole-referenced "
+                      "private block may leave the device")
+            if b in self.pinned:
+                _fail("swap-out-pinned",
+                      f"swap-out of pinned (prefix-cached) block {b} — "
+                      "registered blocks stay pool-resident")
+            self.ref[b] = 0
+            self.swapped.add(b)
+
+    def on_swap_in(self, ids: List[int]) -> None:
+        # fresh blocks scattered from host copies are live again
+        # (``on_take`` already cleared any stale swapped marks)
+        self.swapped.difference_update(ids)
+
+    def on_pin(self, bid: int) -> None:
+        if self.ref[bid] < 1:
+            _fail("pin-of-free",
+                  f"pin of block {bid} with shadow refcount "
+                  f"{int(self.ref[bid])} — only live blocks may be "
+                  "registered")
+        self.pinned.add(bid)
+
+    def on_unpin(self, bid: int) -> None:
+        self.pinned.discard(bid)
+
     # ---------------------------------------------------- wave checks --
     def _check_mirror(self) -> None:
         """Mirror-vs-allocator cross-check: any drift means the
@@ -142,6 +186,12 @@ class BlockSanitizer:
                   f"{bad.tolist()} (shadow "
                   f"{self.ref[bad].tolist()} vs allocator "
                   f"{theirs[bad].tolist()})")
+        if self.pinned != set(self.alloc._pinned):
+            _fail("pin-drift",
+                  "shadow pin set diverged from allocator: shadow-only "
+                  f"{sorted(self.pinned - set(self.alloc._pinned))[:8]} "
+                  "allocator-only "
+                  f"{sorted(set(self.alloc._pinned) - self.pinned)[:8]}")
 
     def check_decode_wave(self, batcher: Any, active: List[int]) -> None:
         """Pre-decode: every gathered block must be live, every write
@@ -152,6 +202,15 @@ class BlockSanitizer:
         for i in active:
             blocks = batcher.slot_blocks[i]
             for b in blocks:
+                # swapped-out first: the block IS refcount-0, but the
+                # precise diagnosis is that its contents left the
+                # device — restore must swap_in before decoding
+                if b in self.swapped:
+                    _fail("use-after-swap",
+                          f"slot {i} decode wave gathers block {b} "
+                          "whose contents were swapped out to host — "
+                          "the chain must swap_in (fresh blocks + "
+                          "scatter) before it decodes")
                 if alloc.ref(b) < 1:
                     _fail("use-after-free-gather",
                           f"slot {i} decode wave gathers block {b} with "

@@ -16,7 +16,20 @@ lives in one of two cache layouts:
               decode crosses a block boundary — so cache memory scales
               with live tokens, not ``n_slots * max_seq``, and admission
               is rejected (queue backpressure, preemption-free) when the
-              pool can't cover a request's worst case.
+              pool can't cover a request's worst case.  With
+              ``oversubscribe=w`` (0 < w <= 1) admission reserves only
+              near-term need (prompt blocks + a one-block lookahead)
+              against a ``w``-fraction watermark of the pool instead,
+              and mid-decode pool exhaustion PREEMPTS a victim slot:
+              its private block chain either swaps to host memory
+              (batched device->host gather; restored by a batched
+              scatter into fresh blocks) or is dropped and re-prefilled
+              from host-kept token ids, whichever an EMA cost model
+              prices cheaper.  COW-shared / prefix-registered blocks
+              are never copied — they stay pool-resident (or revive via
+              the ``PrefixCache``).  Restores run ahead of the decode
+              wave in deadline-slack order and greedy output stays
+              bit-identical to a never-preempted run.
 
 Paged mode can additionally share prompt prefixes copy-on-write
 (``prefix_cache=True``): full, immutable prompt blocks are registered
@@ -64,8 +77,10 @@ Scope: non-VLM families; full-attention or cache-covering windows
 ring-over-blocks sliding windows on the paged path (the paged ring
 wraps at ``min(max_seq, window)`` exactly like the contiguous ring, so
 greedy outputs are identical).  Paged mode needs an attention-only
-stack — SSM state is per-slot, not per-block.  Preemption/swap of live
-blocks is the ROADMAP follow-on.
+stack — SSM state is per-slot, not per-block.  Oversubscribed mode
+additionally needs full attention (``sliding_window == 0``): a ring
+wrap overwrites cache rows in place, so a dropped request could not be
+re-prefilled into an equivalent state.
 """
 from __future__ import annotations
 
@@ -110,6 +125,9 @@ def _engine_jits(engine) -> Dict[str, Callable]:
         "write_rows": jax.jit(model.write_prefill_rows,
                               donate_argnums=(0,)),
         "copy_blocks": jax.jit(model.copy_blocks, donate_argnums=(0,)),
+        "gather_blocks": jax.jit(model.gather_blocks),
+        "scatter_blocks": jax.jit(model.scatter_blocks,
+                                  donate_argnums=(0,)),
         "combined": jax.jit(
             engine.combined_step, donate_argnums=(2, 4),
             static_argnames=("attn_backend", "grad_accum",
@@ -237,6 +255,15 @@ class ServeStats:
     budget_spent_s: float = 0.0
     budget_target_s: float = 0.0
     train_skipped_ticks: int = 0
+    # oversubscribed-pool telemetry: victim slots preempted on pool
+    # exhaustion, blocks moved device->host / host->device by the swap
+    # paths, and prompt+generated tokens recomputed by drop-restore
+    # re-prefills (those ALSO count in prefill_tokens — prefill_tokens
+    # is total prefill compute, reprefill_tokens the restore subset)
+    preemptions: int = 0
+    swap_out_blocks: int = 0
+    swap_in_blocks: int = 0
+    reprefill_tokens: int = 0
     # per-finished-request latency samples (caller's ``now`` clock):
     # time to first token and seconds per subsequent output token —
     # aggregate_serve_stats folds these into p50/p99
@@ -315,6 +342,59 @@ class _TickBudget:
         if b >= 2 and rem >= half * self.train_tok_s:
             return half
         return None
+
+
+class _SwapCost:
+    """EMA cost model for the per-victim preemption choice, priced like
+    ``_TickBudget``: measured seconds per byte of a device<->host block
+    copy vs seconds per re-prefilled token.  Swap preserves state
+    exactly, so unknown costs prefer swap — each path gets measured
+    before it is regulated, and the safe choice is the default."""
+
+    def __init__(self) -> None:
+        self.swap_byte_s: Optional[float] = None
+        self.prefill_tok_s: Optional[float] = None
+
+    @staticmethod
+    def _ema(old: Optional[float], new: float) -> float:
+        return new if old is None else 0.75 * old + 0.25 * new
+
+    def observe_swap(self, nbytes: int, dt: float) -> None:
+        if nbytes > 0 and dt > 0:
+            self.swap_byte_s = self._ema(self.swap_byte_s, dt / nbytes)
+
+    def observe_prefill(self, tokens: int, dt: float) -> None:
+        if tokens > 0 and dt > 0:
+            self.prefill_tok_s = self._ema(self.prefill_tok_s,
+                                           dt / tokens)
+
+    def prefer_swap(self, tail_bytes: int, reprefill_tokens: int) -> bool:
+        """Swap round trip (out + in) cheaper than recomputing the
+        dropped rows?"""
+        if self.swap_byte_s is None or self.prefill_tok_s is None:
+            return True
+        return 2.0 * tail_bytes * self.swap_byte_s \
+            <= reprefill_tokens * self.prefill_tok_s
+
+
+@dataclasses.dataclass
+class _Swapped:
+    """A preempted request parked off its slot.  ``kept`` blocks (the
+    COW-shared / prefix-registered chain prefix) stay pool-resident
+    with our reference held; the private tail either lives host-side in
+    ``host_kv`` (mode "swap") or was dropped and will be recomputed
+    from the request's host-kept token ids (mode "reprefill").  The
+    pinned adapter reference is kept across the preemption so restore
+    can never fail on adapter residency."""
+    req: GenRequest
+    adapter_id: Optional[str]
+    mode: str                     # "swap" | "reprefill"
+    kept: List[int]               # pool-resident chain prefix (refs held)
+    host_kv: Any                  # (k, v) host arrays, swap mode only
+    n_tail: int                   # private blocks to restore
+    pos: int                      # decode frontier: next write position
+    tok: int                      # next token to feed
+    cached: int                   # prefix-cache hit tokens at admission
 
 
 class AdapterError(RuntimeError):
@@ -556,7 +636,8 @@ class ContinuousBatcher:
                  prefix_cache: bool = False,
                  attn_backend: Optional[str] = None,
                  adapters: Optional[AdapterRegistry] = None,
-                 prefill_chunk: int = 0, tpot_target: float = 0.0):
+                 prefill_chunk: int = 0, tpot_target: float = 0.0,
+                 oversubscribe: float = 0.0, swap: bool = True):
         cfg = engine.model.cfg
         if n_slots < 1:
             # run() makes progress only through slots; zero would spin
@@ -659,6 +740,45 @@ class ContinuousBatcher:
                     "on pool block aliasing)")
             self.prefix_cache = None
             self.caches = self.model.init_caches(n_slots, max_seq)
+        # --------------------------------------- oversubscribed pool --
+        # oversubscribe = w (0 < w <= 1): admission reserves only
+        # near-term need against a w-fraction watermark of the pool;
+        # mid-decode exhaustion preempts victims (swap-out to host or
+        # drop + re-prefill).  0 keeps the preemption-free default.
+        self.oversubscribe = float(oversubscribe)
+        self.swap = bool(swap)
+        if self.oversubscribe > 0:
+            if not paged:
+                raise ValueError(
+                    "oversubscribe requires paged=True (preemption "
+                    "moves pool blocks, not contiguous slot stripes)")
+            if not (0 < self.oversubscribe <= 1):
+                raise ValueError(
+                    f"oversubscribe must be in (0, 1], got "
+                    f"{self.oversubscribe}")
+            if cfg.sliding_window > 0:
+                raise NotImplementedError(
+                    f"{cfg.name}: oversubscribed preemption needs full "
+                    "attention — a sliding-window ring wrap overwrites "
+                    "cache rows in place, so a dropped request cannot "
+                    "be re-prefilled into an equivalent state")
+            from repro.models.transformer import use_dense_prefill
+            if not use_dense_prefill(cfg, self.prompt_pad):
+                raise NotImplementedError(
+                    f"{cfg.name}: drop-restore re-prefill rides the "
+                    "suffix-continuation programs, which mirror the "
+                    "dense prefill path bit-for-bit")
+            # (1 - w) * capacity blocks stay unreservable at admission:
+            # headroom for decode growth and swap-in restores
+            self._headroom_blocks = self.allocator.capacity \
+                - int(self.oversubscribe * self.allocator.capacity)
+            self.swap_cost: Optional[_SwapCost] = _SwapCost()
+        else:
+            self._headroom_blocks = 0
+            self.swap_cost = None
+        # preempted requests parked off their slots, restored (swap-in
+        # or re-prefill) ahead of admission in deadline-slack order
+        self._swapped: List[_Swapped] = []
         # ------------------------------------------- chunked prefill --
         # prefill_chunk > 0: prompts prefill in fixed token-budget
         # chunks across successive ticks (chunk K attends over chunks
@@ -686,6 +806,17 @@ class ContinuousBatcher:
                 # FINAL chunk may be ragged)
                 self.prefill_chunk = self.block_size * blocks_for(
                     self.prefill_chunk, self.block_size)
+        # chunk width of one _advance_prefill wave: the chunking knob
+        # when set; otherwise (oversubscribed drop-restores still
+        # re-prefill through _advance_prefill) a block-aligned
+        # prompt_pad so one restore chunk covers a typical prompt
+        if self.prefill_chunk > 0:
+            self._prefill_pad = self.prefill_chunk
+        elif paged:
+            self._prefill_pad = self.block_size * blocks_for(
+                self.prompt_pad, self.block_size)
+        else:
+            self._prefill_pad = self.prompt_pad
         self.tpot_target = float(tpot_target)
         self.budget = _TickBudget(self.tpot_target) \
             if self.tpot_target > 0 else None
@@ -694,6 +825,14 @@ class ContinuousBatcher:
         # those were prefix-cache hits rather than computed chunks
         self.slot_prefilled = np.zeros(n_slots, np.int32)
         self.slot_cached = np.zeros(n_slots, np.int32)
+        # prefill goal per slot: len(prompt) normally; a drop-restore
+        # re-prefills prompt + already-generated tokens, so its goal is
+        # the restore sequence length (slot_seq overrides the token
+        # source, slot_restore_tok re-installs the decode frontier
+        # token on the final chunk instead of sampling a new one)
+        self.slot_goal = np.zeros(n_slots, np.int32)
+        self.slot_seq: List[Optional[np.ndarray]] = [None] * n_slots
+        self.slot_restore_tok = np.full(n_slots, -1, np.int32)
         # what the latest step() actually trained (the token-budget
         # scheduler may shrink or skip a tick's microbatch) — the
         # replica's session bookkeeping reads these instead of assuming
@@ -733,6 +872,8 @@ class ContinuousBatcher:
         self._jit_prefill_continue = jits["prefill_continue"]
         self._jit_write_rows = jits["write_rows"]
         self._jit_copy_blocks = jits["copy_blocks"]
+        self._jit_gather_blocks = jits["gather_blocks"]
+        self._jit_scatter_blocks = jits["scatter_blocks"]
         self._jit_combined = jits["combined"]
         self._jit_combined_paged = jits["combined_paged"]
         self._jit_train = jits["train"]
@@ -764,12 +905,19 @@ class ContinuousBatcher:
                 if self.slot_req[i] is not None]
 
     def _is_prefilling(self, i: int) -> bool:
-        """Slot ``i`` holds a request whose prompt is not fully in
-        cache yet (chunked prefill in flight — parked out of the decode
-        wave)."""
+        """Slot ``i`` holds a request whose prefill goal (prompt, or
+        prompt + generated tokens for a drop-restore) is not fully in
+        cache yet — parked out of the decode wave."""
         req = self.slot_req[i]
         return req is not None \
-            and int(self.slot_prefilled[i]) < len(req.prompt)
+            and int(self.slot_prefilled[i]) < int(self.slot_goal[i])
+
+    def _slot_seq(self, i: int) -> np.ndarray:
+        """The token sequence slot ``i``'s prefill consumes: the
+        request's prompt, unless a drop-restore installed a longer
+        restore sequence (prompt + already-generated tokens)."""
+        seq = self.slot_seq[i]
+        return seq if seq is not None else self.slot_req[i].prompt
 
     def decoding_slots(self) -> List[int]:
         return [i for i in self.active_slots()
@@ -779,7 +927,14 @@ class ContinuousBatcher:
         return [i for i in self.active_slots() if self._is_prefilling(i)]
 
     def idle(self) -> bool:
-        return not self.queue and not self.active_slots()
+        return not self.queue and not self.active_slots() \
+            and not self._swapped
+
+    @property
+    def n_preempted(self) -> int:
+        """Requests currently parked off-device by preemption (swap or
+        drop) — the replica's thrashing signal for the dispatcher."""
+        return len(self._swapped)
 
     # ------------------------------------------------------------ admission -
     def _worst_blocks(self, req: GenRequest) -> int:
@@ -933,24 +1088,39 @@ class ContinuousBatcher:
 
                 # sliding windows wrap decode writes back into prompt
                 # blocks, so every aliased block may need a COW block;
-                # full attention never writes an aliased block
+                # full attention never writes an aliased block.  Over-
+                # subscribed admission reserves only near-term need —
+                # the prompt's uncached blocks plus a one-block decode
+                # lookahead; growth past that is _ensure_headroom's
+                # job (reserve-or-preempt at the block boundary).
                 def need_for(m):
-                    return worst if self.cfg.sliding_window > 0 \
+                    full = worst if self.cfg.sliding_window > 0 \
                         else worst - len(m)
+                    if self.oversubscribe <= 0:
+                        return full
+                    near = blocks_for(
+                        len(head.prompt) - len(m) * self.block_size,
+                        self.block_size) + 1
+                    return min(full, near)
 
                 # a match can be too expensive to honor: reviving
                 # retained blocks costs pool capacity ON TOP of the
                 # worst-case reservation under sliding windows.  Trim
                 # the aliased prefix until it fits — a cold admission
                 # (no match) always fits one worst-case request, so
-                # warm hits can never deadlock an idle pool.
+                # warm hits can never deadlock an idle pool.  The
+                # oversubscription watermark holds (1 - w) * capacity
+                # out of admission's reach so growth and swap-in
+                # restores always find headroom (0 when off).
                 while matched and self.allocator.available() \
                         < need_for(matched) \
-                        + self.allocator.n_would_revive(matched):
+                        + self.allocator.n_would_revive(matched) \
+                        + self._headroom_blocks:
                     matched.pop()
                 need = need_for(matched)
                 if self.allocator.available() \
-                        < need + self.allocator.n_would_revive(matched):
+                        < need + self.allocator.n_would_revive(matched) \
+                        + self._headroom_blocks:
                     # pool backpressure stays strict FCFS: nothing
                     # behind the head may jump an exhausted pool
                     break
@@ -1065,6 +1235,7 @@ class ContinuousBatcher:
             self.slot_pos[slot] = len(req.prompt)
             self.slot_tok[slot] = first
             self.slot_prefilled[slot] = len(req.prompt)
+            self.slot_goal[slot] = len(req.prompt)
             self.slot_cached[slot] = n_cached
         if admitted_rows and self.paged:
             self.caches = self._jit_write_blocks(
@@ -1091,6 +1262,7 @@ class ContinuousBatcher:
             self.slot_req[slot] = req
             self.slot_aid[slot] = req.adapter_id
             self.slot_prefilled[slot] = n_cached
+            self.slot_goal[slot] = len(req.prompt)
             self.slot_cached[slot] = n_cached
             # parked: the decode wave's write for this row is garbage
             # aimed at position ``slot_prefilled`` (contiguous — the
@@ -1121,9 +1293,8 @@ class ContinuousBatcher:
         rows: List = []             # (slot, chunk_len)
         used = 0
         for i in order:
-            req = self.slot_req[i]
-            c = min(len(req.prompt) - int(self.slot_prefilled[i]),
-                    self.prefill_chunk)
+            c = min(int(self.slot_goal[i]) - int(self.slot_prefilled[i]),
+                    self._prefill_pad)
             if rows and used + c > allowance:
                 break               # first chunk always makes progress
             rows.append((i, c))
@@ -1137,11 +1308,11 @@ class ContinuousBatcher:
         wave_reqs = [self.slot_req[i] for i in slots_arr]
         chunk_lens = np.array([c for _, c in rows], np.int32)
         pre_lens = self.slot_prefilled[slots_np]    # host counters
-        pad = self.prefill_chunk
+        pad = self._prefill_pad
         tokens = np.zeros((w, pad), np.int32)
         for j, (i, c) in enumerate(rows):
             p = int(self.slot_prefilled[i])
-            tokens[j, :c] = wave_reqs[j].prompt[p:p + c]
+            tokens[j, :c] = self._slot_seq(i)[p:p + c]
         if self.paged:
             bs = self.block_size
             # prefix tables: each slot's blocks so far, width bucketed
@@ -1190,7 +1361,7 @@ class ContinuousBatcher:
                 self.caches, pre, slots_np, pre_lens, chunk_lens)
         final_rows = [j for j, (i, c) in enumerate(rows)
                       if int(self.slot_prefilled[i]) + c
-                      >= len(wave_reqs[j].prompt)]
+                      >= int(self.slot_goal[i])]
         nxt = None
         host_rows = None
         if final_rows:
@@ -1203,8 +1374,18 @@ class ContinuousBatcher:
             p = int(self.slot_prefilled[i]) + c
             self.slot_prefilled[i] = p
             self.stats.prefill_tokens += c
-            if p < len(req.prompt):
+            if p < int(self.slot_goal[i]):
                 self.slot_pos[i] = p    # stay parked at the frontier
+                continue
+            if int(self.slot_restore_tok[i]) >= 0:
+                # drop-restore final chunk: every generated token was
+                # already emitted before preemption — re-install the
+                # decode frontier (next position + stored feed token)
+                # instead of sampling a new one
+                self.slot_pos[i] = int(self.slot_goal[i])
+                self.slot_tok[i] = int(self.slot_restore_tok[i])
+                self.slot_restore_tok[i] = -1
+                self.slot_seq[i] = None
                 continue
             # final chunk: the wave's logits row IS the full prompt's
             # last-token logits (bit-identical to monolithic prefill)
@@ -1237,7 +1418,317 @@ class ContinuousBatcher:
         dt = time.perf_counter() - t0
         if self.budget is not None:
             self.budget.observe_prefill(used, dt)
+        if self.swap_cost is not None:
+            self.swap_cost.observe_prefill(used, dt)
         return done, dt
+
+    # ---------------------------------------------- preemption / swap -
+    def _block_bytes(self) -> int:
+        """Host bytes one pool block occupies across every cache leaf
+        (the swap cost model's unit)."""
+        return sum(leaf.size * leaf.dtype.itemsize
+                   for leaf in jax.tree.leaves(self.caches)) \
+            // self.n_blocks
+
+    def _pick_victim(self, protect: int, now: float) -> Optional[int]:
+        """Victim slot for one preemption: among active slots that
+        would actually return pool capacity (a sole-referenced block to
+        free, or an unused reservation), the one with the MOST deadline
+        slack — cost-to-restore (fewest live rows) breaks ties.
+        ``slack_order`` puts the most urgent first, so the victim is
+        the tail of the order."""
+        cands = []
+        for j in self.active_slots():
+            if j == protect or self.slot_req[j] is None:
+                continue
+            gain = int(self.slot_reserved[j]) + sum(
+                1 for b in self.slot_blocks[j]
+                if self.allocator.ref(b) == 1)
+            if gain > 0:
+                cands.append(j)
+        if not cands:
+            return None
+        # stable pre-sort by restore cost so slack ties resolve to the
+        # cheapest victim once the most-slack tail is taken
+        cands.sort(key=lambda j: -int(self.slot_pos[j]))
+        order = slack_order(cands, now,
+                            key=lambda j: self.slot_req[j].deadline)
+        return order[-1]
+
+    def _preempt(self, i: int, now: float) -> None:
+        """Preempt slot ``i``: park its request off the device and
+        return its private pool capacity.  The COW-shared /
+        prefix-registered chain prefix stays pool-resident with our
+        references held; the private tail either swaps to host (ONE
+        batched device->host gather) or is dropped for re-prefill from
+        the request's host-kept token ids, whichever the EMA cost model
+        prices cheaper.  The pinned adapter reference is kept across
+        the preemption so restore can never fail on adapter
+        residency."""
+        req = self.slot_req[i]
+        chain = self.slot_blocks[i]
+        bs = self.block_size
+
+        def resident(b: int) -> bool:
+            return self.allocator.ref(b) > 1 \
+                or (self.prefix_cache is not None
+                    and self.prefix_cache.is_registered(b))
+
+        kept = 0
+        while kept < len(chain) and resident(chain[kept]):
+            kept += 1
+        tail = chain[kept:]
+        # under full attention resident blocks always form a chain
+        # PREFIX (decode never writes shared/registered blocks and
+        # registration covers full prompt blocks only) — but verify:
+        # an interior resident block forces the drop path, whose
+        # ``free`` handles shared and registered blocks correctly
+        mode = "swap"
+        if self._is_prefilling(i) or not tail \
+                or any(resident(b) for b in tail) or not self.swap:
+            mode = "reprefill"
+        elif self.swap_cost is not None and not self.swap_cost.prefer_swap(
+                len(tail) * self._block_bytes(),
+                int(self.slot_pos[i]) - kept * bs):
+            mode = "reprefill"
+        if mode == "swap":
+            t0 = time.perf_counter()
+            width = 1 << max(len(tail) - 1, 0).bit_length()
+            ids = np.zeros(width, np.int32)  # pads gather scratch rows
+            ids[:len(tail)] = tail
+            host = jax.device_get(  # lint: host-sync-ok one batched device->host block copy per swap-out
+                self._jit_gather_blocks(self.caches, ids))
+            hk, hv = host["kv"]
+            host_kv = (hk[:, :len(tail)], hv[:, :len(tail)])
+            self.allocator.swap_out(tail)
+            if self.swap_cost is not None:
+                self.swap_cost.observe_swap(
+                    len(tail) * self._block_bytes(),
+                    time.perf_counter() - t0)
+            entry = _Swapped(
+                req=req, adapter_id=self.slot_aid[i], mode="swap",
+                kept=chain[:kept], host_kv=host_kv, n_tail=len(tail),
+                pos=int(self.slot_pos[i]), tok=int(self.slot_tok[i]),
+                cached=int(self.slot_cached[i]))
+            self.stats.swap_out_blocks += len(tail)
+        else:
+            # drop the whole chain: shared blocks lose our alias,
+            # registered sole-ref blocks park in the retained pool and
+            # revive through the PrefixCache at restore
+            if chain:
+                self.allocator.free(chain)
+            entry = _Swapped(
+                req=req, adapter_id=self.slot_aid[i], mode="reprefill",
+                kept=[], host_kv=None, n_tail=0,
+                pos=int(self.slot_pos[i]), tok=int(self.slot_tok[i]),
+                cached=0)
+        self._swapped.append(entry)
+        self.stats.preemptions += 1
+        # clear the slot WITHOUT finishing the request (it stays ACTIVE
+        # in the lifecycle FSM — restore is not a re-admission) and
+        # WITHOUT releasing its adapter pin
+        self.allocator.release(int(self.slot_reserved[i]))
+        self.slot_reserved[i] = 0
+        self.slot_req[i] = None
+        self.slot_aid[i] = None
+        self.slot_blocks[i] = []
+        self.slot_pos[i] = 0
+        self.slot_tok[i] = 0
+        self.slot_prefilled[i] = 0
+        self.slot_cached[i] = 0
+        self.slot_goal[i] = 0
+        self.slot_seq[i] = None
+        self.slot_restore_tok[i] = -1
+        self.block_tables[i, :] = 0
+        self._dev_tables = None
+
+    def _ensure_headroom(self, active: List[int],
+                         now: float) -> List[int]:
+        """Oversubscribed decode: every slot crossing a block boundary
+        this tick must hold a reservation for the fresh block BEFORE
+        ``_grow_tables`` takes it.  On pool exhaustion, preempt victims
+        (most deadline slack first) until the reservation fits; as a
+        last resort the needy slot preempts itself.  Returns the active
+        set minus any preempted slots."""
+        active = list(active)
+        for i in list(active):
+            if self.slot_req[i] is None or i not in active:
+                continue
+            wr = int(self.slot_pos[i]) % self.ring_len
+            if wr // self.block_size < len(self.slot_blocks[i]) \
+                    or int(self.slot_reserved[i]) > 0:
+                continue
+            while not self.allocator.can_reserve(1):
+                victim = self._pick_victim(protect=i, now=now)
+                if victim is None:
+                    victim = i   # last resort: the needy slot itself
+                self._preempt(victim, now)
+                if victim in active:
+                    active.remove(victim)
+                if victim == i:
+                    break
+            if self.slot_req[i] is not None:
+                self.allocator.reserve(1)
+                self.slot_reserved[i] += 1
+        return active
+
+    def _demote(self, e: _Swapped) -> None:
+        """Give up a parked entry's remaining pool footprint: drop the
+        kept-chain references (registered blocks park retained, shared
+        ones lose our alias) and discard any host KV — the entry will
+        restore through the reprefill path instead."""
+        if e.kept:
+            self.allocator.free(e.kept)
+            e.kept = []
+        e.host_kv = None
+        e.n_tail = 0
+        e.mode = "reprefill"
+        e.cached = 0
+
+    def _demote_one(self, prefer_not: int) -> bool:
+        """Demote one demotable parked entry (preferring any entry but
+        ``prefer_not``, which is the one being forced in).  False when
+        nothing is left to demote."""
+        cand = None
+        for k, e in enumerate(self._swapped):
+            if e.mode == "swap" or e.kept:
+                if k != prefer_not:
+                    cand = k
+                elif cand is None:
+                    cand = k
+        if cand is None:
+            return False
+        self._demote(self._swapped[cand])
+        return True
+
+    def _try_restore(self, e: _Swapped, slot: int, now: float) -> bool:
+        """Re-enter one parked request into free slot ``slot``.  Swap
+        mode: fresh blocks + ONE batched host->device scatter; decode
+        resumes exactly where it stopped.  Reprefill mode: back into
+        PREFILLING state over prompt + generated tokens (the suffix
+        programs recompute the dropped KV bit-identically; the final
+        chunk re-installs the stored frontier token).  Returns False —
+        with no side effects — when the pool cannot cover it yet."""
+        req = e.req
+        if e.mode == "swap":
+            if not self.allocator.can_reserve(e.n_tail):
+                return False
+            ids = self.allocator.swap_in(e.n_tail)
+            width = 1 << max(e.n_tail - 1, 0).bit_length()
+            pad_ids = np.full(width, self.n_blocks, np.int32)
+            pad_ids[:e.n_tail] = ids     # pads are dropped (mode=drop)
+            hk, hv = e.host_kv
+            if width != e.n_tail:
+                zk = np.zeros(hk.shape[:1] + (width,) + hk.shape[2:],
+                              hk.dtype)
+                zv = np.zeros(hv.shape[:1] + (width,) + hv.shape[2:],
+                              hv.dtype)
+                zk[:, :e.n_tail] = hk
+                zv[:, :e.n_tail] = hv
+                hk, hv = zk, zv
+            self.caches = self._jit_scatter_blocks(
+                self.caches, pad_ids, (hk, hv))
+            self.slot_blocks[slot] = list(e.kept) + ids
+            self.slot_reserved[slot] = 0
+            self.slot_prefilled[slot] = len(req.prompt)
+            self.slot_goal[slot] = len(req.prompt)
+            self.slot_cached[slot] = e.cached
+            self.slot_pos[slot] = e.pos
+            self.slot_tok[slot] = e.tok
+            self.slot_seq[slot] = None
+            self.slot_restore_tok[slot] = -1
+            self.stats.swap_in_blocks += e.n_tail
+        else:
+            # drop-restore: re-prefill prompt + all generated tokens
+            # but the last, whose KV is never needed (it is the next
+            # token to FEED) — slot_restore_tok re-installs it
+            seq = req.prompt if not req.tokens else np.concatenate(
+                [req.prompt, np.asarray(req.tokens[:-1], np.int32)])
+            matched = self.prefix_cache.match(
+                req.prompt, namespace=e.adapter_id) \
+                if self.prefix_cache is not None else []
+            bs = self.block_size
+            worst = self._worst_blocks(req)
+
+            def need_for(m):
+                return min(worst - len(m),
+                           blocks_for(len(seq) - len(m) * bs, bs) + 1)
+
+            while matched and self.allocator.available() \
+                    < need_for(matched) \
+                    + self.allocator.n_would_revive(matched):
+                matched.pop()
+            need = need_for(matched)
+            if self.allocator.available() \
+                    < need + self.allocator.n_would_revive(matched):
+                return False
+            self.allocator.acquire(matched)
+            self.allocator.reserve(need)
+            n_cached = len(matched) * bs
+            self.slot_blocks[slot] = list(matched)
+            self.slot_reserved[slot] = need
+            self.slot_prefilled[slot] = n_cached
+            self.slot_goal[slot] = len(seq)
+            self.slot_cached[slot] = n_cached
+            self.slot_pos[slot] = n_cached
+            self.slot_tok[slot] = 0
+            self.slot_seq[slot] = seq if req.tokens else None
+            self.slot_restore_tok[slot] = req.tokens[-1] \
+                if req.tokens else -1
+            self.stats.reprefill_tokens += len(seq) - n_cached
+        self.slot_req[slot] = req
+        self.slot_aid[slot] = e.adapter_id
+        self.block_tables[slot, :] = 0
+        blks = self.slot_blocks[slot]
+        self.block_tables[slot, :len(blks)] = blks
+        self._dev_tables = None
+        return True
+
+    def _restore(self, now: float) -> None:
+        """Bring preempted requests back into free slots ahead of
+        admission, most urgent (smallest deadline slack) first; entries
+        the pool cannot cover yet stay parked.  If NOTHING else can run
+        — no active slot, and the queue is empty or its head cannot be
+        admitted either — capacity is forcibly reclaimed from the other
+        parked entries' kept chains (demotion to reprefill) so the most
+        urgent restore always goes through: the batcher can never
+        livelock on its own parked work."""
+        free = [i for i in range(self.n_slots)
+                if self.slot_req[i] is None]
+        if not free:
+            return
+        order = slack_order(
+            list(range(len(self._swapped))), now,
+            key=lambda k: self._swapped[k].req.deadline)
+        restored: set = set()
+        for k in order:
+            if not free:
+                break
+            if self._try_restore(self._swapped[k], free[0], now):
+                free.pop(0)
+                restored.add(k)
+        if not restored and free and not self.active_slots():
+            blocked_queue = False
+            if self.queue:
+                # conservative cold-admission check (a prefix match
+                # only shrinks the head's need, so "fits" is exact)
+                head = self.queue[0]
+                need = min(self._worst_blocks(head),
+                           blocks_for(len(head.prompt),
+                                      self.block_size) + 1)
+                blocked_queue = self.allocator.available() \
+                    < need + self._headroom_blocks
+            if not self.queue or blocked_queue:
+                k = order[0]
+                while not self._try_restore(self._swapped[k], free[0],
+                                            now):
+                    if not self._demote_one(k):
+                        break
+                if self.slot_req[free[0]] is not None:
+                    restored.add(k)
+        if restored:
+            self._swapped = [e for k, e in enumerate(self._swapped)
+                             if k not in restored]
 
     # --------------------------------------------------------------- decode -
     def _grow_tables(self, active: List[int]) -> None:
@@ -1312,15 +1803,21 @@ class ContinuousBatcher:
         budget = self.budget
         self.last_tick_trained = False
         self.last_tick_train_rows = 0
+        if self._swapped:
+            self._restore(now)
         finished = self.admit(now)
         prefill_spent = 0.0
-        if self.prefill_chunk > 0 and self.prefilling_slots():
+        chunked = self.prefill_chunk > 0 or self.oversubscribe > 0
+        if chunked and self.prefilling_slots():
             allowance = float("inf") if budget is None else \
                 budget.prefill_allowance(len(self.decoding_slots()))
             done, prefill_spent = self._advance_prefill(now, allowance)
             finished.extend(done)
-        active = self.decoding_slots() if self.prefill_chunk > 0 \
+        active = self.decoding_slots() if chunked \
             else self.active_slots()
+        if self.oversubscribe > 0 and active:
+            # preempt-or-reserve BEFORE _grow_tables takes fresh blocks
+            active = self._ensure_headroom(active, now)
         if not active:
             if train_batch is not None:
                 ref = train_batch.get("tokens",
@@ -1491,6 +1988,9 @@ class ContinuousBatcher:
         self.slot_tok[i] = 0
         self.slot_prefilled[i] = 0
         self.slot_cached[i] = 0
+        self.slot_goal[i] = 0
+        self.slot_seq[i] = None
+        self.slot_restore_tok[i] = -1
         if self.slot_aid[i] is not None:
             # unpin the request's adapter — without this the registry
             # leaks a ref per request and eventually deadlocks admission
@@ -1518,6 +2018,15 @@ class ContinuousBatcher:
             req = self.slot_req[i]
             self._evict(i)
             out.append(req)
+        for e in self._swapped:
+            # parked requests still hold their kept-chain block refs
+            # and their adapter pin — return both before draining
+            if e.kept:
+                self.allocator.free(e.kept)
+            if e.adapter_id is not None and self.adapters is not None:
+                self.adapters.release(e.adapter_id)
+            out.append(e.req)
+        self._swapped.clear()
         for r in out:
             r.tokens.clear()
             r.prefill_at = None

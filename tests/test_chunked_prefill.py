@@ -126,6 +126,47 @@ def test_mid_chunk_eviction_frees_everything(setup, monkeypatch):
     assert not b.prefilling_slots()
 
 
+def test_preempt_during_chunked_prefill_frees_everything(setup,
+                                                         monkeypatch):
+    """Oversubscribed pool: an urgent decoder crosses a block boundary
+    while a slack late arrival is still mid-chunked-prefill — the
+    prefilling victim MUST take the drop+re-prefill path (its partial
+    KV is never swapped), every block and reservation it held returns
+    to the pool, and both requests still finish bit-identically to the
+    unconstrained run — all under armed sanitizers."""
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    cfg, engine, model, params, lora = setup
+    prompts = _prompts(cfg, 2, [6, 28])
+
+    def serve(nb, **kw):
+        r0 = GenRequest(request_id=0, prompt=prompts[0].copy(),
+                        max_new_tokens=24, deadline=1.0)
+        r1 = GenRequest(request_id=1, prompt=prompts[1].copy(),
+                        max_new_tokens=8)   # inf deadline = most slack
+        b = ContinuousBatcher(engine, params, lora, n_slots=2,
+                              max_seq=32, prompt_pad=28, paged=True,
+                              block_size=4, prefill_chunk=4,
+                              n_blocks=nb, **kw)
+        b.submit(r0)
+        b.step(); b.step()      # r0 decoding before r1 even arrives
+        b.submit(r1)
+        for _ in range(300):
+            if b.idle():
+                break
+            b.step()
+        return [list(r0.tokens), list(r1.tokens)], b
+
+    ref, _ = serve(64)
+    toks, b = serve(12, oversubscribe=1.0)
+    assert toks == ref
+    assert b.stats.preemptions > 0
+    assert b.stats.reprefill_tokens > 0     # drop path, not swap:
+    assert b.stats.swap_out_blocks == 0     # partial prefill KV is
+    assert b.allocator.n_used == 0          # recomputed, never copied
+    assert b.allocator.reserved == 0
+    assert b.idle()
+
+
 def test_ssm_arch_rejects_chunked_prefill():
     cfg = get_config("mamba2-780m").scaled()
     engine = make_engine(cfg, lr=3e-3)

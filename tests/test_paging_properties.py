@@ -1,0 +1,144 @@
+"""Property test: ``BlockAllocator`` refcount/reservation invariants
+under interleaved reserve / take / share / free / pin / unpin /
+swap_out / swap_in / retain-reclaim sequences, checked against an
+independent shadow model after every operation.  The preemption paths
+(PR 10) lean hard on the refcount edge cases — sole-reference
+swap-out, reservation-backed swap-in, retained-LRU reclaim racing a
+take — so the state space is fuzzed rather than enumerated.
+
+Runs under real hypothesis when installed, else the ``_hyp`` fallback
+sampler; both are deterministic per seed.  Also passes with
+``REPRO_SANITIZE=1`` (the allocator's own shadow mirror then
+cross-checks every hook as a third accountant).
+"""
+import pytest
+
+from _hyp import given, settings, st
+from repro.runtime.paging import BlockAllocator, BlockError, OutOfBlocks
+
+N_BLOCKS = 12           # capacity 11 after scratch block 0
+BLOCK_SIZE = 4
+
+OPS = st.lists(
+    st.tuples(
+        st.sampled_from(["reserve", "release", "take", "share", "free",
+                         "pin", "unpin", "swap_out", "swap_in"]),
+        st.integers(min_value=0, max_value=4),    # count
+        st.integers(min_value=0, max_value=96),   # candidate selector
+    ),
+    min_size=1, max_size=64)
+
+
+def _pick(cands, sel, n):
+    """Deterministic sample of ``n`` candidates starting at ``sel``."""
+    cands = sorted(cands)
+    if not cands or n <= 0:
+        return []
+    start = sel % len(cands)
+    return [cands[(start + j) % len(cands)]
+            for j in range(min(n, len(cands)))]
+
+
+@settings(max_examples=60, deadline=None)
+@given(OPS)
+def test_allocator_invariants(ops):
+    a = BlockAllocator(N_BLOCKS, BLOCK_SIZE)
+    ref = {}            # shadow refcounts of ever-taken blocks
+    retained = set()    # shadow of the retained LRU membership
+    pinned = set()
+    reserved = 0
+
+    def live():
+        return {b for b, r in ref.items() if r > 0}
+
+    for kind, n, sel in ops:
+        if kind == "reserve":
+            if a.can_reserve(n):
+                a.reserve(n)
+                reserved += n
+            else:
+                with pytest.raises(OutOfBlocks):
+                    a.reserve(n)
+        elif kind == "release":
+            k = min(n, reserved)
+            a.release(k)
+            reserved -= k
+        elif kind == "take":
+            k = min(n, reserved, a.n_free + a.n_retained)
+            ids = a.take(k)
+            reserved -= k
+            assert len(ids) == len(set(ids)) == k
+            for b in ids:
+                # a handed-out block must not alias anything live, and
+                # a reclaimed retained block loses its pin
+                assert ref.get(b, 0) == 0
+                ref[b] = 1
+                retained.discard(b)
+                pinned.discard(b)
+        elif kind == "share":
+            for b in _pick(live(), sel, n):
+                a.share([b])
+                ref[b] += 1
+        elif kind == "free":
+            for b in _pick(live(), sel, n):
+                a.free([b])
+                ref[b] -= 1
+                if ref[b] == 0 and b in pinned:
+                    retained.add(b)
+        elif kind == "pin":
+            for b in _pick(live(), sel, n):
+                a.pin(b)
+                pinned.add(b)
+        elif kind == "unpin":
+            for b in _pick(pinned, sel, n):
+                a.unpin(b)
+                pinned.discard(b)
+                retained.discard(b)
+        elif kind == "swap_out":
+            sole = {b for b in live()
+                    if ref[b] == 1 and b not in pinned}
+            for b in _pick(sole, sel, n):
+                a.swap_out([b])
+                ref[b] = 0
+        elif kind == "swap_in":
+            if a.can_reserve(n):
+                ids = a.swap_in(n)
+                assert len(ids) == len(set(ids)) == n
+                for b in ids:
+                    assert ref.get(b, 0) == 0
+                    ref[b] = 1
+                    retained.discard(b)
+                    pinned.discard(b)
+            else:
+                with pytest.raises(OutOfBlocks):
+                    a.swap_in(n)
+
+        # ---- global invariants after EVERY operation -----------------
+        n_live = len(live())
+        assert a.n_used == n_live
+        assert a.n_retained == len(retained)
+        assert a.n_free == a.capacity - n_live - len(retained)
+        assert a.reserved == reserved
+        # every reservation is backed by a free or reclaimable block
+        assert a.reserved <= a.n_free + a.n_retained
+        assert a.available() == a.n_free + a.n_retained - a.reserved
+        for b, r in ref.items():
+            assert a.ref(b) == r
+        assert a.peak_used >= a.n_used
+        # scratch block 0 is never handed out
+        assert 0 not in ref
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=1, max_value=4))
+def test_swap_out_rejects_shared_and_pinned(extra_refs):
+    a = BlockAllocator(N_BLOCKS, BLOCK_SIZE)
+    a.reserve(2)
+    shared, pinned_b = a.take(2)
+    for _ in range(extra_refs):
+        a.share([shared])
+    with pytest.raises(BlockError, match="refcount"):
+        a.swap_out([shared])
+    a.pin(pinned_b)
+    with pytest.raises(BlockError, match="pinned"):
+        a.swap_out([pinned_b])

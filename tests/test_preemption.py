@@ -1,0 +1,207 @@
+"""Oversubscribed KV pool (PR 10): preemption + host swap + restore
+must be INVISIBLE in the output — greedy tokens bit-identical to a
+never-preempted run — across the swap path (batched device->host
+gather, fresh blocks + scatter on restore), the drop+re-prefill path
+(suffix programs recompute the dropped KV), and COW prefix sharing
+(kept chains stay pool-resident).  Plus the lifecycle edges: draining
+a batcher with requests parked off-device returns every block and
+reservation, the ctor gates (paged-only, watermark range, full
+attention), cluster plumbing (pressure/routing/stat folding), and the
+seeded use-after-swap mutation reprosan must catch.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import sample_prompts as _prompts
+from repro.configs.registry import get_config
+from repro.core.engine import make_engine
+from repro.core.interfaces import ReplicaPressure
+from repro.runtime.metrics import aggregate_serve_stats
+from repro.runtime.sanitize import SanitizeError
+from repro.runtime.serving_loop import ContinuousBatcher, GenRequest
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("qwen1.5-0.5b").scaled()
+    engine = make_engine(cfg, lr=3e-3)
+    model = engine.model
+    params = model.init(jax.random.key(0))
+    lora = jax.tree.map(lambda x: x + 0.01,
+                        model.init_lora(jax.random.key(1)))
+    return cfg, engine, model, params, lora
+
+
+GENS = [24, 4, 20, 4, 6, 18]      # heavy-tail decode lengths
+
+
+def _serve(engine, params, lora, prompts, gens=GENS, **kw):
+    reqs = [GenRequest(request_id=i, prompt=p.copy(), max_new_tokens=g)
+            for i, (p, g) in enumerate(zip(prompts, gens))]
+    kw.setdefault("n_slots", 3)
+    kw.setdefault("max_seq", 48)
+    kw.setdefault("prompt_pad", 16)
+    b = ContinuousBatcher(engine, params, lora, paged=True,
+                          block_size=8, **kw)
+    b.run(reqs)
+    return [list(r.tokens) for r in reqs], b
+
+
+# ------------------------------------------------ greedy bit-identity -----
+def test_swap_preemption_bit_identical(setup):
+    """Pool far below worst-case demand: victims swap their private
+    chains to host and restore by scatter — same greedy tokens as the
+    unconstrained run, and the pool drains clean."""
+    cfg, engine, model, params, lora = setup
+    prompts = _prompts(cfg, 6, [7, 16, 13, 10, 6, 15])
+    ref, _ = _serve(engine, params, lora, prompts, n_blocks=64)
+    toks, b = _serve(engine, params, lora, prompts, n_blocks=10,
+                     oversubscribe=1.0)
+    assert toks == ref
+    assert b.stats.preemptions > 0 and b.stats.swap_out_blocks > 0
+    assert b.stats.swap_in_blocks == b.stats.swap_out_blocks
+    assert b.allocator.n_used == 0 and b.allocator.reserved == 0
+
+
+def test_reprefill_preemption_bit_identical(setup):
+    """``swap=False`` forces every victim down the drop+re-prefill
+    path: the suffix programs recompute the dropped KV and the stored
+    frontier token re-enters decode — still bit-identical."""
+    cfg, engine, model, params, lora = setup
+    prompts = _prompts(cfg, 6, [7, 16, 13, 10, 6, 15])
+    ref, _ = _serve(engine, params, lora, prompts, n_blocks=64)
+    toks, b = _serve(engine, params, lora, prompts, n_blocks=10,
+                     oversubscribe=1.0, swap=False)
+    assert toks == ref
+    assert b.stats.preemptions > 0 and b.stats.reprefill_tokens > 0
+    assert b.stats.swap_out_blocks == 0
+    assert b.allocator.n_used == 0 and b.allocator.reserved == 0
+
+
+def test_preemption_with_shared_prefixes_bit_identical(setup):
+    """COW prefix sharing under preemption: the registered/shared kept
+    chain stays pool-resident (never copied to host), only the private
+    tail moves — sharers and victims all decode identically."""
+    cfg, engine, model, params, lora = setup
+    base = _prompts(cfg, 2, [16, 16])
+    prompts = [base[0], np.concatenate([base[0][:16], base[1][:4]]),
+               base[0].copy(), base[1], base[0][:10],
+               np.concatenate([base[0][:16], base[1][4:9]])]
+    gens = [24, 6, 18, 20, 4, 4]
+    kw = dict(prompt_pad=24, prefix_cache=True)
+    ref, _ = _serve(engine, params, lora, prompts, gens,
+                    n_blocks=64, **kw)
+    toks, b = _serve(engine, params, lora, prompts, gens,
+                     n_blocks=12, oversubscribe=1.0, **kw)
+    assert toks == ref
+    assert b.stats.preemptions > 0
+    assert b.allocator.n_used == 0 and b.allocator.reserved == 0
+
+
+def test_oversubscribed_chunked_prefill_bit_identical(setup):
+    """Preemption composes with token-level co-scheduling: chunked
+    prefill, restores and decode share the same ticks."""
+    cfg, engine, model, params, lora = setup
+    prompts = _prompts(cfg, 6, [7, 16, 13, 10, 6, 15])
+    ref, _ = _serve(engine, params, lora, prompts, n_blocks=64)
+    toks, b = _serve(engine, params, lora, prompts, n_blocks=9,
+                     oversubscribe=1.0, prefill_chunk=8)
+    assert toks == ref
+    assert b.stats.preemptions > 0
+
+
+# ------------------------------------------------------- ctor gating -----
+def test_oversubscribe_requires_paged(setup):
+    cfg, engine, model, params, lora = setup
+    with pytest.raises(ValueError, match="paged"):
+        ContinuousBatcher(engine, params, lora, oversubscribe=0.9)
+    with pytest.raises(ValueError, match=r"in \(0, 1\]"):
+        ContinuousBatcher(engine, params, lora, paged=True,
+                          block_size=8, oversubscribe=1.5)
+
+
+def test_oversubscribe_rejects_sliding_window(setup):
+    """A ring wrap overwrites cache rows in place, so a dropped request
+    could not re-prefill into an equivalent state — refuse upfront."""
+    cfg, engine, model, params, lora = setup
+    wcfg = dataclasses.replace(cfg, sliding_window=16)
+    wengine = make_engine(wcfg, lr=3e-3)
+    wparams = wengine.model.init(jax.random.key(0))
+    wlora = wengine.model.init_lora(jax.random.key(1))
+    with pytest.raises(NotImplementedError, match="window"):
+        ContinuousBatcher(wengine, wparams, wlora, paged=True,
+                          block_size=8, prompt_pad=16, max_seq=32,
+                          oversubscribe=0.9)
+
+
+# ---------------------------------------------- lifecycle under drain -----
+def _step_until_parked(b, reqs, max_steps=200):
+    for r in reqs:
+        b.submit(r)
+    for _ in range(max_steps):
+        b.step()
+        if b.n_preempted > 0:
+            return
+    pytest.fail("no preemption occurred")
+
+
+def test_drain_with_parked_requests_frees_everything(setup, monkeypatch):
+    """Mid-swap eviction: drain_all while requests sit parked
+    off-device must return their kept blocks, reservations and adapter
+    refs — the armed sanitizers verify the pool is quiescent."""
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    cfg, engine, model, params, lora = setup
+    prompts = _prompts(cfg, 3, [8, 8, 8])
+    reqs = [GenRequest(request_id=i, prompt=p.copy(), max_new_tokens=24)
+            for i, p in enumerate(prompts)]
+    b = ContinuousBatcher(engine, params, lora, n_slots=2, max_seq=32,
+                          prompt_pad=8, paged=True, block_size=4,
+                          n_blocks=9, oversubscribe=1.0)
+    _step_until_parked(b, reqs)
+    out = b.drain_all()      # check_quiescent runs inside when armed
+    assert len(out) == sum(1 for r in reqs if r.finished_at is None)
+    assert b.allocator.n_used == 0 and b.allocator.reserved == 0
+    assert b.n_preempted == 0 and b.idle()
+
+
+def test_use_after_swap_detected(setup, monkeypatch):
+    """Seeded mutation: swap a live slot's block out behind the
+    batcher's back — the next decode wave must die with the precise
+    use-after-swap diagnostic, not gather stale pool bytes."""
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    cfg, engine, model, params, lora = setup
+    b = ContinuousBatcher(engine, params, lora, n_slots=2, max_seq=24,
+                          prompt_pad=8, paged=True, block_size=4)
+    b.submit(GenRequest(request_id=0, prompt=_prompts(cfg, 1, [6])[0],
+                        max_new_tokens=8))
+    b.step()                                 # admit + first decode tick
+    victim = b.active_slots()[0]
+    b.allocator.swap_out([b.slot_blocks[victim][-1]])   # the mutation
+    with pytest.raises(SanitizeError,
+                       match=r"\[reprosan:use-after-swap\]"):
+        b.step()
+
+
+# ------------------------------------------------- cluster plumbing -----
+def test_pressure_discounts_preempted_replicas():
+    calm = ReplicaPressure(queue_len=0, active_slots=2, total_slots=4,
+                           free_blocks=8, pool_blocks=16,
+                           oversubscribe=0.9)
+    thrash = dataclasses.replace(calm, preempted=2)
+    assert thrash.headroom() < calm.headroom()
+    assert thrash.headroom() == pytest.approx(calm.headroom() / 3)
+
+
+def test_aggregate_folds_preemption_counters(setup):
+    cfg, engine, model, params, lora = setup
+    prompts = _prompts(cfg, 6, [7, 16, 13, 10, 6, 15])
+    _, b = _serve(engine, params, lora, prompts, n_blocks=10,
+                  oversubscribe=1.0)
+    agg = aggregate_serve_stats({"r0": b.stats})
+    for f in ("preemptions", "swap_out_blocks", "swap_in_blocks",
+              "reprefill_tokens"):
+        assert agg["cluster"][f] == getattr(b.stats, f)
+    assert agg["cluster"]["preemptions"] > 0

@@ -260,6 +260,51 @@ def test_bench_registration_fires_then_clears(tmp_path):
     assert reprolint.lint_root(root, rules={"RL104"}) == []
 
 
+def test_sanitizer_hooks_fires_on_unhooked_mutator(tmp_path):
+    """RL105: every public ``BlockAllocator`` entry point that mutates
+    allocator state must call its ``BlockSanitizer`` hook — a mutator
+    that skips ``self.san`` leaves the shadow mirror stale and the
+    use-after-free/use-after-swap checks blind."""
+    root = _tree(tmp_path, {"src/repro/runtime/paging.py": """\
+        class BlockAllocator:
+            def __init__(self, san):
+                self.san = san
+                self.refcount = {}
+                self.n_free = 0
+
+            def free(self, ids):
+                for b in ids:
+                    self.refcount[b] -= 1
+                self.san.on_free(ids)
+
+            def swap_out(self, ids):
+                for b in ids:
+                    self.refcount[b] = 0
+                    self.n_free += 1
+
+            def ref(self, b):
+                return self.refcount.get(b, 0)
+        """})
+    findings = reprolint.lint_root(root, rules={"RL105"})
+    # swap_out mutates without touching self.san; the hooked free and
+    # the read-only ref stay silent
+    assert len(findings) == 1 and findings[0].rule == "RL105"
+    assert "swap_out" in findings[0].msg and "san" in findings[0].msg
+
+    hooked = _tree(tmp_path / "hooked", {"src/repro/runtime/paging.py": """\
+        class BlockAllocator:
+            def __init__(self, san):
+                self.san = san
+                self.refcount = {}
+
+            def swap_out(self, ids):
+                for b in ids:
+                    self.refcount[b] = 0
+                self.san.on_swap_out(ids)
+        """})
+    assert reprolint.lint_root(hooked, rules={"RL105"}) == []
+
+
 # ------------------------------------------------------------- CLI ---------
 def test_main_exit_codes(tmp_path, capsys):
     dirty = _tree(tmp_path / "dirty", {

@@ -30,6 +30,12 @@ tools/analysis/README.md for the full catalogue and pragma format):
                                 (dead fields = dropped threading)
     RL104 bench-registration    every benchmark writing ``BENCH_*.json``
                                 registered in ``scripts/ci.sh``
+    RL105 sanitizer-hooks       every public ``BlockAllocator`` method
+                                that mutates allocator state calls its
+                                ``BlockSanitizer`` hook (``self.san``) —
+                                an unhooked mutator silently desyncs the
+                                shadow mirror (use-after-free /
+                                use-after-swap checks go blind)
 
 Per-line allowlisting: ``# lint: <alias>-ok <reason>`` on any line of
 the flagged statement suppresses that rule there; a pragma with no
@@ -60,6 +66,7 @@ ALIAS = {
     "RL102": "stats-coverage",
     "RL103": "request-threading",
     "RL104": "bench-registration",
+    "RL105": "sanitizer-hooks",
 }
 
 PRAGMA_RE = re.compile(r"#\s*lint:\s*([a-z][a-z0-9-]*)-ok(?:\s+(\S.*))?")
@@ -710,6 +717,52 @@ class Linter:
                            "trajectory but is not registered in "
                            "scripts/ci.sh")
 
+    # ========================================= RL105 sanitizer hooks --
+    _MUTATOR_CALLS = {"append", "appendleft", "add", "clear", "discard",
+                      "extend", "insert", "pop", "popleft", "remove",
+                      "setdefault", "update", "difference_update"}
+
+    @staticmethod
+    def _roots_at_self(node: ast.AST) -> bool:
+        """Does this attribute/subscript chain root at ``self``?"""
+        while isinstance(node, (ast.Attribute, ast.Subscript)):
+            node = node.value
+        return isinstance(node, ast.Name) and node.id == "self"
+
+    def check_sanitizer_hooks(self) -> None:
+        mod, cls = self._class_node("BlockAllocator")
+        if cls is None:
+            return
+        for fn in cls.body:
+            if not isinstance(fn, (ast.FunctionDef,
+                                   ast.AsyncFunctionDef)) \
+                    or fn.name.startswith("_"):
+                continue
+            mutates = False
+            hooked = False
+            for sub in ast.walk(fn):
+                if isinstance(sub, (ast.Assign, ast.AugAssign)):
+                    targets = sub.targets \
+                        if isinstance(sub, ast.Assign) else [sub.target]
+                    if any(self._roots_at_self(t) for t in targets):
+                        mutates = True
+                elif isinstance(sub, ast.Call) \
+                        and isinstance(sub.func, ast.Attribute) \
+                        and sub.func.attr in self._MUTATOR_CALLS \
+                        and self._roots_at_self(sub.func.value):
+                    mutates = True
+                if isinstance(sub, ast.Attribute) and sub.attr == "san" \
+                        and isinstance(sub.value, ast.Name) \
+                        and sub.value.id == "self":
+                    hooked = True
+            if mutates and not hooked:
+                self._flag(mod, fn, "RL105",
+                           f"BlockAllocator.{fn.name} mutates allocator "
+                           "state without calling its BlockSanitizer "
+                           "hook (self.san) — the shadow mirror desyncs "
+                           "and use-after-free/use-after-swap checks go "
+                           "blind")
+
     # -------------------------------------------------------------- run --
     def run(self, rules: Optional[Set[str]] = None) -> List[Finding]:
         checks = {
@@ -721,6 +774,7 @@ class Linter:
             "RL102": self.check_stats_coverage,
             "RL103": self.check_request_threading,
             "RL104": self.check_bench_registration,
+            "RL105": self.check_sanitizer_hooks,
         }
         for rule, check in checks.items():
             if rules is None or rule in rules:
